@@ -1,0 +1,49 @@
+"""Roofline report: reads the dry-run artifacts (experiments/dryrun) and
+emits the three roofline terms per (arch × shape) on the single-pod mesh.
+us_per_call = the dominant (bottleneck) term in µs for one step.
+Run `python -m repro.launch.dryrun --all --mesh both` first to (re)generate.
+"""
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun")
+
+
+def main():
+    lines = []
+    files = sorted(glob.glob(os.path.join(DRYRUN_DIR, "*_single.json")))
+    if not files:
+        lines.append(emit("roofline_missing", 0.0,
+                          f"no dry-run artifacts in {DRYRUN_DIR}"))
+        return lines
+    n_ok = n_skip = 0
+    for path in files:
+        with open(path) as f:
+            r = json.load(f)
+        name = f"roofline_{r['arch']}_{r['shape']}"
+        if r["status"] == "skip":
+            n_skip += 1
+            lines.append(emit(name, 0.0, "skip_sanctioned"))
+            continue
+        if r["status"] != "ok" or "roofline" not in r:
+            lines.append(emit(name, 0.0, f"status={r['status']}"))
+            continue
+        n_ok += 1
+        t = r["roofline"]
+        dom = max(t["compute_s"], t["memory_s"], t["collective_s"])
+        lines.append(emit(
+            name, dom * 1e6,
+            f"bottleneck={t['bottleneck']};comp_ms={t['compute_s']*1e3:.2f};"
+            f"mem_ms={t['memory_s']*1e3:.2f};"
+            f"coll_ms={t['collective_s']*1e3:.2f};"
+            f"useful={t['useful_flops_ratio']:.2f}"))
+    lines.append(emit("roofline_coverage", 0.0,
+                      f"ok={n_ok};skip={n_skip};total={len(files)}"))
+    return lines
+
+
+if __name__ == "__main__":
+    main()

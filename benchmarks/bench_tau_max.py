@@ -1,0 +1,43 @@
+"""Paper Fig. 4: impact of τ_max on convergence (non-iid vs iid).
+
+Claims: larger τ_max speeds early convergence under non-iid; under iid it
+stops helping (staleness only hurts).
+"""
+import dataclasses
+
+from benchmarks.common import BASE, emit, run
+
+
+from repro.configs.base import MobilityConfig
+
+# Sparse contacts so cached entries actually age (τ_max binds).
+SPARSE = MobilityConfig(grid_w=8, grid_h=16)
+
+
+def main():
+    lines = []
+    res = {}
+    for dist in ("noniid", "iid"):
+        for tau in (1, 10):
+            dfl = dataclasses.replace(BASE["dfl"], tau_max=tau,
+                                      num_agents=12, epoch_seconds=30.0)
+            hist = run(algorithm="cached", distribution=dist, seed=3,
+                       dfl=dfl, mobility=SPARSE,
+                       epochs=BASE["epochs"] + 6, max_partners=3)
+            res[(dist, tau)] = hist
+            us = hist["wall_s"] / max(len(hist["epoch"]), 1) * 1e6
+            mid = len(hist["acc"]) // 2
+            lines.append(emit(
+                f"fig4_{dist}_tau{tau}", us,
+                f"best_acc={hist['best_acc']:.4f};"
+                f"mid_acc={hist['acc'][mid]:.4f}"))
+    mid = len(res[("noniid", 10)]["acc"]) // 2
+    early_gain = (res[("noniid", 10)]["acc"][mid]
+                  >= res[("noniid", 1)]["acc"][mid] - 0.03)
+    lines.append(emit("fig4_claim_tau_helps_early_noniid", 0.0,
+                      f"holds={early_gain}"))
+    return lines
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Shared scaled-down fleet settings for the paper-figure benchmarks.
+
+The paper trains 100 vehicles for 1000 epochs on real MNIST; on this CPU
+container each benchmark uses a 10-vehicle fleet, 16×16 synthetic images
+and ~12 epochs — enough to reproduce the paper's *qualitative orderings*
+(EXPERIMENTS.md maps each benchmark to its paper figure/table).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+from repro.configs.base import DFLConfig, MobilityConfig
+from repro.fl.experiment import ExperimentConfig, run_experiment
+
+FAST = os.environ.get("REPRO_BENCH_FAST", "0") == "1"
+
+BASE = dict(
+    dfl=DFLConfig(num_agents=10, cache_size=5, tau_max=10, local_steps=5,
+                  lr=0.1, batch_size=32, epoch_seconds=60.0),
+    mobility=MobilityConfig(grid_w=4, grid_h=6),
+    epochs=6 if FAST else 14,
+    n_train=2000,
+    n_test=400,
+    image_hw=16,
+    lr_plateau=False,
+    early_stop_patience=100,
+)
+
+
+def run(algorithm="cached", distribution="noniid", seed=0, **overrides):
+    kw = {**BASE, **overrides}
+    cfg = ExperimentConfig(algorithm=algorithm, distribution=distribution,
+                           seed=seed, **kw)
+    return run_experiment(cfg, record_cache_stats=True)
+
+
+def emit(name: str, us_per_call: float, derived: str) -> str:
+    line = f"{name},{us_per_call:.1f},{derived}"
+    print(line)
+    return line

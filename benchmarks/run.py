@@ -1,0 +1,44 @@
+"""Benchmark harness — one module per paper table/figure plus the kernel
+micro-benches and the roofline report. Prints ``name,us_per_call,derived``
+CSV. Set REPRO_BENCH_FAST=1 for a quicker pass.
+"""
+import sys
+import time
+import traceback
+
+BENCHES = [
+    ("bench_caching", "paper Fig. 2 (caching vs no caching vs CFL)"),
+    ("bench_cache_size", "paper Fig. 3 (cache size sweep)"),
+    ("bench_staleness_stats", "paper Table 2 (τ_max vs #cached/age)"),
+    ("bench_tau_max", "paper Fig. 4 (τ_max vs convergence)"),
+    ("bench_mobility", "paper Fig. 5 (mobility speed)"),
+    ("bench_group_cache", "paper Fig. 6 (group-based caching)"),
+    ("bench_staleness_decay", "beyond-paper: staleness-decayed aggregation"),
+    ("bench_cache_policies", "paper contribution 3: LRU vs FIFO vs Random"),
+    ("bench_kernels", "Pallas kernel micro-benches"),
+    ("bench_roofline", "roofline terms from the dry-run artifacts"),
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = 0
+    t0 = time.time()
+    for mod_name, desc in BENCHES:
+        print(f"# {mod_name}: {desc}", file=sys.stderr)
+        try:
+            mod = __import__(f"benchmarks.{mod_name}",
+                             fromlist=["main"])
+            mod.main()
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{mod_name}_FAILED,0.0,{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+    print(f"# total wall: {time.time() - t0:.1f}s, failures: {failures}",
+          file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Pod-scale Cached-DFL on a language model: the production deployment
+pattern the multi-pod dry-run proves out, runnable on CPU with reduced
+configs — multiple pod-agents each fine-tune a transformer on their own
+token stream, exchange models DTN-style, and aggregate their caches.
+
+    PYTHONPATH=src python examples/pod_dfl_lm.py --arch qwen2-7b --rounds 8
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry as R
+from repro.data.synthetic import make_lm_dataset
+from repro.launch import steps as steps_lib
+from repro.models import registry as M
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-7b", choices=R.ARCH_IDS)
+    ap.add_argument("--agents", type=int, default=3)
+    ap.add_argument("--rounds", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=96)
+    ap.add_argument("--batch", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = R.get_smoke_config(args.arch)
+    key = jax.random.PRNGKey(0)
+    A = args.agents
+
+    # each agent has its own (non-iid) bigram universe
+    streams = [jnp.asarray(make_lm_dataset(seed, vocab=cfg.vocab,
+                                           seq_len=args.seq_len, n_seq=64))
+               for seed in range(A)]
+
+    params = jax.vmap(lambda k: M.init_params(cfg, k))(
+        jax.random.split(key, A))
+    cache = steps_lib.init_pod_cache(cfg, M.init_params(cfg, key), 2,
+                                     agents=A)
+    step = jax.jit(steps_lib.make_train_step(cfg, lr=0.1, multi_pod=True,
+                                             tau_max=6))
+
+    for t in range(args.rounds):
+        key, k = jax.random.split(key)
+        idx = jax.random.randint(k, (A, args.batch), 0, streams[0].shape[0])
+        toks = jnp.stack([s[i] for s, i in zip(streams, idx)])
+        batch = {"tokens": toks}
+        if cfg.family == "vlm":
+            batch["image_embeds"] = jnp.zeros(
+                (A, args.batch, cfg.image_tokens, cfg.d_model))
+        params, cache, loss = step(params, cache, batch,
+                                   jnp.asarray(t, jnp.int32))
+        ages = jnp.where(cache.valid, t - cache.ts, -1)
+        print(f"round {t:2d}  loss={float(loss):.4f}  "
+              f"cache_entries={int(jnp.sum(cache.valid))}  "
+              f"max_staleness={int(jnp.max(ages))}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Batched serving example: prefill + autoregressive decode on a reduced
+assigned architecture, through the same decode path the dry-run lowers for
+decode_32k/long_500k (incl. the Pallas decode-attention kernel).
+
+    PYTHONPATH=src python examples/serve_decode.py --arch mixtral-8x7b
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry as R
+from repro.models import registry as M
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral-8x7b",
+                    choices=R.ARCH_IDS)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--tokens", type=int, default=24)
+    ap.add_argument("--use-kernel", action="store_true")
+    args = ap.parse_args()
+
+    cfg = R.get_smoke_config(args.arch)
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(cfg, key)
+    B = args.batch
+    batch = {"tokens": jax.random.randint(key, (B, args.prompt_len), 0,
+                                          cfg.vocab)}
+    if cfg.family == "vlm":
+        batch["image_embeds"] = jax.random.normal(
+            key, (B, cfg.image_tokens, cfg.d_model))
+    if cfg.enc_dec:
+        batch = {"frames": jax.random.normal(
+            key, (B, cfg.enc_context, cfg.d_model))}
+
+    logits, state = (None, M.prefill(params, cfg, batch,
+                                     max_len=args.prompt_len + args.tokens)[1]) \
+        if cfg.enc_dec else M.prefill(params, cfg, batch,
+                                      max_len=args.prompt_len + args.tokens)
+    decode = jax.jit(lambda p, s, t: M.decode_step(
+        p, cfg, s, t, use_kernel=args.use_kernel))
+    tok = (jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+           if logits is not None else jnp.zeros((B, 1), jnp.int32))
+    out = [tok]
+    t0 = time.time()
+    for _ in range(args.tokens):
+        logits, state = decode(params, state, tok)
+        tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+        out.append(tok)
+    jax.block_until_ready(tok)
+    dt = time.time() - t0
+    print(f"{args.arch}: {B} seqs x {args.tokens} tokens in {dt:.2f}s "
+          f"({B * args.tokens / dt:.1f} tok/s, "
+          f"kernel={'pallas' if args.use_kernel else 'jnp'})")
+    print("generated:", np.asarray(jnp.concatenate(out, 1))[0][:12], "...")
+
+
+if __name__ == "__main__":
+    main()

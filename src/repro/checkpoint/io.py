@@ -1,0 +1,37 @@
+"""Pytree checkpointing: npz payload + json treedef manifest."""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+
+def save_pytree(path: str, tree) -> None:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+
+    def to_np(x):
+        arr = np.asarray(x)
+        if arr.dtype.isbuiltin != 1:  # extension dtypes (e.g. bfloat16)
+            arr = arr.astype(np.float32)
+        return arr
+
+    np.savez(path + ".npz", **{f"leaf_{i}": to_np(x)
+                               for i, x in enumerate(leaves)})
+    with open(path + ".tree.json", "w") as f:
+        json.dump({"treedef": str(treedef), "num_leaves": len(leaves)}, f)
+
+
+def load_pytree(path: str, tree_like):
+    """Load into the structure of `tree_like` (shape/dtype template)."""
+    data = np.load(path + ".npz")
+    leaves, treedef = jax.tree_util.tree_flatten(tree_like)
+    assert len(leaves) == len(data.files), (
+        f"checkpoint has {len(data.files)} leaves, template {len(leaves)}")
+    new = [data[f"leaf_{i}"].astype(leaves[i].dtype)
+           for i in range(len(leaves))]
+    for old, n in zip(leaves, new):
+        assert old.shape == n.shape, f"shape mismatch {old.shape} vs {n.shape}"
+    return jax.tree_util.tree_unflatten(treedef, new)

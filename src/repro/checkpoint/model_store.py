@@ -1,0 +1,70 @@
+"""Agent model store — the pod-scale cache backing.
+
+At fleet scale the cache is device-resident; at pod scale (huge models,
+agents time-multiplexed over the cluster) cached models of *other* agents
+live in a host/disk store keyed by (agent, epoch), and the device cache is
+streamed from it. This mirrors how a real deployment would checkpoint
+exchanged models between DFL rounds.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import List, Optional
+
+from repro.checkpoint.io import load_pytree, save_pytree
+
+
+@dataclasses.dataclass
+class StoreEntry:
+    agent: int
+    epoch: int
+    samples: float
+    group: int
+    path: str
+
+
+class ModelStore:
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+        self._index_path = os.path.join(root, "index.json")
+        self.entries: List[StoreEntry] = []
+        if os.path.exists(self._index_path):
+            with open(self._index_path) as f:
+                self.entries = [StoreEntry(**e) for e in json.load(f)]
+
+    def _save_index(self):
+        with open(self._index_path, "w") as f:
+            json.dump([dataclasses.asdict(e) for e in self.entries], f)
+
+    def put(self, params, *, agent: int, epoch: int, samples: float,
+            group: int = 0) -> StoreEntry:
+        path = os.path.join(self.root, f"agent{agent:04d}_ep{epoch:06d}")
+        save_pytree(path, params)
+        # one live model per agent: newest wins
+        self.entries = [e for e in self.entries if e.agent != agent
+                        or e.epoch > epoch]
+        entry = StoreEntry(agent, epoch, samples, group, path)
+        self.entries.append(entry)
+        self._save_index()
+        return entry
+
+    def evict_stale(self, now_epoch: int, tau_max: int):
+        dead = [e for e in self.entries if now_epoch - e.epoch >= tau_max]
+        self.entries = [e for e in self.entries
+                        if now_epoch - e.epoch < tau_max]
+        for e in dead:
+            for suffix in (".npz", ".tree.json"):
+                try:
+                    os.remove(e.path + suffix)
+                except FileNotFoundError:
+                    pass
+        self._save_index()
+
+    def freshest(self, limit: int) -> List[StoreEntry]:
+        return sorted(self.entries, key=lambda e: -e.epoch)[:limit]
+
+    def load(self, entry: StoreEntry, template):
+        return load_pytree(entry.path, template)

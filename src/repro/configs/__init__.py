@@ -1,0 +1,8 @@
+from repro.configs.base import (  # noqa: F401
+    DFLConfig,
+    INPUT_SHAPES,
+    InputShape,
+    MobilityConfig,
+    ModelConfig,
+    get_shape,
+)

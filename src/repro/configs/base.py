@@ -1,0 +1,159 @@
+"""Model / run configuration dataclasses.
+
+Every assigned architecture gets one file in this package exporting CONFIG
+(a ModelConfig with the exact published dimensions, source cited) plus a
+``smoke()`` reduced variant for CPU tests (≤2 layers, d_model ≤ 512,
+≤4 experts).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | vlm | audio | cnn
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+    # MoE
+    moe_experts: int = 0
+    moe_top_k: int = 0
+    moe_capacity_factor: float = 1.25
+    # SSM (Mamba2 / SSD)
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_chunk: int = 128
+    # attention details
+    sliding_window: int = 0  # 0 = full attention
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    # encoder-decoder (audio)
+    enc_layers: int = 0
+    enc_context: int = 1500  # fixed encoder frames for decode shapes
+    # multimodal stub frontend
+    image_tokens: int = 0  # VLM: # of patch-embedding positions per sample
+    # numerics
+    norm_eps: float = 1e-5
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    # perf knobs (hillclimbed in EXPERIMENTS.md §Perf)
+    remat_policy: str = "full"      # full | dots (save matmul outputs)
+    moe_token_shard: bool = False   # shard expert token buffers over "model"
+    moe_shard_map: bool = False     # shard_map-local MoE dispatch (§Perf):
+                                    # keeps sort/scatter per data shard so
+                                    # GSPMD never gathers the global batch
+    kv_quant: bool = False          # int8 KV cache for decode (§Perf):
+                                    # halves the memory-bound decode traffic
+    # citation for the exact dims
+    source: str = ""
+
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // self.n_heads if self.n_heads else 0
+
+    @property
+    def attn_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def enc_dec(self) -> bool:
+        return self.enc_layers > 0
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + blocks + head)."""
+        d, h = self.d_model, self.resolved_head_dim
+        emb = self.vocab * d
+        per_layer = 0
+        if not self.attn_free:
+            q = d * self.n_heads * h
+            kv = 2 * d * self.n_kv_heads * h
+            o = self.n_heads * h * d
+            per_layer += q + kv + o
+            if self.qkv_bias:
+                per_layer += (self.n_heads + 2 * self.n_kv_heads) * h
+        if self.family in ("ssm", "hybrid"):
+            d_in = self.ssm_expand * d if self.family == "ssm" else self.n_heads * h
+            n_h = max(1, d_in // self.ssm_head_dim)
+            # in_proj (x, z, B, C, dt) + out_proj + A/D/dt_bias
+            per_layer += d * (2 * d_in + 2 * self.ssm_state + n_h)
+            per_layer += d_in * d + 2 * n_h
+        if self.moe_experts:
+            per_layer += d * self.moe_experts  # router
+            per_layer += self.moe_experts * 3 * d * self.d_ff
+        elif self.d_ff:
+            per_layer += 3 * d * self.d_ff  # gated MLP
+        per_layer += 2 * d  # norms
+        n_blocks = self.n_layers + self.enc_layers
+        head = d * self.vocab
+        return emb + n_blocks * per_layer + head + d
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top-k experts only)."""
+        if not self.moe_experts:
+            return self.param_count()
+        d = self.d_model
+        inactive = (self.moe_experts - self.moe_top_k) * 3 * d * self.d_ff
+        return self.param_count() - self.n_layers * inactive
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+INPUT_SHAPES: Tuple[InputShape, ...] = (
+    InputShape("train_4k", 4_096, 256, "train"),
+    InputShape("prefill_32k", 32_768, 32, "prefill"),
+    InputShape("decode_32k", 32_768, 128, "decode"),
+    InputShape("long_500k", 524_288, 1, "decode"),
+)
+
+
+def get_shape(name: str) -> InputShape:
+    for s in INPUT_SHAPES:
+        if s.name == name:
+            return s
+    raise KeyError(f"unknown input shape {name!r}; have {[s.name for s in INPUT_SHAPES]}")
+
+
+@dataclasses.dataclass(frozen=True)
+class DFLConfig:
+    """Cached-DFL protocol hyperparameters (paper defaults, §B.4)."""
+    num_agents: int = 100
+    cache_size: int = 10
+    tau_max: int = 10
+    local_steps: int = 10           # K
+    rho: float = 0.0                # proximal coefficient (paper's ρ)
+    lr: float = 0.1
+    batch_size: int = 64
+    epoch_seconds: float = 120.0
+    policy: str = "lru"             # lru | group | fifo | random
+    num_groups: int = 0             # >0 enables group-based policy metadata
+    aggregate_self: bool = True     # own model always participates
+    staleness_decay: float = 1.0    # beyond-paper: α_j ∝ n_j·γ^age (γ=1 = paper)
+
+
+@dataclasses.dataclass(frozen=True)
+class MobilityConfig:
+    """Manhattan mobility model (paper §4.4)."""
+    speed: float = 13.89            # m/s
+    comm_range: float = 100.0       # meters
+    p_straight: float = 0.5
+    grid_w: int = 10                # intersections east-west
+    grid_h: int = 30                # intersections north-south
+    block_w: float = 274.0          # meters between avenues
+    block_h: float = 80.0           # meters between streets
+    step_seconds: float = 1.0       # sim integration step

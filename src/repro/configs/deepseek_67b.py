@@ -1,0 +1,22 @@
+"""deepseek-67b — dense llama-arch GQA kv=8. [arXiv:2401.02954]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-67b",
+    family="dense",
+    n_layers=95,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=22016,
+    vocab=102400,
+    source="arXiv:2401.02954",
+)
+
+
+def smoke() -> ModelConfig:
+    import dataclasses
+    return dataclasses.replace(
+        CONFIG, name="deepseek-smoke", n_layers=2, d_model=256, n_heads=4,
+        n_kv_heads=2, d_ff=512, vocab=512,
+    )

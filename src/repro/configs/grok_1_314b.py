@@ -1,0 +1,24 @@
+"""grok-1-314b — MoE, 8 experts top-2, GQA kv=8. [hf:xai-org/grok-1]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="grok-1-314b",
+    family="moe",
+    n_layers=64,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=32768,
+    vocab=131072,
+    moe_experts=8,
+    moe_top_k=2,
+    source="hf:xai-org/grok-1",
+)
+
+
+def smoke() -> ModelConfig:
+    import dataclasses
+    return dataclasses.replace(
+        CONFIG, name="grok-1-smoke", n_layers=2, d_model=256, n_heads=4,
+        n_kv_heads=2, d_ff=512, vocab=512, moe_experts=4, moe_top_k=2,
+    )

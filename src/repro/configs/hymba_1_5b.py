@@ -1,0 +1,31 @@
+"""hymba-1.5b — hybrid: parallel attention + mamba heads. [arXiv:2411.13676]
+
+Attention uses a sliding window (Hymba keeps most layers SWA), which also
+makes the long_500k decode shape tractable.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    n_layers=32,
+    d_model=1600,
+    n_heads=25,
+    n_kv_heads=5,
+    d_ff=5504,
+    vocab=32001,
+    head_dim=64,
+    ssm_state=16,
+    ssm_head_dim=64,
+    sliding_window=1024,
+    source="arXiv:2411.13676",
+)
+
+
+def smoke() -> ModelConfig:
+    import dataclasses
+    return dataclasses.replace(
+        CONFIG, name="hymba-smoke", n_layers=2, d_model=256, n_heads=4,
+        n_kv_heads=2, d_ff=512, vocab=512, head_dim=64, ssm_state=8,
+        sliding_window=64,
+    )

@@ -1,0 +1,22 @@
+"""internlm2-20b — dense GQA kv=8. [arXiv:2403.17297]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internlm2-20b",
+    family="dense",
+    n_layers=48,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=16384,
+    vocab=92544,
+    source="arXiv:2403.17297",
+)
+
+
+def smoke() -> ModelConfig:
+    import dataclasses
+    return dataclasses.replace(
+        CONFIG, name="internlm2-20b-smoke", n_layers=2, d_model=256,
+        n_heads=4, n_kv_heads=2, d_ff=512, vocab=512,
+    )

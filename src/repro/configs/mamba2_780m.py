@@ -1,0 +1,26 @@
+"""mamba2-780m — attention-free SSD (state-space duality). [arXiv:2405.21060]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-780m",
+    family="ssm",
+    n_layers=48,
+    d_model=1536,
+    n_heads=0,
+    n_kv_heads=0,
+    d_ff=0,
+    vocab=50280,
+    ssm_state=128,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    ssm_chunk=256,
+    source="arXiv:2405.21060",
+)
+
+
+def smoke() -> ModelConfig:
+    import dataclasses
+    return dataclasses.replace(
+        CONFIG, name="mamba2-smoke", n_layers=2, d_model=128, vocab=512,
+        ssm_state=16, ssm_head_dim=32, ssm_chunk=32,
+    )

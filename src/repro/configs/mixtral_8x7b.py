@@ -1,0 +1,26 @@
+"""mixtral-8x7b — MoE 8 experts top-2, GQA kv=8, SWA 4096. [arXiv:2401.04088]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x7b",
+    family="moe",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab=32000,
+    moe_experts=8,
+    moe_top_k=2,
+    sliding_window=4096,
+    source="arXiv:2401.04088",
+)
+
+
+def smoke() -> ModelConfig:
+    import dataclasses
+    return dataclasses.replace(
+        CONFIG, name="mixtral-smoke", n_layers=2, d_model=256, n_heads=4,
+        n_kv_heads=2, d_ff=512, vocab=512, moe_experts=4, moe_top_k=2,
+        sliding_window=64,
+    )

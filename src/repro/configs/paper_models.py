@@ -1,0 +1,43 @@
+"""The paper's own model configs (Tables 4-6): CNNs + mini-ResNet.
+
+These are the models Cached-DFL is evaluated with in the AAAI'25 paper:
+- MNIST CNN      (Table 4): 2 conv (10, 20 ch, 5x5) + FC 320->50->10
+- FashionMNIST CNN (Table 5): 2 conv+BN (16, 32 ch, 5x5) + FC 7*7*32->10
+- ResNet-18      (Table 6): for CIFAR-10; we expose a width-scaled variant
+  (mini_resnet) so CPU benchmarks stay tractable.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNConfig:
+    name: str
+    image_hw: int
+    in_channels: int
+    conv_channels: tuple
+    kernel: int
+    fc_hidden: int          # 0 -> single FC head
+    num_classes: int = 10
+    batch_norm: bool = False
+    source: str = "AAAI'25 Cached-DFL Tables 4-6"
+
+
+MNIST_CNN = CNNConfig(
+    name="paper-mnist-cnn", image_hw=28, in_channels=1,
+    conv_channels=(10, 20), kernel=5, fc_hidden=50,
+)
+
+FASHION_CNN = CNNConfig(
+    name="paper-fashion-cnn", image_hw=28, in_channels=1,
+    conv_channels=(16, 32), kernel=5, fc_hidden=0, batch_norm=True,
+)
+
+# Width-scaled ResNet stand-in for CIFAR-10 benchmarks on CPU.
+MINI_RESNET = CNNConfig(
+    name="paper-mini-resnet", image_hw=32, in_channels=3,
+    conv_channels=(16, 32, 64), kernel=3, fc_hidden=0,
+)
+
+PAPER_CONFIGS = {c.name: c for c in (MNIST_CNN, FASHION_CNN, MINI_RESNET)}

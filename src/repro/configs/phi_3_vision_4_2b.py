@@ -1,0 +1,26 @@
+"""phi-3-vision-4.2b — phi3-mini LM backbone + CLIP frontend (stubbed).
+
+[hf:microsoft/Phi-3-vision-128k-instruct]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi-3-vision-4.2b",
+    family="vlm",
+    n_layers=32,
+    d_model=3072,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=8192,
+    vocab=32064,
+    image_tokens=1024,  # projector output positions consumed by the LM
+    source="hf:microsoft/Phi-3-vision-128k-instruct",
+)
+
+
+def smoke() -> ModelConfig:
+    import dataclasses
+    return dataclasses.replace(
+        CONFIG, name="phi-3-vision-smoke", n_layers=2, d_model=256, n_heads=4,
+        n_kv_heads=4, d_ff=512, vocab=512, image_tokens=8,
+    )

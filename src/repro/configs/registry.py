@@ -1,0 +1,59 @@
+"""Architecture registry: --arch <id> resolution for launchers and tests."""
+from __future__ import annotations
+
+from repro.configs import (
+    deepseek_67b,
+    grok_1_314b,
+    hymba_1_5b,
+    internlm2_1_8b,
+    internlm2_20b,
+    mamba2_780m,
+    mixtral_8x7b,
+    phi_3_vision_4_2b,
+    qwen2_7b,
+    whisper_small,
+)
+from repro.configs.base import ModelConfig
+
+_MODULES = {
+    "phi-3-vision-4.2b": phi_3_vision_4_2b,
+    "grok-1-314b": grok_1_314b,
+    "internlm2-1.8b": internlm2_1_8b,
+    "qwen2-7b": qwen2_7b,
+    "mamba2-780m": mamba2_780m,
+    "mixtral-8x7b": mixtral_8x7b,
+    "hymba-1.5b": hymba_1_5b,
+    "deepseek-67b": deepseek_67b,
+    "internlm2-20b": internlm2_20b,
+    "whisper-small": whisper_small,
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; available: {list(_MODULES)}")
+    return _MODULES[arch].CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return _MODULES[arch].smoke()
+
+
+def supports_shape(cfg: ModelConfig, shape_name: str) -> bool:
+    """Assignment rules: long_500k requires sub-quadratic attention."""
+    if shape_name != "long_500k":
+        return True
+    if cfg.family == "ssm":
+        return True
+    return cfg.sliding_window > 0
+
+
+def skip_reason(cfg: ModelConfig, shape_name: str) -> str:
+    if supports_shape(cfg, shape_name):
+        return ""
+    return (
+        f"{cfg.name}: full quadratic attention; long_500k decode would need "
+        "a 524288-token dense KV cache (skip sanctioned by assignment)"
+    )

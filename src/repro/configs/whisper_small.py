@@ -1,0 +1,28 @@
+"""whisper-small — encoder-decoder, conv frontend stubbed. [arXiv:2212.04356]
+
+The mel-spectrogram + conv feature extractor is a stub per the assignment:
+``input_specs()`` provides precomputed frame embeddings [B, frames, d_model].
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-small",
+    family="audio",
+    n_layers=12,       # decoder layers
+    enc_layers=12,     # encoder layers
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=12,
+    d_ff=3072,
+    vocab=51865,
+    enc_context=1500,
+    source="arXiv:2212.04356",
+)
+
+
+def smoke() -> ModelConfig:
+    import dataclasses
+    return dataclasses.replace(
+        CONFIG, name="whisper-smoke", n_layers=2, enc_layers=2, d_model=256,
+        n_heads=4, n_kv_heads=4, d_ff=512, vocab=512, enc_context=32,
+    )

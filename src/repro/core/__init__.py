@@ -1,0 +1,9 @@
+"""Cached-DFL: the paper's primary contribution as a composable JAX module."""
+from repro.core.cache import ModelCache, init_cache, evict_stale, insert  # noqa: F401
+from repro.core.aggregate import aggregate, aggregate_flat  # noqa: F401
+from repro.core.gossip import exchange  # noqa: F401
+from repro.core.local_update import local_update, fleet_local_update  # noqa: F401
+from repro.core.rounds import (  # noqa: F401
+    FleetState, init_fleet, cached_dfl_epoch, dfl_epoch, cfl_epoch,
+    fleet_accuracy,
+)

@@ -1,0 +1,81 @@
+"""Model aggregation over cached models (paper Algorithm 1, lines 10-13).
+
+x_i(t+1) = Σ_{j ∈ C_i(t) ∪ {i}} α_j x̃_j(τ),  α_j = n_j / Σ n_j.
+
+Two execution paths:
+  * pytree path — leafwise einsum over the stacked cache axis (fleet sim);
+  * flat/Pallas path — the model flattened to one vector, reduced by the
+    ``cache_aggregate`` TPU kernel (pod-scale deployment hot spot).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cache import ModelCache
+
+
+def aggregation_weights(own_samples, cache_samples, valid,
+                        include_self: bool = True, ages=None,
+                        staleness_decay: float = 1.0):
+    """α weights: [w_self, w_cache...] normalized over valid entries.
+
+    staleness_decay < 1 is a beyond-paper extension (after asynchronous-FL
+    mixing, Xie et al. 2019): a cached model aged `a` epochs contributes
+    n_j · γ^a, damping the staleness error term in Theorem 4 at the cost
+    of less information from far-away agents. γ=1 recovers the paper.
+    """
+    w_cache = cache_samples * valid
+    if ages is not None and staleness_decay != 1.0:
+        w_cache = w_cache * jnp.power(
+            jnp.float32(staleness_decay),
+            jnp.maximum(ages, 0).astype(jnp.float32))
+    w_self = jnp.asarray(own_samples, jnp.float32) * (1.0 if include_self else 0.0)
+    total = w_self + jnp.sum(w_cache, axis=-1)
+    total = jnp.maximum(total, 1e-12)
+    return w_self / total, w_cache / total[..., None]
+
+
+def aggregate(params, own_samples, cache: ModelCache, *,
+              include_self: bool = True, t=None,
+              staleness_decay: float = 1.0):
+    """Weighted average of own model + cached models.
+
+    Fleet-vectorized: params leaves [N, ...], cache leaves [N, C, ...] —
+    or single-agent: params [...], cache [C, ...].
+    """
+    ages = None if t is None else (t - cache.ts)
+    w_self, w_cache = aggregation_weights(
+        own_samples, cache.samples, cache.valid.astype(jnp.float32),
+        include_self, ages=ages, staleness_decay=staleness_decay)
+
+    def leaf(p, m):
+        nb = w_cache.ndim - 1  # 0 for single agent, 1 for fleet
+        wexp = w_cache.reshape(w_cache.shape + (1,) * (m.ndim - nb - 1))
+        contrib = jnp.sum(wexp * m.astype(jnp.float32), axis=nb)
+        ws = w_self.reshape(w_self.shape + (1,) * (p.ndim - nb))
+        return (ws * p.astype(jnp.float32) + contrib).astype(p.dtype)
+
+    return jax.tree_util.tree_map(leaf, params, cache.models)
+
+
+def aggregate_flat(flat_params, flat_cache, own_samples, cache_samples,
+                   valid, *, use_kernel: bool = True,
+                   include_self: bool = True):
+    """Flat-vector aggregation: flat_params [D], flat_cache [C, D].
+
+    The pod-scale path; `use_kernel` routes through the Pallas kernel.
+    """
+    w_self, w_cache = aggregation_weights(own_samples, cache_samples,
+                                          valid.astype(jnp.float32),
+                                          include_self)
+    if use_kernel:
+        from repro.kernels import ops as kops
+        acc = kops.cache_aggregate(flat_cache, w_cache,
+                                   valid.astype(jnp.float32))
+    else:
+        from repro.kernels import ref as kref
+        acc = kref.cache_aggregate_ref(flat_cache, w_cache,
+                                       valid.astype(jnp.float32))
+    return (w_self * flat_params.astype(jnp.float32) + acc).astype(
+        flat_params.dtype)

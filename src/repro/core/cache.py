@@ -1,0 +1,206 @@
+"""The Cached-DFL model cache (paper §2.2, Algorithms 2 & 3).
+
+TPU adaptation: instead of PyTorch dicts of ``state_dict``s, the cache is a
+fixed-capacity *stacked pytree* — every leaf of the model gets a leading
+``[C]`` axis — plus flat metadata arrays. All updates (staleness eviction,
+LRU dedup/retention, group-based pruning) are ``jax.lax`` ops over the
+metadata, so an entire fleet's cache maintenance jits into one program and
+never leaves the device.
+
+Metadata per slot:
+    ts      int32  epoch at which the cached model finished local training
+                   (the paper's τ);  -1 = empty slot
+    origin  int32  agent the model was trained on; -1 = empty
+    samples float32 n_j (local dataset size) for aggregation weights
+    group   int32  origin agent's distribution group (Algorithm 3)
+    arrival int32  epoch the entry was received (fifo policy)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.tree import tree_take
+
+NEG = jnp.int32(-1)
+
+
+@dataclasses.dataclass
+class ModelCache:
+    models: Any          # pytree, leaves [C, ...]
+    ts: jax.Array        # [C] int32
+    origin: jax.Array    # [C] int32
+    samples: jax.Array   # [C] float32
+    group: jax.Array     # [C] int32
+    arrival: jax.Array   # [C] int32
+
+    @property
+    def capacity(self) -> int:
+        return self.ts.shape[0]
+
+    @property
+    def valid(self) -> jax.Array:
+        return self.origin >= 0
+
+jax.tree_util.register_dataclass(
+    ModelCache,
+    data_fields=["models", "ts", "origin", "samples", "group", "arrival"],
+    meta_fields=[])
+
+
+def init_cache(template_params, capacity: int) -> ModelCache:
+    models = jax.tree_util.tree_map(
+        lambda x: jnp.zeros((capacity,) + x.shape, x.dtype), template_params)
+    z = jnp.full((capacity,), NEG)
+    return ModelCache(models=models, ts=z, origin=z,
+                      samples=jnp.zeros((capacity,), jnp.float32),
+                      group=z, arrival=z)
+
+
+def evict_stale(cache: ModelCache, t, tau_max) -> ModelCache:
+    """Remove entries with staleness t - τ >= τ_max (Alg. 2 lines 1-5)."""
+    keep = cache.valid & ((t - cache.ts) < tau_max)
+    return dataclasses.replace(
+        cache,
+        ts=jnp.where(keep, cache.ts, NEG),
+        origin=jnp.where(keep, cache.origin, NEG),
+        samples=jnp.where(keep, cache.samples, 0.0),
+        group=jnp.where(keep, cache.group, NEG),
+        arrival=jnp.where(keep, cache.arrival, NEG))
+
+
+# ---------------------------------------------------------------------------
+# candidate-set selection (metadata phase)
+# ---------------------------------------------------------------------------
+
+def _dedup_mask(origin, ts, pref):
+    """valid[i] = entry i is the best copy of its origin.
+
+    Best = max ts; ties broken by higher ``pref`` then lower index.
+    origin < 0 entries are invalid.
+    """
+    M = origin.shape[0]
+    same = origin[None, :] == origin[:, None]          # [i, j]
+    newer = ts[None, :] > ts[:, None]
+    tie = ts[None, :] == ts[:, None]
+    pref_j = (pref[None, :] > pref[:, None]) | (
+        (pref[None, :] == pref[:, None])
+        & (jnp.arange(M)[None, :] < jnp.arange(M)[:, None]))
+    beaten = same & (newer | (tie & pref_j))
+    return (origin >= 0) & ~jnp.any(beaten, axis=1)
+
+
+def select_lru(origin, ts, samples, group, arrival, capacity: int,
+               rank_key: Optional[jax.Array] = None):
+    """LRU retention (Alg. 2 lines 6-18): dedup by origin keeping freshest,
+    sort by ts descending, retain first `capacity`.
+
+    Returns (sel_idx [capacity], meta dict) — sel_idx indexes the candidate
+    arrays; invalid selections have origin == -1.
+    """
+    pref = jnp.zeros_like(ts) if rank_key is None else rank_key
+    valid = _dedup_mask(origin, ts, pref)
+    key = jnp.where(valid, ts, jnp.int32(-2**30))
+    # stable ordering: break ts ties by candidate index (earlier = own cache)
+    order = jnp.argsort(-key, stable=True)
+    sel = order[:capacity]
+    sel_valid = valid[sel]
+    return sel, {
+        "ts": jnp.where(sel_valid, ts[sel], NEG),
+        "origin": jnp.where(sel_valid, origin[sel], NEG),
+        "samples": jnp.where(sel_valid, samples[sel], 0.0),
+        "group": jnp.where(sel_valid, group[sel], NEG),
+        "arrival": jnp.where(sel_valid, arrival[sel], NEG),
+    }
+
+
+def select_group(origin, ts, samples, group, arrival, capacity: int,
+                 group_slots: jax.Array):
+    """Group-Based retention (Alg. 3): per-group LRU with r_g slots.
+
+    group_slots: [num_groups] int32 with sum == capacity.
+    """
+    num_groups = group_slots.shape[0]
+    valid = _dedup_mask(origin, ts, jnp.zeros_like(ts))
+    M = origin.shape[0]
+    # rank of each entry within its group by ts desc (valid entries only)
+    same_g = (group[None, :] == group[:, None])
+    better = same_g & valid[None, :] & (
+        (ts[None, :] > ts[:, None])
+        | ((ts[None, :] == ts[:, None])
+           & (jnp.arange(M)[None, :] < jnp.arange(M)[:, None])))
+    rank = jnp.sum(better, axis=1)
+    slots = jnp.where((group >= 0) & (group < num_groups),
+                      group_slots[jnp.clip(group, 0, num_groups - 1)], 0)
+    keep = valid & (rank < slots)
+    key = jnp.where(keep, ts, jnp.int32(-2**30))
+    order = jnp.argsort(-key, stable=True)
+    sel = order[:capacity]
+    sel_valid = keep[sel]
+    return sel, {
+        "ts": jnp.where(sel_valid, ts[sel], NEG),
+        "origin": jnp.where(sel_valid, origin[sel], NEG),
+        "samples": jnp.where(sel_valid, samples[sel], 0.0),
+        "group": jnp.where(sel_valid, group[sel], NEG),
+        "arrival": jnp.where(sel_valid, arrival[sel], NEG),
+    }
+
+
+def _retain(retain_key, valid, origin, ts, samples, group, arrival,
+            capacity: int):
+    key = jnp.where(valid, retain_key, jnp.int32(-2**30))
+    order = jnp.argsort(-key, stable=True)
+    sel = order[:capacity]
+    sel_valid = valid[sel]
+    return sel, {
+        "ts": jnp.where(sel_valid, ts[sel], NEG),
+        "origin": jnp.where(sel_valid, origin[sel], NEG),
+        "samples": jnp.where(sel_valid, samples[sel], 0.0),
+        "group": jnp.where(sel_valid, group[sel], NEG),
+        "arrival": jnp.where(sel_valid, arrival[sel], NEG),
+    }
+
+
+def select_fifo(origin, ts, samples, group, arrival, capacity: int):
+    """FIFO variant: dedup by origin (freshest copy), retain the most
+    recently *received* entries. Non-paper baseline for the policy study."""
+    valid = _dedup_mask(origin, ts, jnp.zeros_like(ts))
+    return _retain(arrival, valid, origin, ts, samples, group, arrival,
+                   capacity)
+
+
+def select_random(origin, ts, samples, group, arrival, capacity: int, key):
+    """Random retention after origin-dedup. Non-paper baseline."""
+    valid = _dedup_mask(origin, ts, jnp.zeros_like(ts))
+    rnd = jax.random.randint(key, origin.shape, 0, 2**30)
+    return _retain(rnd, valid, origin, ts, samples, group, arrival, capacity)
+
+
+def apply_selection(cache: ModelCache, cand_models, sel, meta) -> ModelCache:
+    """Gather selected candidate models into a fresh cache."""
+    models = tree_take(cand_models, sel, axis=0)
+    return dataclasses.replace(cache, models=models, **meta)
+
+
+def insert(cache: ModelCache, params, t, origin, samples, group,
+           tau_max) -> ModelCache:
+    """Insert/refresh a single model (Alg. 2 line 6) then LRU-retain.
+
+    Used by the pod-scale deployment where exchanges arrive one at a time.
+    """
+    cache = evict_stale(cache, t, tau_max)
+    C = cache.capacity
+    cand_models = jax.tree_util.tree_map(
+        lambda c, x: jnp.concatenate([c, x[None].astype(c.dtype)], axis=0),
+        cache.models, params)
+    origin_c = jnp.concatenate([cache.origin, jnp.asarray([origin], jnp.int32)])
+    ts_c = jnp.concatenate([cache.ts, jnp.asarray([t], jnp.int32)])
+    samples_c = jnp.concatenate([cache.samples,
+                                 jnp.asarray([samples], jnp.float32)])
+    group_c = jnp.concatenate([cache.group, jnp.asarray([group], jnp.int32)])
+    arrival_c = jnp.concatenate([cache.arrival, jnp.asarray([t], jnp.int32)])
+    sel, meta = select_lru(origin_c, ts_c, samples_c, group_c, arrival_c, C)
+    return apply_selection(cache, cand_models, sel, meta)

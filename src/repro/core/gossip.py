@@ -1,0 +1,136 @@
+"""DTN-like model spreading: contact-driven cache exchange (paper §4.5).
+
+The whole fleet's exchange for one epoch is a single vectorized program:
+
+  phase 1 (metadata): per agent, build the candidate set
+      own cache ∪ {partner j's fresh model} ∪ partner j's cache  (∀ j met)
+      and run the cache-update policy purely on (origin, ts, …) arrays;
+  phase 2 (gather): fetch only the winning models' weights with one
+      advanced-indexing gather from the stacked global state.
+
+This two-phase split is the TPU adaptation of Algorithm 2: selecting by
+metadata first avoids materializing N·D·(C+1) candidate model copies.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cache as cache_lib
+from repro.core.cache import ModelCache, NEG
+
+
+def _candidates(cache: ModelCache, t, partners, own_ts, own_samples,
+                own_group, tau_max):
+    """Build candidate metadata [N, M] and source coordinates.
+
+    M = C + D*(1 + C): own cache, then per partner (own model, cache).
+    Source coordinate (agent, slot): slot C refers to the agent's own model
+    in the stacked gather array; slots 0..C-1 are its cache entries.
+    """
+    N, C = cache.ts.shape
+    D = partners.shape[1]
+    pvalid = partners >= 0
+    pidx = jnp.clip(partners, 0, N - 1)
+
+    # --- own cache entries ---
+    o_ts, o_origin = cache.ts, cache.origin
+    o_samples, o_group, o_arrival = cache.samples, cache.group, cache.arrival
+    o_src_a = jnp.broadcast_to(jnp.arange(N)[:, None], (N, C))
+    o_src_s = jnp.broadcast_to(jnp.arange(C)[None, :], (N, C))
+
+    # --- partners' fresh models ---
+    p_ts = jnp.where(pvalid, own_ts[pidx], NEG)
+    p_origin = jnp.where(pvalid, partners, NEG)
+    p_samples = jnp.where(pvalid, own_samples[pidx], 0.0)
+    p_group = jnp.where(pvalid, own_group[pidx], NEG)
+    p_arrival = jnp.where(pvalid, t, NEG)
+    p_src_a = pidx
+    p_src_s = jnp.full((N, D), C, jnp.int32)
+
+    # --- partners' caches ---
+    c_ts = jnp.where(pvalid[..., None], cache.ts[pidx], NEG).reshape(N, D * C)
+    c_origin = jnp.where(pvalid[..., None], cache.origin[pidx],
+                         NEG).reshape(N, D * C)
+    c_samples = jnp.where(pvalid[..., None], cache.samples[pidx],
+                          0.0).reshape(N, D * C)
+    c_group = jnp.where(pvalid[..., None], cache.group[pidx],
+                        NEG).reshape(N, D * C)
+    c_arrival = jnp.where(jnp.broadcast_to(pvalid[..., None], (N, D, C)),
+                          t, NEG).reshape(N, D * C)
+    c_src_a = jnp.broadcast_to(pidx[..., None], (N, D, C)).reshape(N, D * C)
+    c_src_s = jnp.broadcast_to(jnp.arange(C)[None, None, :],
+                               (N, D, C)).reshape(N, D * C)
+
+    cat = lambda *xs: jnp.concatenate(xs, axis=1)
+    ts = cat(o_ts, p_ts, c_ts)
+    origin = cat(o_origin, p_origin, c_origin)
+    samples = cat(o_samples, p_samples, c_samples)
+    group = cat(o_group, p_group, c_group)
+    arrival = cat(o_arrival, p_arrival, c_arrival)
+    src_a = cat(o_src_a, p_src_a, c_src_a)
+    src_s = cat(o_src_s, p_src_s, c_src_s)
+
+    # staleness kick-out (Alg. 2 lines 1-5) on ALL candidates
+    fresh = (origin >= 0) & ((t - ts) < tau_max)
+    origin = jnp.where(fresh, origin, NEG)
+    ts = jnp.where(fresh, ts, NEG)
+    return ts, origin, samples, group, arrival, src_a, src_s
+
+
+def exchange(params, cache: ModelCache, partners, t, own_samples, own_group,
+             *, tau_max: int, policy: str = "lru",
+             group_slots: Optional[jax.Array] = None,
+             rng: Optional[jax.Array] = None) -> ModelCache:
+    """One epoch of DTN-like cache exchange for the whole fleet.
+
+    params: pytree [N, ...] (post-local-update models x̃_i(t));
+    cache: leaves [N, C, ...]; partners: [N, D] int32 (-1 padded).
+    Agents with no partners still run staleness eviction + retention.
+    """
+    N, C = cache.ts.shape
+    own_ts = jnp.full((N,), t, jnp.int32)
+    ts, origin, samples, group, arrival, src_a, src_s = _candidates(
+        cache, t, partners, own_ts, own_samples, own_group, tau_max)
+
+    if policy == "lru":
+        sel_fn = functools.partial(cache_lib.select_lru, capacity=C)
+        sel, meta = jax.vmap(sel_fn)(origin, ts, samples, group, arrival)
+    elif policy == "group":
+        if group_slots is None:
+            raise ValueError("group policy requires group_slots")
+        sel_fn = lambda o, t_, s, g, a, gs: cache_lib.select_group(
+            o, t_, s, g, a, capacity=C, group_slots=gs)
+        sel, meta = jax.vmap(sel_fn, in_axes=(0, 0, 0, 0, 0, None))(
+            origin, ts, samples, group, arrival, group_slots)
+    elif policy == "fifo":
+        sel_fn = functools.partial(cache_lib.select_fifo, capacity=C)
+        sel, meta = jax.vmap(sel_fn)(origin, ts, samples, group, arrival)
+    elif policy == "random":
+        if rng is None:
+            raise ValueError("random policy requires rng")
+        keys = jax.random.split(rng, N)
+        sel_fn = lambda o, t_, s, g, a, k: cache_lib.select_random(
+            o, t_, s, g, a, C, k)
+        sel, meta = jax.vmap(sel_fn)(origin, ts, samples, group, arrival,
+                                     keys)
+    else:
+        raise ValueError(f"unknown cache policy {policy!r}")
+
+    # phase 2: gather winning model weights only
+    gather_a = jnp.take_along_axis(src_a, sel, axis=1)  # [N, C]
+    gather_s = jnp.take_along_axis(src_s, sel, axis=1)
+
+    def leaf(cache_leaf, params_leaf):
+        # stacked [N, C+1, ...]: cache slots then own model
+        stacked = jnp.concatenate(
+            [cache_leaf, params_leaf[:, None].astype(cache_leaf.dtype)],
+            axis=1)
+        return stacked[gather_a, gather_s]
+
+    models = jax.tree_util.tree_map(leaf, cache.models, params)
+    return dataclasses.replace(cache, models=models, **meta)

@@ -1,0 +1,64 @@
+"""LocalUpdate (paper Algorithm 1, lines 1-9): K steps of SGD on the
+proximal-regularized local loss
+
+    g_{x(t)}(x; z) = f(x; z) + ρ/2 ‖x − x_i(t)‖²,
+
+vectorized over the fleet with vmap. The loss function is model-specific
+and injected, keeping the DFL layer model-agnostic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def proximal_penalty(params, anchor):
+    sq = jax.tree_util.tree_map(
+        lambda p, a: jnp.sum(jnp.square(p.astype(jnp.float32)
+                                        - a.astype(jnp.float32))),
+        params, anchor)
+    return sum(jax.tree_util.tree_leaves(sq))
+
+
+def local_update(params, data, count, key, *, loss_fn: Callable,
+                 steps: int, batch_size: int, lr, rho: float = 0.0):
+    """Run K proximal-SGD steps for ONE agent.
+
+    data: pytree of arrays [n_max, ...]; count: [] int32 valid rows;
+    loss_fn(params, batch) -> scalar. Returns x̃_i(t).
+    """
+    anchor = params
+
+    def objective(p, batch):
+        loss = loss_fn(p, batch)
+        if rho:
+            loss = loss + 0.5 * rho * proximal_penalty(p, anchor)
+        return loss
+
+    def step(carry, k):
+        p, key = carry
+        key, sub = jax.random.split(key)
+        idx = jax.random.randint(sub, (batch_size,), 0,
+                                 jnp.maximum(count, 1))
+        batch = jax.tree_util.tree_map(lambda x: x[idx], data)
+        loss, grads = jax.value_and_grad(objective)(p, batch)
+        p = jax.tree_util.tree_map(
+            lambda w, g: (w.astype(jnp.float32)
+                          - lr * g.astype(jnp.float32)).astype(w.dtype),
+            p, grads)
+        return (p, key), loss
+
+    (params, _), losses = jax.lax.scan(step, (params, key),
+                                       jnp.arange(steps))
+    return params, losses
+
+
+def fleet_local_update(params, data, counts, keys, *, loss_fn: Callable,
+                       steps: int, batch_size: int, lr, rho: float = 0.0):
+    """vmapped local update: params leaves [N, ...], data leaves [N, n, ...]."""
+    fn = functools.partial(local_update, loss_fn=loss_fn, steps=steps,
+                           batch_size=batch_size, lr=lr, rho=rho)
+    return jax.vmap(fn)(params, data, counts, keys)

@@ -1,0 +1,148 @@
+"""Cached-DFL round orchestration (paper Algorithm 1 main process) plus the
+paper's comparison baselines: DeFedAvg-style DFL (pairwise averaging, no
+cache) and Centralized FL (server-side FedAvg).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gossip
+from repro.core.aggregate import aggregate
+from repro.core.cache import ModelCache, evict_stale, init_cache
+from repro.core.local_update import fleet_local_update
+from repro.utils.tree import tree_take
+
+
+@dataclasses.dataclass
+class FleetState:
+    params: Any            # pytree, leaves [N, ...]
+    cache: ModelCache      # leaves [N, C, ...]
+    samples: jax.Array     # [N] float32 — n_i
+    group: jax.Array       # [N] int32 — distribution group of each agent
+    t: jax.Array           # [] int32 — global epoch
+
+jax.tree_util.register_dataclass(
+    FleetState, data_fields=["params", "cache", "samples", "group", "t"],
+    meta_fields=[])
+
+
+def init_fleet(template_params, num_agents: int, cache_size: int,
+               samples, group=None) -> FleetState:
+    params = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (num_agents,) + x.shape).copy(),
+        template_params)
+    cache = init_cache(
+        jax.tree_util.tree_map(lambda x: x[0], params), cache_size)
+    cache = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (num_agents,) + x.shape).copy(), cache)
+    if group is None:
+        group = jnp.zeros((num_agents,), jnp.int32)
+    return FleetState(params=params, cache=cache,
+                      samples=jnp.asarray(samples, jnp.float32),
+                      group=jnp.asarray(group, jnp.int32),
+                      t=jnp.zeros((), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Cached-DFL epoch
+# ---------------------------------------------------------------------------
+
+def cached_dfl_epoch(state: FleetState, partners, data, counts, key, *,
+                     loss_fn: Callable, local_steps: int, batch_size: int,
+                     lr, rho: float = 0.0, tau_max: int = 10,
+                     policy: str = "lru",
+                     group_slots: Optional[jax.Array] = None,
+                     staleness_decay: float = 1.0) -> FleetState:
+    """One global epoch of Algorithm 1 for the whole fleet.
+
+    partners: [N, D] contact lists for this epoch (-1 padded).
+    """
+    N = state.samples.shape[0]
+    key, k_local, k_policy = jax.random.split(key, 3)
+    local_keys = jax.random.split(k_local, N)
+
+    # 1) LocalUpdate: x_i(t) -> x̃_i(t)
+    tilde, losses = fleet_local_update(
+        state.params, data, counts, local_keys, loss_fn=loss_fn,
+        steps=local_steps, batch_size=batch_size, lr=lr, rho=rho)
+
+    # 2) CacheUpdate: DTN-like exchange with encountered agents
+    cache = gossip.exchange(
+        tilde, state.cache, partners, state.t, state.samples, state.group,
+        tau_max=tau_max, policy=policy, group_slots=group_slots,
+        rng=k_policy)
+
+    # 3) ModelAggregation over all cached models (+ own)
+    new_params = aggregate(tilde, state.samples, cache, t=state.t,
+                           staleness_decay=staleness_decay)
+
+    return dataclasses.replace(state, params=new_params, cache=cache,
+                               t=state.t + 1), losses
+
+
+# ---------------------------------------------------------------------------
+# baselines
+# ---------------------------------------------------------------------------
+
+def dfl_epoch(state: FleetState, partners, data, counts, key, *,
+              loss_fn: Callable, local_steps: int, batch_size: int, lr,
+              rho: float = 0.0) -> FleetState:
+    """DeFedAvg (paper's "DFL" baseline): local update, then pairwise
+    sample-weighted averaging with the first contacted partner only."""
+    N = state.samples.shape[0]
+    local_keys = jax.random.split(key, N)
+    tilde, losses = fleet_local_update(
+        state.params, data, counts, local_keys, loss_fn=loss_fn,
+        steps=local_steps, batch_size=batch_size, lr=lr, rho=rho)
+
+    first = partners[:, 0]
+    has = first >= 0
+    pidx = jnp.clip(first, 0, N - 1)
+    n_i = state.samples
+    n_j = jnp.where(has, n_i[pidx], 0.0)
+    w_i = n_i / (n_i + n_j)
+
+    def leaf(p):
+        pj = p[pidx]
+        w = w_i.reshape((N,) + (1,) * (p.ndim - 1))
+        mixed = w * p.astype(jnp.float32) + (1 - w) * pj.astype(jnp.float32)
+        keep = has.reshape((N,) + (1,) * (p.ndim - 1))
+        return jnp.where(keep, mixed, p.astype(jnp.float32)).astype(p.dtype)
+
+    new_params = jax.tree_util.tree_map(leaf, tilde)
+    return dataclasses.replace(state, params=new_params, t=state.t + 1), losses
+
+
+def cfl_epoch(state: FleetState, data, counts, key, *, loss_fn: Callable,
+              local_steps: int, batch_size: int, lr,
+              rho: float = 0.0) -> FleetState:
+    """Centralized FL (FedAvg): all agents aggregate on a server each epoch."""
+    N = state.samples.shape[0]
+    local_keys = jax.random.split(key, N)
+    tilde, losses = fleet_local_update(
+        state.params, data, counts, local_keys, loss_fn=loss_fn,
+        steps=local_steps, batch_size=batch_size, lr=lr, rho=rho)
+    w = state.samples / jnp.sum(state.samples)
+
+    def leaf(p):
+        wexp = w.reshape((N,) + (1,) * (p.ndim - 1))
+        avg = jnp.sum(wexp * p.astype(jnp.float32), axis=0)
+        return jnp.broadcast_to(avg, p.shape).astype(p.dtype)
+
+    new_params = jax.tree_util.tree_map(leaf, tilde)
+    return dataclasses.replace(state, params=new_params, t=state.t + 1), losses
+
+
+# ---------------------------------------------------------------------------
+# fleet evaluation
+# ---------------------------------------------------------------------------
+
+def fleet_accuracy(state: FleetState, acc_fn: Callable, test_batch) -> jax.Array:
+    """Average test metric over all agents' local models (paper's metric)."""
+    accs = jax.vmap(lambda p: acc_fn(p, test_batch))(state.params)
+    return jnp.mean(accs), accs

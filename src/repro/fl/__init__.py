@@ -1,0 +1,4 @@
+from repro.fl.partition import (  # noqa: F401
+    iid_partition, shards_noniid_partition, dirichlet_partition,
+    grouped_label_partition, gather_agent_data,
+)

@@ -1,0 +1,196 @@
+"""Reusable fleet-experiment harness — the engine behind train.py, the
+benchmarks (one per paper figure/table) and the examples.
+
+Reproduces the paper's experimental loop: Manhattan mobility → contacts →
+Cached-DFL / DFL / CFL epochs → average-test-accuracy metric with
+ReduceLROnPlateau and early stopping.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import DFLConfig, MobilityConfig
+from repro.configs.paper_models import CNNConfig, PAPER_CONFIGS
+from repro.core import rounds as rounds_lib
+from repro.data.synthetic import make_image_dataset
+from repro.fl import partition as part_lib
+from repro.mobility import manhattan as mob
+from repro.models import cnn as cnn_lib
+from repro.optim.schedules import ReduceLROnPlateau
+
+
+@dataclasses.dataclass
+class ExperimentConfig:
+    model: str = "paper-mnist-cnn"
+    distribution: str = "noniid"      # iid | noniid | dirichlet | grouped
+    algorithm: str = "cached"         # cached | dfl | cfl
+    dfl: DFLConfig = dataclasses.field(default_factory=DFLConfig)
+    mobility: MobilityConfig = dataclasses.field(
+        default_factory=MobilityConfig)
+    epochs: int = 50
+    eval_every: int = 1
+    seed: int = 0
+    n_train: int = 6000
+    n_test: int = 1000
+    image_hw: int = 0                 # 0 -> model default
+    max_partners: int = 4
+    early_stop_patience: int = 20
+    dirichlet_pi: float = 0.5
+    overlap: int = 0                  # grouped: label overlap between areas
+    num_groups: int = 3
+    lr_plateau: bool = True
+
+
+def _area_labels(num_groups: int, overlap: int, num_classes: int = 10):
+    """n-overlap label allocation (paper appendix B.1.1)."""
+    base = [list(range(0, 4)), list(range(4, 7)), list(range(7, 10))]
+    if num_groups != 3:
+        per = num_classes // num_groups
+        base = [list(range(g * per, min((g + 1) * per, num_classes)))
+                for g in range(num_groups)]
+    out = []
+    for g, labels in enumerate(base):
+        l = list(labels)
+        for k in range(1, overlap + 1):
+            l.append((labels[0] - k) % num_classes)   # borrow neighbors
+        out.append(sorted(set(l)))
+    return out
+
+
+def build_fleet(cfg: ExperimentConfig):
+    """Returns (model_cfg, state, data, counts, test_batch, mobility_state,
+    group_slots)."""
+    model_cfg: CNNConfig = PAPER_CONFIGS[cfg.model]
+    if cfg.image_hw:
+        model_cfg = dataclasses.replace(model_cfg, image_hw=cfg.image_hw)
+    rng = np.random.default_rng(cfg.seed)
+    N = cfg.dfl.num_agents
+
+    tx, ty, ex, ey = make_image_dataset(
+        cfg.seed, n_train=cfg.n_train, n_test=cfg.n_test,
+        hw=model_cfg.image_hw, channels=model_cfg.in_channels)
+
+    band = group = None
+    group_slots = None
+    if cfg.distribution == "iid":
+        idx, counts = part_lib.iid_partition(rng, ty, N)
+    elif cfg.distribution == "noniid":
+        idx, counts = part_lib.shards_noniid_partition(rng, ty, N)
+    elif cfg.distribution == "dirichlet":
+        idx, counts = part_lib.dirichlet_partition(rng, ty, N,
+                                                   pi=cfg.dirichlet_pi)
+    elif cfg.distribution == "grouped":
+        band, group = mob.make_bands(N, cfg.num_groups)
+        idx, counts = part_lib.grouped_label_partition(
+            rng, ty, N, np.asarray(group),
+            _area_labels(cfg.num_groups, cfg.overlap))
+        per = cfg.dfl.cache_size // cfg.num_groups
+        slots = [per] * cfg.num_groups
+        for i in range(cfg.dfl.cache_size - per * cfg.num_groups):
+            slots[i] += 1
+        group_slots = jnp.asarray(slots, jnp.int32)
+    else:
+        raise ValueError(cfg.distribution)
+
+    data = part_lib.gather_agent_data({"images": tx, "labels": ty}, idx)
+    data = {k: jnp.asarray(v) for k, v in data.items()}
+    test_batch = {"images": jnp.asarray(ex), "labels": jnp.asarray(ey)}
+
+    key = jax.random.PRNGKey(cfg.seed)
+    params0 = cnn_lib.init_params(model_cfg, key)
+    state = rounds_lib.init_fleet(params0, N, cfg.dfl.cache_size,
+                                  counts.astype(np.float32), group=group)
+    mstate = mob.init_mobility(jax.random.PRNGKey(cfg.seed + 1), N,
+                               cfg.mobility, band=band)
+    return (model_cfg, state, data, jnp.asarray(counts), test_batch, mstate,
+            group_slots)
+
+
+def run_experiment(cfg: ExperimentConfig, *, verbose: bool = False,
+                   record_cache_stats: bool = False) -> Dict:
+    (model_cfg, state, data, counts, test_batch, mstate,
+     group_slots) = build_fleet(cfg)
+
+    loss_fn = lambda p, b: cnn_lib.loss_fn(p, model_cfg, b["images"],
+                                           b["labels"])
+    acc_fn = lambda p, b: cnn_lib.accuracy(p, model_cfg, b["images"],
+                                           b["labels"])
+
+    policy = cfg.dfl.policy
+    common = dict(loss_fn=loss_fn, local_steps=cfg.dfl.local_steps,
+                  batch_size=cfg.dfl.batch_size)
+
+    def make_epoch(lr):
+        if cfg.algorithm == "cached":
+            fn = functools.partial(
+                rounds_lib.cached_dfl_epoch, lr=lr, rho=cfg.dfl.rho,
+                tau_max=cfg.dfl.tau_max, policy=policy,
+                group_slots=group_slots,
+                staleness_decay=cfg.dfl.staleness_decay, **common)
+            return jax.jit(fn)
+        if cfg.algorithm == "dfl":
+            return jax.jit(functools.partial(
+                rounds_lib.dfl_epoch, lr=lr, rho=cfg.dfl.rho, **common))
+        if cfg.algorithm == "cfl":
+            return jax.jit(functools.partial(
+                rounds_lib.cfl_epoch, lr=lr, rho=cfg.dfl.rho, **common))
+        raise ValueError(cfg.algorithm)
+
+    sim = jax.jit(functools.partial(mob.simulate_epoch, cfg=cfg.mobility,
+                                    seconds=cfg.dfl.epoch_seconds))
+    eval_fn = jax.jit(functools.partial(rounds_lib.fleet_accuracy,
+                                        acc_fn=acc_fn))
+
+    sched = ReduceLROnPlateau(lr=cfg.dfl.lr)
+    lr = cfg.dfl.lr
+    epoch_fn = make_epoch(lr)
+    key = jax.random.PRNGKey(cfg.seed + 2)
+    history: Dict[str, List] = {"epoch": [], "acc": [], "lr": [],
+                                "cache_num": [], "cache_age": []}
+    best, best_epoch = -1.0, 0
+    t0 = time.time()
+    for ep in range(cfg.epochs):
+        key, k1, k2 = jax.random.split(key, 3)
+        mstate, met = sim(mstate, k1)
+        partners = mob.partners_from_contacts(met, cfg.max_partners)
+        if cfg.algorithm == "cfl":
+            state, _ = epoch_fn(state, data, counts, k2)
+        else:
+            state, _ = epoch_fn(state, partners, data, counts, k2)
+        if (ep + 1) % cfg.eval_every == 0:
+            acc, _ = eval_fn(state, test_batch=test_batch)
+            acc = float(acc)
+            history["epoch"].append(ep + 1)
+            history["acc"].append(acc)
+            history["lr"].append(lr)
+            if record_cache_stats and cfg.algorithm == "cached":
+                valid = np.asarray(state.cache.valid)
+                ages = np.asarray(state.t - state.cache.ts)
+                history["cache_num"].append(float(valid.sum(1).mean()))
+                history["cache_age"].append(
+                    float((ages * valid).sum() / max(valid.sum(), 1)))
+            if cfg.lr_plateau:
+                new_lr = sched.update(acc)
+                if new_lr != lr:
+                    lr = new_lr
+                    epoch_fn = make_epoch(lr)
+            if acc > best + 1e-4:
+                best, best_epoch = acc, ep
+            elif ep - best_epoch >= cfg.early_stop_patience:
+                if verbose:
+                    print(f"early stop at epoch {ep + 1}")
+                break
+            if verbose:
+                print(f"epoch {ep + 1:4d} acc={acc:.4f} lr={lr:.4f} "
+                      f"({time.time() - t0:.1f}s)")
+    history["best_acc"] = best
+    history["final_acc"] = history["acc"][-1] if history["acc"] else 0.0
+    history["wall_s"] = time.time() - t0
+    return history

@@ -1,0 +1,115 @@
+"""Federated data partitioners (paper §4.1).
+
+Three settings, matching the paper:
+  * iid        — uniform random allocation;
+  * non-iid    — extreme label-shard scheme (after Su et al.): data sorted
+                 by label, split into 2N shards of 1-2 labels each, assigned
+                 unevenly (10% of agents get 4 shards, 20% get 3, 30% get 2,
+                 40% get 1);
+  * dirichlet  — per-class Dirichlet(π) allocation across agents
+                 (after Xiong et al.), default π = 0.5.
+
+All partitioners return (index [N, cap] int32, counts [N] int32): fixed-
+shape padded index arrays into the training set, ready for device-resident
+per-agent sampling.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import numpy as np
+
+
+def _pad_indices(per_agent, cap=None):
+    N = len(per_agent)
+    cap = cap or max(1, max(len(a) for a in per_agent))
+    idx = np.zeros((N, cap), np.int32)
+    counts = np.zeros((N,), np.int32)
+    for i, a in enumerate(per_agent):
+        a = np.asarray(a[:cap], np.int32)
+        idx[i, : len(a)] = a
+        counts[i] = len(a)
+    return idx, counts
+
+
+def iid_partition(rng: np.random.Generator, labels: np.ndarray,
+                  num_agents: int) -> Tuple[np.ndarray, np.ndarray]:
+    n = len(labels)
+    perm = rng.permutation(n)
+    per_agent = np.array_split(perm, num_agents)
+    return _pad_indices(per_agent)
+
+
+def shards_noniid_partition(rng: np.random.Generator, labels: np.ndarray,
+                            num_agents: int, shards_per_agent=(4, 3, 2, 1),
+                            fractions=(0.1, 0.2, 0.3, 0.4)):
+    """Paper's extreme non-iid: sort by label -> 2N shards -> uneven assign."""
+    order = np.argsort(labels, kind="stable")
+    # shard counts per agent (10% x4, 20% x3, 30% x2, 40% x1) -> total 2N
+    counts = []
+    for frac, spa in zip(fractions, shards_per_agent):
+        counts += [spa] * int(round(frac * num_agents))
+    while len(counts) < num_agents:
+        counts.append(1)
+    counts = np.asarray(counts[:num_agents])
+    num_shards = int(counts.sum())
+    shards = np.array_split(order, num_shards)
+    shard_ids = rng.permutation(num_shards)
+    per_agent, k = [], 0
+    agent_order = rng.permutation(num_agents)
+    agent_counts = counts[np.argsort(agent_order, kind="stable")]
+    for i in range(num_agents):
+        take = shard_ids[k : k + agent_counts[i]]
+        k += agent_counts[i]
+        per_agent.append(np.concatenate([shards[s] for s in take]))
+    return _pad_indices(per_agent)
+
+
+def dirichlet_partition(rng: np.random.Generator, labels: np.ndarray,
+                        num_agents: int, pi: float = 0.5):
+    """Per-class Dirichlet(π) proportions across agents."""
+    classes = np.unique(labels)
+    per_agent = [[] for _ in range(num_agents)]
+    for c in classes:
+        idx = np.where(labels == c)[0]
+        rng.shuffle(idx)
+        props = rng.dirichlet(np.full(num_agents, pi))
+        splits = (np.cumsum(props) * len(idx)).astype(int)[:-1]
+        for i, part in enumerate(np.split(idx, splits)):
+            per_agent[i].extend(part.tolist())
+    per_agent = [np.asarray(a, np.int32) for a in per_agent]
+    # guarantee ≥1 sample per agent
+    for i, a in enumerate(per_agent):
+        if len(a) == 0:
+            per_agent[i] = np.asarray([rng.integers(len(labels))], np.int32)
+    return _pad_indices(per_agent)
+
+
+def grouped_label_partition(rng: np.random.Generator, labels: np.ndarray,
+                            num_agents: int, group_of_agent: np.ndarray,
+                            area_labels: Sequence[Sequence[int]]):
+    """Area-restricted label allocation for the GB-cache case study (§5.5).
+
+    area_labels[g] lists the label classes available in area g (with
+    n-overlap between areas, appendix B.1.1). Within each area, the paper's
+    shard scheme distributes that area's data among its agents.
+    """
+    num_groups = len(area_labels)
+    per_agent = [None] * num_agents
+    for g in range(num_groups):
+        agents = np.where(group_of_agent == g)[0]
+        mask = np.isin(labels, np.asarray(area_labels[g]))
+        idx = np.where(mask)[0]
+        order = idx[np.argsort(labels[idx], kind="stable")]
+        shards = np.array_split(order, 2 * len(agents))
+        sid = rng.permutation(2 * len(agents))
+        for i, a in enumerate(agents):
+            per_agent[a] = np.concatenate(
+                [shards[sid[2 * i]], shards[sid[2 * i + 1]]])
+    cap = max(len(a) for a in per_agent)
+    return _pad_indices(per_agent, cap)
+
+
+def gather_agent_data(arrays: dict, idx: np.ndarray) -> dict:
+    """Materialize per-agent data: {k: v[idx]} with leaves [N, cap, ...]."""
+    return {k: np.asarray(v)[idx] for k, v in arrays.items()}

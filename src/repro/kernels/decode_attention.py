@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: single-token GQA decode attention with online softmax.
+
+The decode-shape hot spot: one query token per sequence attends over a
+[S, KV, hd] KV cache. Memory-bound (the whole cache is read once per
+step); the kernel streams K/V through VMEM in (BLOCK_S, hd) tiles per
+(batch, kv-head) grid cell with flash-style running (m, l, acc) carried in
+VMEM scratch across the sequential innermost grid dimension. Supports a
+sliding-window mask and a dynamic valid length (scalar prefetch).
+
+Block sizing: BLOCK_S=512 rows × hd≤128 lanes ≈ 128 KB per K tile (bf16) —
+K + V + scratch stay well under VMEM; scores are [G, BLOCK_S] with G ≤ 8
+(GQA group fan-out), so the dot runs on the MXU with hd as the contraction.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(meta_ref, q_ref, k_ref, v_ref, out_ref, m_ref, l_ref, acc_ref,
+            *, block_s: int, window: int):
+    s_idx = pl.program_id(2)
+    n_s = pl.num_programs(2)
+    length = meta_ref[0]
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)             # [G, hd]
+    k = k_ref[0, :, 0].astype(jnp.float32)          # [BS, hd]
+    v = v_ref[0, :, 0].astype(jnp.float32)          # [BS, hd]
+    hd = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    pos = s_idx * block_s + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    valid = pos < length
+    if window:
+        valid &= pos > (length - 1 - window)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]                              # [G, 1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)                           # [G, BS]
+    corr = jnp.exp(m_prev - m_new)                   # [G, 1]
+    l_new = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * corr + pv
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(s_idx == n_s - 1)
+    def _finish():
+        out_ref[0, 0] = (acc_ref[...]
+                         / jnp.maximum(l_ref[...], 1e-30)).astype(out_ref.dtype)
+
+
+def decode_attention(q, k, v, length, *, window: int = 0,
+                     block_s: int = 512, interpret: bool = True):
+    """q: [B, KV, G, hd]; k, v: [B, S, KV, hd]; length: [] int32.
+
+    Returns [B, KV, G, hd] float32 attention output.
+    """
+    B, KV, G, hd = q.shape
+    S = k.shape[1]
+    block_s = min(block_s, S)
+    pad = (-S) % block_s
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_s = (S + pad) // block_s
+    meta = jnp.asarray([length], jnp.int32)
+
+    grid = (B, KV, n_s)
+    kernel = functools.partial(_kernel, block_s=block_s, window=window)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, G, hd), lambda b, h, s, meta: (b, h, 0, 0)),
+                pl.BlockSpec((1, block_s, 1, hd),
+                             lambda b, h, s, meta: (b, s, h, 0)),
+                pl.BlockSpec((1, block_s, 1, hd),
+                             lambda b, h, s, meta: (b, s, h, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, G, hd),
+                                   lambda b, h, s, meta: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), jnp.float32),
+        interpret=interpret,
+    )(meta, q, k, v)
+    return out

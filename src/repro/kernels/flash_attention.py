@@ -1,0 +1,125 @@
+"""Pallas TPU kernel: flash (chunked, online-softmax) causal attention for
+the prefill hot-spot — full-sequence GQA with optional sliding window.
+
+Grid: (batch, kv_head, q_blocks, kv_blocks); the innermost kv dimension is
+sequential so the running (m, l, acc) live in VMEM scratch, exactly as in
+decode_attention but with a [BLOCK_Q, hd] query tile per cell. Causality
+is enforced by masking; with a sliding window the mask also cuts the
+lower-left corner. Tiles: q (BLOCK_Q=256) x k/v (BLOCK_K=256) x hd≤128 →
+~128 KB each in bf16; scores are [G*BLOCK_Q, BLOCK_K] on the MXU.
+
+ref.py oracle: repro.models.attention.chunked_attention (pure jnp),
+itself validated against dense softmax in tests.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, out_ref, m_ref, l_ref, acc_ref, *,
+            block_q: int, block_k: int, seq_len: int, window: int,
+            causal: bool):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, :, 0].astype(jnp.float32)    # [BQ, G, hd]
+    k = k_ref[0, :, 0].astype(jnp.float32)    # [BK, hd]
+    v = v_ref[0, :, 0].astype(jnp.float32)    # [BK, hd]
+    BQ, G, hd = q.shape
+    BK = k.shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+
+    qf = q.reshape(BQ * G, hd)
+    s = jax.lax.dot_general(qf, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    s = s.reshape(BQ, G, BK)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (BQ, G, BK), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (BQ, G, BK), 2)
+    valid = k_pos < seq_len
+    if causal:
+        valid &= k_pos <= q_pos
+    if window:
+        valid &= k_pos > (q_pos - window)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]                      # [BQ, G]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=2))
+    p = jnp.exp(s - m_new[..., None])        # [BQ, G, BK]
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=2)
+    pf = p.reshape(BQ * G, BK)
+    pv = jax.lax.dot_general(pf, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * corr[..., None] + pv.reshape(BQ, G, hd)
+    m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[..., None]
+        out_ref[0, :, 0] = out.astype(out_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 256, block_k: int = 256,
+                    interpret: bool = True):
+    """q: [B, S, KV, G, hd]; k, v: [B, S, KV, hd] -> [B, S, KV, G, hd] f32.
+
+    Full-sequence GQA attention with online softmax over KV blocks.
+    """
+    B, S, KV, G, hd = q.shape
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    pad_q = (-S) % block_q
+    pad_k = (-S) % block_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    nq = (S + pad_q) // block_q
+    nk = (S + pad_k) // block_k
+
+    grid = (B, KV, nq, nk)
+    kernel = functools.partial(_kernel, block_q=block_q, block_k=block_k,
+                               seq_len=S, window=window, causal=causal)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=0,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, block_q, 1, G, hd),
+                             lambda b, h, i, j: (b, i, h, 0, 0)),
+                pl.BlockSpec((1, block_k, 1, hd),
+                             lambda b, h, i, j: (b, j, h, 0)),
+                pl.BlockSpec((1, block_k, 1, hd),
+                             lambda b, h, i, j: (b, j, h, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, block_q, 1, G, hd),
+                                   lambda b, h, i, j: (b, i, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((block_q, G), jnp.float32),
+                pltpu.VMEM((block_q, G), jnp.float32),
+                pltpu.VMEM((block_q, G, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, S + pad_q, KV, G, hd),
+                                       jnp.float32),
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :S]

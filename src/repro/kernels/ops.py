@@ -1,0 +1,45 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True because this container is CPU-only; on a
+real TPU runtime set REPRO_PALLAS_COMPILED=1 to run the compiled kernels.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import cache_aggregate as _ca
+from repro.kernels import decode_attention as _da
+
+
+def _interpret() -> bool:
+    return os.environ.get("REPRO_PALLAS_COMPILED", "0") != "1"
+
+
+@functools.partial(jax.jit, static_argnames=("block_d",))
+def cache_aggregate(cache, weights, valid, *, block_d: int = 65536):
+    """Masked weighted reduction over the cache axis: [C, D] -> [D] f32."""
+    return _ca.cache_aggregate(cache, weights, valid, block_d=block_d,
+                               interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_s"))
+def decode_attention(q, k, v, length, *, window: int = 0, block_s: int = 512):
+    """Flash-style single-token GQA attention: [B,KV,G,hd] out (f32)."""
+    return _da.decode_attention(q, k, v, length, window=window,
+                                block_s=block_s, interpret=_interpret())
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "window", "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 256, block_k: int = 256):
+    """Full-sequence flash GQA attention (prefill hot-spot):
+    [B,S,KV,G,hd] -> f32."""
+    from repro.kernels import flash_attention as _fa
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_k=block_k,
+                               interpret=_interpret())

@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def cache_aggregate_ref(cache, weights, valid):
+    """out[d] = Σ_c (weights[c] * valid[c]) * cache[c, d].
+
+    cache: [C, D] (any float dtype); weights, valid: [C] float32.
+    Returns float32 [D].
+    """
+    w = (weights * valid).astype(jnp.float32)
+    return jnp.einsum("c,cd->d", w, cache.astype(jnp.float32))
+
+
+def decode_attention_ref(q, k, v, length, *, window: int = 0):
+    """Single-token GQA attention oracle.
+
+    q: [B, KV, G, hd]; k, v: [B, S, KV, hd]; length: [] int32 valid rows.
+    Returns [B, KV, G, hd] float32.
+    """
+    B, S, KV, hd = k.shape
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    s = jnp.einsum("bkgh,bskh->bkgs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    pos = jnp.arange(S)
+    valid = pos < length
+    if window:
+        valid &= pos > (length - 1 - window)
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgs,bskh->bkgh", p, v.astype(jnp.float32))

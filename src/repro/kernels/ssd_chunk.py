@@ -1,0 +1,105 @@
+"""Pallas TPU kernel: Mamba2/SSD intra-chunk block (arXiv:2405.21060).
+
+The chunked SSD algorithm splits work into (a) dense intra-chunk terms and
+(b) a cheap inter-chunk state recurrence. (a) is the MXU-heavy hot spot:
+
+    att[i,j] = exp(Σ_{j<s≤i} log a_s) · (C_i·B_j) · dt_j   (j ≤ i)
+    y[i]     = Σ_j att[i,j] · x[j]                          [T,T]·[T,P]
+    S_chunk  = Σ_j exp(cum(T)-cum(j)) dt_j · x_j ⊗ B_j      [P,N] state
+
+One grid cell = one (batch, head, chunk): x [T,P], B/C [T,N], log-decay
+cumsum [T] all fit VMEM for T=chunk ≤ 256, P=64, N≤128; the segment-sum
+decay matrix is built in-register from the cumsum differences. The
+inter-chunk scan (sequential, tiny) stays in jnp — fusing a sequential
+recurrence into the kernel would serialize the grid.
+
+Oracle: the pure-jnp intra-chunk math in repro.models.ssm.ssd_chunked.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, b_ref, c_ref, cum_ref, out_ref, state_ref):
+    x = x_ref[0, 0].astype(jnp.float32)      # [T, P]
+    dt = dt_ref[0, 0].astype(jnp.float32)    # [T]
+    B = b_ref[0, 0].astype(jnp.float32)      # [T, N]
+    C = c_ref[0, 0].astype(jnp.float32)      # [T, N]
+    cum = cum_ref[0, 0].astype(jnp.float32)  # [T] cumulative log-decay
+    T = x.shape[0]
+
+    # intra-chunk decay matrix: L[i,j] = exp(cum[i]-cum[j]) for j<=i else 0
+    seg = cum[:, None] - cum[None, :]
+    mask = jax.lax.broadcasted_iota(jnp.int32, (T, T), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (T, T), 1)
+    decay = jnp.where(mask, jnp.exp(seg), 0.0)
+
+    cb = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [T, T]
+    att = decay * cb * dt[None, :]
+    y = jax.lax.dot_general(att, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # [T, P]
+    out_ref[0, 0] = y.astype(out_ref.dtype)
+
+    # chunk state: S = Σ_j w_j x_j ⊗ B_j with w_j = exp(cum[T-1]-cum[j])·dt_j
+    w = jnp.exp(cum[T - 1] - cum) * dt                             # [T]
+    xw = x * w[:, None]                                            # [T, P]
+    state = jax.lax.dot_general(xw, B, (((0,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # [P, N]
+    state_ref[0, 0] = state
+
+
+def ssd_chunk_intra(x, dt, Bm, Cm, log_a, *, interpret: bool = True):
+    """Intra-chunk SSD terms for all chunks at once.
+
+    x: [B, nc, T, H, P]; dt: [B, nc, T, H]; Bm, Cm: [B, nc, T, N];
+    log_a: [B, nc, T, H] per-step log decay.
+    Returns (y_intra [B, nc, T, H, P] f32, s_chunk [B, nc, H, P, N] f32).
+    """
+    Bsz, nc, T, H, P = x.shape
+    N = Bm.shape[-1]
+    cum = jnp.cumsum(log_a, axis=2)          # [B, nc, T, H]
+
+    # layout: one grid cell per (batch, chunk, head)
+    xt = x.transpose(0, 1, 3, 2, 4)          # [B, nc, H, T, P]
+    dtt = dt.transpose(0, 1, 3, 2)           # [B, nc, H, T]
+    cumt = cum.transpose(0, 1, 3, 2)         # [B, nc, H, T]
+    bt = jnp.broadcast_to(Bm[:, :, None], (Bsz, nc, H, T, N))
+    ct = jnp.broadcast_to(Cm[:, :, None], (Bsz, nc, H, T, N))
+
+    flat = lambda a: a.reshape((Bsz * nc, H) + a.shape[3:])
+    xt, dtt, cumt, bt, ct = map(flat, (xt, dtt, cumt, bt, ct))
+
+    grid = (Bsz * nc, H)
+    y, state = pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=0,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, T, P), lambda b, h: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, T), lambda b, h: (b, h, 0)),
+                pl.BlockSpec((1, 1, T, N), lambda b, h: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, T, N), lambda b, h: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, T), lambda b, h: (b, h, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, 1, T, P), lambda b, h: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, P, N), lambda b, h: (b, h, 0, 0)),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((Bsz * nc, H, T, P), jnp.float32),
+            jax.ShapeDtypeStruct((Bsz * nc, H, P, N), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xt, dtt, bt, ct, cumt)
+
+    y = y.reshape(Bsz, nc, H, T, P).transpose(0, 1, 3, 2, 4)
+    state = state.reshape(Bsz, nc, H, P, N)
+    return y, state

@@ -1,0 +1,305 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# (test hook — must still run before jax initializes its backends)
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_DRYRUN_DEVICES"])
+
+"""Multi-pod dry-run: prove every (architecture × input shape × mesh)
+combination lowers and compiles on the production mesh, and extract the
+roofline terms from the compiled artifacts.
+
+Per combination this produces:
+  1. the full scan-based step compiled on the target mesh
+     (memory_analysis proves residency; the collective schedule is real);
+  2. 1-layer / 2-layer UNROLLED compiles whose cost_analysis diff gives
+     exact per-layer FLOPs/bytes/collective-bytes, extrapolated to L
+     (cost_analysis counts while-loop bodies once — see roofline.py).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import registry as cfg_registry
+from repro.configs.base import ModelConfig, get_shape, INPUT_SHAPES
+from repro.launch import specs as specs_lib
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import (RooflineTerms, collective_bytes,
+                                   extrapolate, format_row, model_flops,
+                                   summarize_memory)
+from repro.models import registry as models
+from repro.sharding.rules import (ShardingRules, batch_specs,
+                                  decode_state_specs, param_specs)
+
+FSDP_THRESHOLD = 10e9  # params; above this, shard params over "data" too
+
+
+def _named(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _prepend(spec_tree, axis):
+    return jax.tree_util.tree_map(
+        lambda s: P(axis, *s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def make_rules(cfg: ModelConfig, mesh) -> ShardingRules:
+    ax = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return ShardingRules(
+        model_size=ax["model"], data_size=ax["data"],
+        fsdp=cfg.param_count() > FSDP_THRESHOLD)
+
+
+def _cache_specs(pspecs, multi_pod: bool):
+    mspecs = jax.tree_util.tree_map(
+        lambda s: P(None, *s), pspecs, is_leaf=lambda x: isinstance(x, P))
+    meta = P(None) if not multi_pod else P("pod", None)
+    if multi_pod:
+        mspecs = _prepend(mspecs, "pod")
+    from repro.core.cache import ModelCache
+    return ModelCache(models=mspecs, ts=meta, origin=meta, samples=meta,
+                      group=meta, arrival=meta)
+
+
+def build_lowering(cfg: ModelConfig, shape_name: str, mesh, *,
+                   scan_layers: bool = True, cache_size: int = 3,
+                   kv_chunk: int = 512, rules: ShardingRules = None,
+                   microbatches: int = 1):
+    """Returns (lowered, meta dict). Lowers the step matching shape.kind."""
+    shape = get_shape(shape_name)
+    rules = rules or make_rules(cfg, mesh)
+    multi_pod = "pod" in mesh.axis_names
+    pshapes = specs_lib.param_shapes(cfg)
+    pspecs = param_specs(cfg, pshapes, rules)
+
+    if shape.kind == "train":
+        agents = mesh.devices.shape[0] if multi_pod else 0
+        batch = specs_lib.train_batch_specs(cfg, shape, agents=agents)
+        if multi_pod:
+            per_agent = jax.tree_util.tree_map(
+                lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), batch)
+            bspecs = _prepend(batch_specs(cfg, per_agent, rules), "pod")
+            pshapes = jax.tree_util.tree_map(
+                lambda x: jax.ShapeDtypeStruct((agents,) + x.shape, x.dtype),
+                pshapes)
+            pspecs = _prepend(pspecs, "pod")
+        else:
+            bspecs = batch_specs(cfg, batch, rules)
+        cache_shapes = jax.eval_shape(
+            lambda: steps_lib.init_pod_cache(
+                cfg, specs_lib.param_shapes(cfg), cache_size,
+                agents=agents))
+        cspecs = _cache_specs(param_specs(cfg, specs_lib.param_shapes(cfg),
+                                          rules), multi_pod)
+        step = steps_lib.make_train_step(
+            cfg, scan_layers=scan_layers, multi_pod=multi_pod,
+            microbatches=microbatches, kv_chunk=kv_chunk)
+        jitted = jax.jit(
+            step,
+            in_shardings=(_named(mesh, pspecs), _named(mesh, cspecs),
+                          _named(mesh, bspecs), None),
+            out_shardings=(_named(mesh, pspecs), _named(mesh, cspecs), None))
+        from repro.sharding.context import use_mesh as _use_ctx
+        with mesh, _use_ctx(mesh):
+            lowered = jitted.lower(pshapes, cache_shapes, batch,
+                                   jnp.zeros((), jnp.int32))
+        return lowered, {"kind": "train"}
+
+    if shape.kind == "prefill":
+        batch = specs_lib.prefill_batch_specs(cfg, shape)
+        rules2 = dataclasses.replace(
+            rules, data_size=rules.data_size * (mesh.devices.shape[0]
+                                                if multi_pod else 1))
+        bspecs = batch_specs(cfg, batch, rules2)
+        if multi_pod:
+            bspecs = _split_leading(bspecs)
+        step = steps_lib.make_prefill_step(
+            cfg, max_len=shape.seq_len if not cfg.enc_dec else 512,
+            scan_layers=scan_layers, kv_chunk=kv_chunk)
+        jitted = jax.jit(step, in_shardings=(_named(mesh, pspecs),
+                                             _named(mesh, bspecs)))
+        from repro.sharding.context import use_mesh as _use_ctx
+        with mesh, _use_ctx(mesh):
+            lowered = jitted.lower(pshapes, batch)
+        return lowered, {"kind": "prefill"}
+
+    # decode
+    batch = specs_lib.decode_token_specs(cfg, shape)
+    state = specs_lib.decode_state_shapes(cfg, shape)
+    data_axes = ("pod", "data") if multi_pod else ("data",)
+    data_size = rules.data_size * (mesh.devices.shape[0] if multi_pod else 1)
+    rules2 = dataclasses.replace(rules, data_axis=data_axes, data_size=data_size)
+    sspecs = decode_state_specs(cfg, state, rules2)
+    bspecs = batch_specs(cfg, batch, rules2)
+    step = steps_lib.make_decode_step(cfg, scan_layers=scan_layers)
+    jitted = jax.jit(
+        step,
+        in_shardings=(_named(mesh, pspecs), _named(mesh, sspecs),
+                      _named(mesh, bspecs)),
+        out_shardings=(None, _named(mesh, sspecs)),
+        donate_argnums=(1,))
+    lowered = jitted.lower(pshapes, state, batch)
+    return lowered, {"kind": "decode"}
+
+
+def _split_leading(bspecs):
+    """Shard the leading batch dim over ("pod","data") jointly."""
+    return jax.tree_util.tree_map(
+        lambda s: P(("pod", "data"), *list(s)[1:]) if len(s) and s[0] is not None
+        else s,
+        bspecs, is_leaf=lambda x: isinstance(x, P))
+
+
+def _cost_metrics(compiled) -> dict:
+    ca = compiled.cost_analysis() or {}
+    text = compiled.as_text()
+    coll = collective_bytes(text)
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "coll_bytes": float(sum(coll.values())),
+        **{f"coll_{k}": float(v) for k, v in coll.items()},
+    }
+
+
+def run_one(arch: str, shape_name: str, mesh_kind: str, *,
+            cache_size: int = 3, layers_override: int = 0,
+            extrapolate_layers: bool = True, out_dir: str = "",
+            verbose: bool = True, force_window: int = 0) -> dict:
+    cfg = cfg_registry.get_config(arch)
+    if layers_override:
+        cfg = dataclasses.replace(
+            cfg, n_layers=layers_override,
+            enc_layers=layers_override if cfg.enc_dec else 0)
+    if force_window:
+        cfg = dataclasses.replace(cfg, sliding_window=force_window)
+    shape = get_shape(shape_name)
+    result = {"arch": arch, "shape": shape_name, "mesh": mesh_kind}
+
+    if not cfg_registry.supports_shape(cfg, shape_name):
+        result["status"] = "skip"
+        result["reason"] = cfg_registry.skip_reason(cfg, shape_name)
+        if verbose:
+            print(f"[skip] {arch} × {shape_name}: {result['reason']}")
+        if out_dir:
+            os.makedirs(out_dir, exist_ok=True)
+            with open(os.path.join(
+                    out_dir, f"{arch}_{shape_name}_{mesh_kind}.json"),
+                    "w") as f:
+                json.dump(result, f, indent=1)
+        return result
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = mesh.devices.size
+    t0 = time.time()
+    try:
+        # 1) full scan-based compile: lowering + memory + schedule proof
+        lowered, meta = build_lowering(cfg, shape_name, mesh,
+                                       scan_layers=True,
+                                       cache_size=cache_size)
+        compiled = lowered.compile()
+        mem = summarize_memory(compiled.memory_analysis())
+        full_metrics = _cost_metrics(compiled)
+        result.update(status="ok", compile_s=round(time.time() - t0, 1),
+                      memory=mem, scan_cost=full_metrics)
+        if verbose:
+            print(f"[ok] {arch} × {shape_name} × {mesh_kind}: compiled in "
+                  f"{result['compile_s']}s; "
+                  f"dev bytes={mem['total_bytes_per_device']/2**30:.2f}GiB")
+
+        # 2) per-layer extrapolation with unrolled 2-/3-layer variants
+        # (1L programs can partition degenerately — see roofline.extrapolate)
+        if extrapolate_layers:
+            full_rules = make_rules(cfg, mesh)  # fsdp from the FULL size
+            bases = {}
+            for L in (2, 3):
+                cfg_l = dataclasses.replace(
+                    cfg, n_layers=L, enc_layers=L if cfg.enc_dec else 0)
+                low_l, _ = build_lowering(cfg_l, shape_name, mesh,
+                                          scan_layers=False,
+                                          cache_size=cache_size,
+                                          rules=full_rules)
+                bases[L] = _cost_metrics(low_l.compile())
+            total = extrapolate(bases[2], bases[3], cfg.n_layers)
+            result["layer_extrapolation"] = {
+                "base_2l": bases[2], "base_3l": bases[3], "total": total}
+            terms = RooflineTerms(
+                arch=arch, shape=shape_name, mesh=mesh_kind, chips=chips,
+                hlo_flops=total["flops"], hlo_bytes=total["bytes"],
+                coll_bytes=total["coll_bytes"],
+                coll_breakdown={k[5:]: v for k, v in total.items()
+                                if k.startswith("coll_")},
+                model_flops=model_flops(cfg, shape),
+                bytes_per_device=mem["total_bytes_per_device"] or 0)
+            result["roofline"] = terms.to_dict()
+            if verbose:
+                print("      " + format_row(terms))
+    except Exception as e:  # noqa: BLE001 — dry-run reports failures
+        result.update(status="error", error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-2000:])
+        if verbose:
+            print(f"[ERR] {arch} × {shape_name} × {mesh_kind}: {e}")
+
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        path = os.path.join(out_dir, f"{arch}_{shape_name}_{mesh_kind}.json")
+        with open(path, "w") as f:
+            json.dump(result, f, indent=1, default=str)
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=cfg_registry.ARCH_IDS)
+    ap.add_argument("--shape", choices=[s.name for s in INPUT_SHAPES])
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch × shape) pair")
+    ap.add_argument("--cache-size", type=int, default=3)
+    ap.add_argument("--layers", type=int, default=0,
+                    help="override n_layers (debug)")
+    ap.add_argument("--force-window", type=int, default=0,
+                    help="opt-in SWA variant: overrides sliding_window, "
+                         "unlocking long_500k for dense archs")
+    ap.add_argument("--no-extrapolate", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    pairs = ([(a, s.name) for a in cfg_registry.ARCH_IDS
+              for s in INPUT_SHAPES] if args.all
+             else [(args.arch, args.shape)])
+    results = []
+    for arch, shape in pairs:
+        for mk in meshes:
+            results.append(run_one(
+                arch, shape, mk, cache_size=args.cache_size,
+                layers_override=args.layers,
+                extrapolate_layers=not args.no_extrapolate,
+                out_dir=args.out, force_window=args.force_window))
+    ok = sum(r["status"] == "ok" for r in results)
+    skip = sum(r["status"] == "skip" for r in results)
+    err = sum(r["status"] == "error" for r in results)
+    print(f"\ndry-run summary: {ok} ok, {skip} skip, {err} error "
+          f"of {len(results)}")
+    if err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this
+module never touches jax device state — required because the dry-run
+process force-creates 512 host devices while tests/benches must see 1.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 256 chips (16, 16) over ("data", "model").
+    Multi-pod: 2 pods = 512 chips (2, 16, 16) over ("pod", "data", "model");
+    the "pod" axis carries the DFL agent dimension (one mobile mega-agent
+    per pod) and its collectives ride the inter-pod DCN links."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(devices: int = 8, *, multi_pod: bool = False):
+    """Scaled-down mesh with the same axis structure for CI-sized tests."""
+    if multi_pod:
+        assert devices % 2 == 0
+        return jax.make_mesh((2, devices // 4, 2), ("pod", "data", "model"))
+    return jax.make_mesh((devices // 2, 2), ("data", "model"))

@@ -1,0 +1,86 @@
+"""ShapeDtypeStruct stand-ins for every (architecture × input shape) —
+weak-type-correct, shardable, no device allocation (the dry-run pattern).
+
+Decode shapes lower `serve_step` (ONE token against a seq_len KV cache);
+modality frontends are stubs: VLM gets patch embeddings, audio gets frame
+embeddings (assignment carve-out).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import registry as models
+
+WHISPER_DEC_LEN = 448  # whisper's decoder context (arXiv:2212.04356)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def param_shapes(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda k: models.init_params(cfg, k), jax.random.PRNGKey(0))
+
+
+def train_batch_specs(cfg: ModelConfig, shape: InputShape,
+                      agents: int = 0) -> Dict[str, Any]:
+    """Training inputs. agents > 0 prepends the multi-pod agent axis and
+    splits the global batch across agents."""
+    B = shape.global_batch // max(agents, 1)
+    lead: Tuple[int, ...] = (agents,) if agents else ()
+    cdt = jnp.dtype(cfg.compute_dtype)
+    if cfg.family == "vlm":
+        s_text = shape.seq_len - cfg.image_tokens
+        return {
+            "tokens": _sds(lead + (B, s_text), jnp.int32),
+            "image_embeds": _sds(lead + (B, cfg.image_tokens, cfg.d_model),
+                                 cdt),
+        }
+    if cfg.enc_dec:
+        return {
+            "frames": _sds(lead + (B, shape.seq_len, cfg.d_model), cdt),
+            "tokens": _sds(lead + (B, WHISPER_DEC_LEN), jnp.int32),
+        }
+    return {"tokens": _sds(lead + (B, shape.seq_len), jnp.int32)}
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    B = shape.global_batch
+    cdt = jnp.dtype(cfg.compute_dtype)
+    if cfg.family == "vlm":
+        s_text = shape.seq_len - cfg.image_tokens
+        return {
+            "tokens": _sds((B, s_text), jnp.int32),
+            "image_embeds": _sds((B, cfg.image_tokens, cfg.d_model), cdt),
+        }
+    if cfg.enc_dec:
+        return {"frames": _sds((B, shape.seq_len, cfg.d_model), cdt)}
+    return {"tokens": _sds((B, shape.seq_len), jnp.int32)}
+
+
+def decode_state_shapes(cfg: ModelConfig, shape: InputShape):
+    """Shape stand-ins for the decode state at seq_len cache capacity."""
+    B = shape.global_batch
+    if cfg.enc_dec:
+        from repro.models import encdec
+        hd = cfg.resolved_head_dim
+        kv_shape = (cfg.n_layers, B, shape.seq_len, cfg.n_kv_heads, hd)
+        cross = (cfg.n_layers, B, cfg.enc_context, cfg.n_kv_heads, hd)
+        cdt = jnp.dtype(cfg.compute_dtype)
+        return encdec.EncDecState(
+            k=_sds(kv_shape, cdt), v=_sds(kv_shape, cdt),
+            cross_k=_sds(cross, cdt), cross_v=_sds(cross, cdt),
+            length=_sds((), jnp.int32))
+    from repro.models import transformer
+    return jax.eval_shape(
+        lambda: transformer.init_decode_state(cfg, B, shape.seq_len))
+
+
+def decode_token_specs(cfg: ModelConfig, shape: InputShape):
+    return {"tokens": _sds((shape.global_batch, 1), jnp.int32)}

@@ -1,0 +1,152 @@
+"""Pod-scale step functions lowered by the dry-run and launchers.
+
+train (train_4k)      — one Cached-DFL round step for pod-scale agents:
+                        local SGD step(s) + cache aggregation; in multi-pod
+                        mode additionally the DTN-style model exchange
+                        across the "pod" axis (collective-permute) and the
+                        LRU cache insert.
+prefill (prefill_32k) — full-prompt forward producing the decode state.
+decode (decode_32k, long_500k) — one token against the KV/SSM state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import cache as cache_lib
+from repro.core.aggregate import aggregate as aggregate_models
+from repro.models import registry as models
+
+
+# ---------------------------------------------------------------------------
+# training / DFL round
+# ---------------------------------------------------------------------------
+
+def local_sgd_step(params, batch, cfg: ModelConfig, *, lr: float,
+                   scan_layers: bool = True, remat: bool = False,
+                   microbatches: int = 1, kv_chunk: int = 512):
+    """One SGD step on the local loss (K steps scale this linearly).
+
+    microbatches > 1 splits the batch and accumulates gradients in a
+    lax.scan — the standard activation-memory lever (§Perf)."""
+    if microbatches == 1:
+        loss, grads = jax.value_and_grad(models.loss_fn)(
+            params, cfg, batch, scan_layers=scan_layers, remat=remat,
+            kv_chunk=kv_chunk)
+    else:
+        mb = jax.tree_util.tree_map(
+            lambda x: x.reshape((microbatches, x.shape[0] // microbatches)
+                                + x.shape[1:]), batch)
+
+        def acc_fn(carry, b):
+            loss_i, g_i = jax.value_and_grad(models.loss_fn)(
+                params, cfg, b, scan_layers=scan_layers, remat=remat,
+                kv_chunk=kv_chunk)
+            loss, grads = carry
+            grads = jax.tree_util.tree_map(
+                lambda a, g: a + g.astype(jnp.float32), grads, g_i)
+            return (loss + loss_i, grads), None
+
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss, grads), _ = jax.lax.scan(
+            acc_fn, (jnp.zeros(()), zeros), mb)
+        loss = loss / microbatches
+        grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+    new_params = jax.tree_util.tree_map(
+        lambda p, g: (p.astype(jnp.float32)
+                      - lr * g.astype(jnp.float32)).astype(p.dtype),
+        params, grads)
+    return new_params, loss
+
+
+def make_train_step(cfg: ModelConfig, *, lr: float = 0.1,
+                    scan_layers: bool = True, remat: bool = True,
+                    multi_pod: bool = False, tau_max: int = 10,
+                    own_samples: float = 1.0, microbatches: int = 1,
+                    kv_chunk: int = 512):
+    """Build the Cached-DFL round step lowered for the train shape.
+
+    Single-pod signature:  (params, cache, batch, t) -> (params, cache, loss)
+    Multi-pod: identical but every input has a leading agent axis [A] and
+    the step performs the cross-pod model exchange.
+    """
+
+    def single(params, cache: cache_lib.ModelCache, batch):
+        tilde, loss = local_sgd_step(params, batch, cfg, lr=lr,
+                                     scan_layers=scan_layers, remat=remat,
+                                     microbatches=microbatches,
+                                     kv_chunk=kv_chunk)
+        new_params = aggregate_models(tilde, own_samples, cache)
+        return tilde, new_params, loss
+
+    if not multi_pod:
+        def step(params, cache, batch, t):
+            del t
+            _, new_params, loss = single(params, cache, batch)
+            return new_params, cache, loss
+        return step
+
+    def step(params, cache, batch, t):
+        A = jax.tree_util.tree_leaves(params)[0].shape[0]
+        tilde, _, loss = jax.vmap(single)(params, cache, batch)
+        # DTN model hand-off between pods: neighbor exchange over "pod"
+        partner = jax.tree_util.tree_map(
+            lambda x: jnp.roll(x, 1, axis=0), tilde)
+        partner_ids = jnp.roll(jnp.arange(A, dtype=jnp.int32), 1)
+        insert = functools.partial(cache_lib.insert, tau_max=tau_max)
+        cache = jax.vmap(insert)(
+            cache, partner,
+            jnp.full((A,), t, jnp.int32), partner_ids,
+            jnp.full((A,), own_samples, jnp.float32),
+            jnp.zeros((A,), jnp.int32))
+        new_params = jax.vmap(
+            lambda p, c: aggregate_models(p, own_samples, c))(tilde, cache)
+        return new_params, cache, jnp.mean(loss)
+
+    return step
+
+
+def init_pod_cache(cfg: ModelConfig, params, cache_size: int,
+                   agents: int = 0):
+    """Device-resident cache for pod-scale agents (leaves [C, ...] or
+    [A, C, ...])."""
+    cache = cache_lib.init_cache(params, cache_size)
+    if agents:
+        cache = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (agents,) + x.shape), cache)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg: ModelConfig, *, max_len: Optional[int] = None,
+                      scan_layers: bool = True, kv_chunk: int = 512):
+    def step(params, batch):
+        logits, state = models.prefill(params, cfg, batch, max_len=max_len,
+                                       scan_layers=scan_layers,
+                                       kv_chunk=kv_chunk)
+        if logits is None:  # enc-dec: no token logits at prefill
+            return state
+        # serving returns only the last position's logits
+        return logits[:, -1], state
+    return step
+
+
+def make_decode_step(cfg: ModelConfig, *, use_kernel: bool = False,
+                     scan_layers: bool = True):
+    def step(params, state, tokens):
+        if isinstance(tokens, dict):
+            tokens = tokens["tokens"]
+        logits, new_state = models.decode_step(
+            params, cfg, state, tokens, use_kernel=use_kernel,
+            scan_layers=scan_layers)
+        return logits, new_state
+    return step

@@ -1,0 +1,4 @@
+from repro.mobility.manhattan import (  # noqa: F401
+    MobilityState, init_mobility, positions, simulate_epoch,
+    partners_from_contacts, make_bands,
+)

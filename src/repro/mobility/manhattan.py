@@ -1,0 +1,193 @@
+"""Manhattan grid mobility model (paper §4.4, after Bai et al. IMPORTANT).
+
+Vehicles move along a W×H grid of streets. At an intersection a vehicle
+continues straight with probability 0.5 and turns into each other valid
+road with equal share of the remainder (no U-turns; U-turn only at a
+dead-end). Contacts = pairwise distance below `comm_range`.
+
+The INRIX Manhattan map is not redistributable; we use a uniform grid with
+realistic Manhattan block dimensions (~274 m between avenues, ~80 m between
+streets) — the mobility statistics the paper relies on (meeting rate vs
+speed/epoch time) are reproduced by the grid topology.
+
+Fully vectorized + jit-able; an epoch of simulation is one lax.scan.
+Optional area bands (uptown/midtown/downtown) restrict vehicles for the
+group-based caching case study (§5.5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MobilityConfig
+
+# direction encoding: 0=+x (E), 1=+y (N), 2=-x (W), 3=-y (S)
+_DX = jnp.array([1, 0, -1, 0], jnp.int32)
+_DY = jnp.array([0, 1, 0, -1], jnp.int32)
+
+
+@dataclasses.dataclass
+class MobilityState:
+    node: jax.Array    # [N, 2] int32 — intersection the vehicle came from
+    dirn: jax.Array    # [N] int32 — current direction of travel
+    frac: jax.Array    # [N] float32 — fraction of current edge traversed
+    band: jax.Array    # [N] int32 — area restriction (-1 = free vehicle)
+
+jax.tree_util.register_dataclass(
+    MobilityState, data_fields=["node", "dirn", "frac", "band"],
+    meta_fields=[])
+
+
+def make_bands(num_agents: int, num_bands: int, free_per_band: int = 3,
+               key=None):
+    """Assign agents to area bands; a few 'free' vehicles roam anywhere.
+
+    Mirrors the paper's 3-area setup (30 restricted + 3-4 free per area).
+    Returns band assignment [N] (-1 = free) and data-group [N] (free
+    vehicles still have a home data group).
+    """
+    per = num_agents // num_bands
+    group = jnp.repeat(jnp.arange(num_bands, dtype=jnp.int32), per)
+    if group.shape[0] < num_agents:
+        extra = jnp.arange(num_agents - group.shape[0], dtype=jnp.int32) % num_bands
+        group = jnp.concatenate([group, extra])
+    band = group.copy()
+    # first `free_per_band` agents of each band are free-roaming
+    idx = jnp.arange(num_agents)
+    start = (group * per)
+    band = jnp.where(idx - start < free_per_band, -1, band)
+    return band, group
+
+
+def _band_limits(cfg: MobilityConfig, band, num_bands: int = 3):
+    """y-node range [lo, hi) for a band; free vehicles get the whole grid."""
+    h = cfg.grid_h // num_bands
+    lo = jnp.where(band < 0, 0, band * h)
+    hi = jnp.where(band < 0, cfg.grid_h, jnp.where(
+        band == num_bands - 1, cfg.grid_h, (band + 1) * h))
+    return lo, hi
+
+
+def init_mobility(key, num_agents: int, cfg: MobilityConfig,
+                  band: Optional[jax.Array] = None) -> MobilityState:
+    if band is None:
+        band = jnp.full((num_agents,), -1, jnp.int32)
+    k1, k2, k3 = jax.random.split(key, 3)
+    lo, hi = _band_limits(cfg, band)
+    nx = jax.random.randint(k1, (num_agents,), 0, cfg.grid_w)
+    ny = lo + jax.random.randint(k2, (num_agents,), 0, 1_000_000) % jnp.maximum(hi - lo, 1)
+    node = jnp.stack([nx, ny], axis=1).astype(jnp.int32)
+    dirn = jax.random.randint(k3, (num_agents,), 0, 4).astype(jnp.int32)
+    state = MobilityState(node=node, dirn=dirn,
+                          frac=jnp.zeros((num_agents,), jnp.float32),
+                          band=band.astype(jnp.int32))
+    # ensure initial directions are valid
+    return dataclasses.replace(
+        state, dirn=_choose_direction(key, state, cfg, force=True))
+
+
+def _valid_dirs(node, band, cfg: MobilityConfig):
+    """[N, 4] bool — which directions stay on the grid (and in the band)."""
+    x, y = node[:, 0], node[:, 1]
+    lo, hi = _band_limits(cfg, band)
+    tx = x[:, None] + _DX[None, :]
+    ty = y[:, None] + _DY[None, :]
+    ok = (tx >= 0) & (tx < cfg.grid_w) & (ty >= lo[:, None]) & (ty < hi[:, None])
+    return ok
+
+
+def _choose_direction(key, state: MobilityState, cfg: MobilityConfig,
+                      force: bool = False):
+    """Sample the next direction at an intersection (paper's turn rule)."""
+    N = state.dirn.shape[0]
+    ok = _valid_dirs(state.node, state.band, cfg)
+    straight = state.dirn
+    reverse = (state.dirn + 2) % 4
+    # candidate probabilities
+    p = jnp.where(ok, 1.0, 0.0)
+    # exclude reverse unless it is the only option
+    only_reverse = jnp.sum(p, axis=1) <= p[jnp.arange(N), reverse]
+    p = p.at[jnp.arange(N), reverse].set(
+        jnp.where(only_reverse, p[jnp.arange(N), reverse], 0.0))
+    straight_ok = ok[jnp.arange(N), straight] & ~only_reverse
+    # straight gets p_straight; others share the remainder
+    n_turns = jnp.maximum(jnp.sum(p, axis=1) - straight_ok, 1e-9)
+    turn_p = jnp.where(straight_ok, (1 - cfg.p_straight) / n_turns,
+                       1.0 / jnp.maximum(jnp.sum(p, axis=1), 1e-9))
+    probs = p * turn_p[:, None]
+    probs = probs.at[jnp.arange(N), straight].set(
+        jnp.where(straight_ok, cfg.p_straight, probs[jnp.arange(N), straight]))
+    probs = probs / jnp.maximum(jnp.sum(probs, axis=1, keepdims=True), 1e-9)
+    return jax.random.categorical(key, jnp.log(probs + 1e-12), axis=1).astype(
+        jnp.int32)
+
+
+def _edge_len(dirn, cfg: MobilityConfig):
+    return jnp.where((dirn % 2) == 0, cfg.block_w, cfg.block_h)
+
+
+def step(state: MobilityState, key, cfg: MobilityConfig) -> MobilityState:
+    """Advance all vehicles by cfg.step_seconds."""
+    dist = cfg.speed * cfg.step_seconds
+    frac = state.frac + dist / _edge_len(state.dirn, cfg)
+    arrived = frac >= 1.0
+    new_node = jnp.where(
+        arrived[:, None],
+        state.node + jnp.stack([_DX[state.dirn], _DY[state.dirn]], 1),
+        state.node)
+    state = dataclasses.replace(state, node=new_node,
+                                frac=jnp.where(arrived, 0.0, frac))
+    new_dir = _choose_direction(key, state, cfg)
+    return dataclasses.replace(
+        state, dirn=jnp.where(arrived, new_dir, state.dirn))
+
+
+def positions(state: MobilityState, cfg: MobilityConfig) -> jax.Array:
+    """[N, 2] positions in meters."""
+    base = state.node.astype(jnp.float32) * jnp.array(
+        [cfg.block_w, cfg.block_h])
+    off = state.frac[:, None] * _edge_len(state.dirn, cfg)[:, None]
+    dvec = jnp.stack([_DX[state.dirn], _DY[state.dirn]], 1).astype(jnp.float32)
+    return base + off * dvec
+
+
+def contacts_now(state: MobilityState, cfg: MobilityConfig) -> jax.Array:
+    """[N, N] bool symmetric contact matrix (diag False)."""
+    pos = positions(state, cfg)
+    d2 = jnp.sum((pos[:, None] - pos[None, :]) ** 2, axis=-1)
+    within = d2 <= cfg.comm_range ** 2
+    return within & ~jnp.eye(pos.shape[0], dtype=bool)
+
+
+def simulate_epoch(state: MobilityState, key, cfg: MobilityConfig,
+                   seconds: float) -> Tuple[MobilityState, jax.Array]:
+    """Run one epoch; returns union contact matrix over all sub-steps."""
+    n_steps = max(1, int(seconds / cfg.step_seconds))
+    keys = jax.random.split(key, n_steps)
+
+    def body(carry, k):
+        st, met = carry
+        st = step(st, k, cfg)
+        met = met | contacts_now(st, cfg)
+        return (st, met), None
+
+    N = state.dirn.shape[0]
+    met0 = jnp.zeros((N, N), bool)
+    (state, met), _ = jax.lax.scan(body, (state, met0), keys)
+    return state, met
+
+
+def partners_from_contacts(met: jax.Array, max_partners: int) -> jax.Array:
+    """[N, D] partner ids from a contact matrix, -1 padded.
+
+    Deterministic: lowest agent ids first (matches a fixed D2D pairing
+    order); capped at D contacts per epoch (radio budget).
+    """
+    N = met.shape[0]
+    # rank contacts: non-contacts pushed to the end
+    key = jnp.where(met, jnp.arange(N)[None, :], N + 1)
+    order = jnp.sort(key, axis=1)[:, :max_partners]
+    return jnp.where(order <= N, order, -1).astype(jnp.int32)

@@ -1,0 +1,210 @@
+"""GQA attention: memory-efficient full-sequence (flash-style, chunked KV)
+and single-token decode against a KV cache. Optional sliding window.
+
+Shapes use the grouped layout to avoid materializing repeated KV heads:
+    q: [B, S, KV, G, hd]   (G = n_heads // n_kv_heads)
+    k,v: [B, S, KV, hd]
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_rope, dense_init
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg: ModelConfig, dtype=jnp.float32):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(kq, (d, cfg.n_heads * hd), dtype=dtype),
+        "wk": dense_init(kk, (d, cfg.n_kv_heads * hd), dtype=dtype),
+        "wv": dense_init(kv, (d, cfg.n_kv_heads * hd), dtype=dtype),
+        "wo": dense_init(ko, (cfg.n_heads * hd, d), dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), dtype)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+    return p
+
+
+def qkv_project(params, cfg: ModelConfig, x, positions, rope: bool = True):
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = x @ params["wq"].astype(x.dtype)
+    k = x @ params["wk"].astype(x.dtype)
+    v = x @ params["wv"].astype(x.dtype)
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    q = q.reshape(B, S, cfg.n_heads, hd)
+    k = k.reshape(B, S, cfg.n_kv_heads, hd)
+    v = v.reshape(B, S, cfg.n_kv_heads, hd)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = q.reshape(B, S, cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads, hd)
+    return q, k, v
+
+
+def chunked_attention(q, k, v, *, causal: bool, window: int = 0,
+                      kv_chunk: int = 512, q_offset: int = 0):
+    """Flash-style attention: scan over KV chunks with online softmax.
+
+    q: [B, S, KV, G, hd]; k, v: [B, T, KV, hd]. Memory is O(S * kv_chunk)
+    instead of O(S * T). `window` > 0 restricts to a sliding window.
+    """
+    B, S, KV, G, hd = q.shape
+    T = k.shape[1]
+    kv_chunk = min(kv_chunk, T)
+    n_chunks = (T + kv_chunk - 1) // kv_chunk
+    pad = n_chunks * kv_chunk - T
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, n_chunks, kv_chunk, KV, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, kv_chunk, KV, hd).transpose(1, 0, 2, 3, 4)
+
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    q_pos = q_offset + jnp.arange(S)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        idx, k_blk, v_blk = inp
+        k_pos = idx * kv_chunk + jnp.arange(kv_chunk)
+        # scores: [B, S, KV, G, C]
+        s = jnp.einsum("bskgh,bckh->bskgc", q, k_blk,
+                       preferred_element_type=jnp.float32) * scale
+        valid = jnp.broadcast_to(k_pos[None, :] < T, (S, kv_chunk))
+        if causal:
+            valid &= k_pos[None, :] <= q_pos[:, None]
+        if window:
+            valid &= k_pos[None, :] > (q_pos[:, None] - window)
+        s = jnp.where(valid[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bskgc,bckh->bskgh", p.astype(v_blk.dtype), v_blk,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, S, KV, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, S, KV, G), jnp.float32)
+    a0 = jnp.zeros((B, S, KV, G, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (jnp.arange(n_chunks), kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+def full_attention_forward(params, cfg: ModelConfig, x, positions=None, *,
+                           causal: bool = True, kv_chunk: int = 512):
+    """Complete attention block forward for train/prefill (returns y, (k, v))."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q, k, v = qkv_project(params, cfg, x, positions, rope=not cfg.enc_dec)
+    out = chunked_attention(q, k, v, causal=causal,
+                            window=cfg.sliding_window, kv_chunk=kv_chunk)
+    out = out.reshape(B, S, cfg.n_heads * cfg.resolved_head_dim)
+    return out @ params["wo"].astype(x.dtype), (k, v)
+
+
+def decode_attention_ref(q, k_cache, v_cache, cache_len, *, window: int = 0):
+    """Single-token GQA attention against a KV cache (pure-jnp oracle).
+
+    q: [B, KV, G, hd]; caches: [B, Smax, KV, hd]; cache_len: [] int32 —
+    number of valid cache positions (the new token's K/V already written).
+    """
+    B, Smax, KV, hd = k_cache.shape
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    s = jnp.einsum("bkgh,bskh->bkgs", q, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(Smax)
+    valid = pos < cache_len
+    if window:
+        valid &= pos > (cache_len - 1 - window)
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+@dataclasses.dataclass
+class AttnKVCache:
+    """Static-shape KV cache for autoregressive decode."""
+    k: jax.Array  # [L, B, Smax, KV, hd]
+    v: jax.Array
+    length: jax.Array  # [] int32: #valid positions
+
+jax.tree_util.register_dataclass(
+    AttnKVCache, data_fields=["k", "v", "length"], meta_fields=[])
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, n_layers=None,
+                  dtype=jnp.bfloat16) -> AttnKVCache:
+    L = cfg.n_layers if n_layers is None else n_layers
+    shape = (L, batch, max_len, cfg.n_kv_heads, cfg.resolved_head_dim)
+    return AttnKVCache(
+        k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+        length=jnp.zeros((), jnp.int32))
+
+
+def decode_attention_block(params, cfg: ModelConfig, x, layer_k, layer_v,
+                           length, *, use_kernel: bool = False):
+    """One-token attention for a single layer.
+
+    x: [B, 1, d]; layer_k/v: [B, Smax, KV, hd]; length: cache entries already
+    valid BEFORE this token. Returns (y [B,1,d], new_k, new_v).
+    """
+    B = x.shape[0]
+    hd = cfg.resolved_head_dim
+    pos = length[None, None] * jnp.ones((B, 1), jnp.int32)
+    q, k, v = qkv_project(params, cfg, x, pos, rope=not cfg.enc_dec)
+    layer_k = jax.lax.dynamic_update_slice(
+        layer_k, k.astype(layer_k.dtype), (0, length, 0, 0))
+    layer_v = jax.lax.dynamic_update_slice(
+        layer_v, v.astype(layer_v.dtype), (0, length, 0, 0))
+    q1 = q[:, 0]  # [B, KV, G, hd]
+    if use_kernel:
+        from repro.kernels import ops as kops
+        out = kops.decode_attention(q1, layer_k, layer_v, length + 1,
+                                    window=cfg.sliding_window)
+    else:
+        out = decode_attention_ref(q1, layer_k, layer_v, length + 1,
+                                   window=cfg.sliding_window)
+    out = out.reshape(B, 1, cfg.n_heads * hd).astype(x.dtype)
+    return out @ params["wo"].astype(x.dtype), layer_k, layer_v
+
+
+def cross_attention_forward(params, cfg: ModelConfig, x, enc_k, enc_v):
+    """Decoder cross-attention over (precomputed) encoder K/V. x: [B,S,d]."""
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = (x @ params["wq"].astype(x.dtype)).reshape(
+        B, S, cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads, hd)
+    out = chunked_attention(q, enc_k, enc_v, causal=False)
+    out = out.reshape(B, S, cfg.n_heads * hd)
+    return out @ params["wo"].astype(x.dtype)
+
+
+def encode_kv(params, cfg: ModelConfig, enc_out):
+    """Precompute cross-attention K/V from encoder output."""
+    B, T, _ = enc_out.shape
+    hd = cfg.resolved_head_dim
+    k = (enc_out @ params["wk"].astype(enc_out.dtype)).reshape(
+        B, T, cfg.n_kv_heads, hd)
+    v = (enc_out @ params["wv"].astype(enc_out.dtype)).reshape(
+        B, T, cfg.n_kv_heads, hd)
+    return k, v

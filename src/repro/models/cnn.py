@@ -1,0 +1,88 @@
+"""The paper's own models (Tables 4-6): MNIST CNN, FashionMNIST CNN, and a
+mini-ResNet stand-in for CIFAR — pure-functional JAX with params pytrees.
+
+These are the models the Cached-DFL fleet trains in the reproduction
+benchmarks; they must be small enough for a 100-vehicle CPU simulation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_models import CNNConfig
+
+
+def _conv_init(key, k, cin, cout):
+    scale = 1.0 / np.sqrt(k * k * cin)
+    return scale * jax.random.truncated_normal(key, -2, 2, (k, k, cin, cout),
+                                               jnp.float32)
+
+
+def _conv(x, w, stride=1, padding="SAME"):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _maxpool(x):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def init_params(cfg: CNNConfig, key) -> dict:
+    keys = jax.random.split(key, len(cfg.conv_channels) + 3)
+    params = {"conv": [], "scale": [], "bias": []}
+    cin = cfg.in_channels
+    for i, cout in enumerate(cfg.conv_channels):
+        params["conv"].append(_conv_init(keys[i], cfg.kernel, cin, cout))
+        params["scale"].append(jnp.ones((cout,)))
+        params["bias"].append(jnp.zeros((cout,)))
+        cin = cout
+    hw = cfg.image_hw // (2 ** len(cfg.conv_channels))
+    flat = hw * hw * cfg.conv_channels[-1]
+    if cfg.fc_hidden:
+        params["fc1"] = 1 / np.sqrt(flat) * jax.random.normal(
+            keys[-3], (flat, cfg.fc_hidden))
+        params["fc1_b"] = jnp.zeros((cfg.fc_hidden,))
+        params["fc2"] = 1 / np.sqrt(cfg.fc_hidden) * jax.random.normal(
+            keys[-2], (cfg.fc_hidden, cfg.num_classes))
+    else:
+        params["fc2"] = 1 / np.sqrt(flat) * jax.random.normal(
+            keys[-2], (flat, cfg.num_classes))
+    params["fc2_b"] = jnp.zeros((cfg.num_classes,))
+    return params
+
+
+def _norm(x, scale, bias, enabled):
+    if not enabled:
+        return x + bias
+    mu = jnp.mean(x, axis=(0, 1, 2), keepdims=True)
+    var = jnp.var(x, axis=(0, 1, 2), keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-5) * scale + bias
+
+
+def forward(params, cfg: CNNConfig, images) -> jax.Array:
+    """images: [B, H, W, C] -> logits [B, num_classes]."""
+    x = images
+    for i in range(len(cfg.conv_channels)):
+        x = _conv(x, params["conv"][i])
+        x = _norm(x, params["scale"][i], params["bias"][i], cfg.batch_norm)
+        x = jax.nn.relu(x)
+        x = _maxpool(x)
+    x = x.reshape(x.shape[0], -1)
+    if cfg.fc_hidden:
+        x = jax.nn.relu(x @ params["fc1"] + params["fc1_b"])
+    return x @ params["fc2"] + params["fc2_b"]
+
+
+def loss_fn(params, cfg: CNNConfig, images, labels):
+    logits = forward(params, cfg, images)
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
+    return nll
+
+
+def accuracy(params, cfg: CNNConfig, images, labels):
+    logits = forward(params, cfg, images)
+    return jnp.mean(jnp.argmax(logits, -1) == labels)

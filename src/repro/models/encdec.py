@@ -1,0 +1,217 @@
+"""Encoder-decoder transformer (whisper-small backbone).
+
+The mel-spectrogram + conv frontend is a STUB per the assignment:
+callers provide precomputed frame embeddings [B, frames, d_model].
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.layers import (dense_init, embed_init, init_mlp, mlp,
+                                 rms_norm, sinusoidal_positions)
+
+
+def _init_enc_block(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": jnp.ones((cfg.d_model,), dtype),
+        "attn": attn.init_attention(k1, cfg, dtype),
+        "norm2": jnp.ones((cfg.d_model,), dtype),
+        "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _init_dec_block(key, cfg, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "norm1": jnp.ones((cfg.d_model,), dtype),
+        "self_attn": attn.init_attention(k1, cfg, dtype),
+        "norm_x": jnp.ones((cfg.d_model,), dtype),
+        "cross_attn": attn.init_attention(k2, cfg, dtype),
+        "norm2": jnp.ones((cfg.d_model,), dtype),
+        "mlp": init_mlp(k3, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    dtype = jnp.dtype(cfg.param_dtype)
+    ke, kd, kt, kh = jax.random.split(key, 4)
+    enc_keys = jax.random.split(ke, cfg.enc_layers)
+    dec_keys = jax.random.split(kd, cfg.n_layers)
+    return {
+        "token_embed": embed_init(kt, cfg.vocab, cfg.d_model, dtype),
+        "enc_blocks": jax.vmap(lambda k: _init_enc_block(k, cfg, dtype))(enc_keys),
+        "enc_norm": jnp.ones((cfg.d_model,), dtype),
+        "dec_blocks": jax.vmap(lambda k: _init_dec_block(k, cfg, dtype))(dec_keys),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "lm_head": dense_init(kh, (cfg.d_model, cfg.vocab), dtype=dtype),
+    }
+
+
+def encode(params, cfg: ModelConfig, frames, *, kv_chunk: int = 512,
+           scan_layers: bool = True, remat: bool = False):
+    """frames: [B, T, d_model] (stubbed conv frontend output) -> [B, T, d]."""
+    dtype = jnp.dtype(cfg.compute_dtype)
+    T = frames.shape[1]
+    x = frames.astype(dtype) + sinusoidal_positions(T, cfg.d_model).astype(dtype)
+    positions = jnp.arange(T)[None, :]
+
+    def body(x, bp):
+        h = rms_norm(x, bp["norm1"].astype(x.dtype), cfg.norm_eps)
+        a, _ = attn.full_attention_forward(bp["attn"], cfg, h, positions,
+                                           causal=False, kv_chunk=kv_chunk)
+        x = x + a
+        h = rms_norm(x, bp["norm2"].astype(x.dtype), cfg.norm_eps)
+        return x + mlp(bp["mlp"], h), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    if scan_layers:
+        x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    else:
+        for i in range(cfg.enc_layers):
+            bp = jax.tree_util.tree_map(lambda t, i=i: t[i], params["enc_blocks"])
+            x, _ = body(x, bp)
+    return rms_norm(x, params["enc_norm"].astype(x.dtype), cfg.norm_eps)
+
+
+def _dec_block(bp, cfg, x, positions, enc_kv, kv_chunk):
+    h = rms_norm(x, bp["norm1"].astype(x.dtype), cfg.norm_eps)
+    a, kv = attn.full_attention_forward(bp["self_attn"], cfg, h, positions,
+                                        kv_chunk=kv_chunk)
+    x = x + a
+    h = rms_norm(x, bp["norm_x"].astype(x.dtype), cfg.norm_eps)
+    x = x + attn.cross_attention_forward(bp["cross_attn"], cfg, h, *enc_kv)
+    h = rms_norm(x, bp["norm2"].astype(x.dtype), cfg.norm_eps)
+    return x + mlp(bp["mlp"], h), kv
+
+
+def decode_train(params, cfg: ModelConfig, tokens, enc_out, *,
+                 kv_chunk: int = 512, scan_layers: bool = True,
+                 remat: bool = False):
+    """Teacher-forced decoder forward -> logits [B, S, vocab]."""
+    dtype = jnp.dtype(cfg.compute_dtype)
+    S = tokens.shape[1]
+    x = params["token_embed"][tokens].astype(dtype)
+    x = x + sinusoidal_positions(S, cfg.d_model).astype(dtype)
+    positions = jnp.arange(S)[None, :]
+
+    def body(x, bp):
+        enc_kv = attn.encode_kv(bp["cross_attn"], cfg, enc_out)
+        x, _ = _dec_block(bp, cfg, x, positions, enc_kv, kv_chunk)
+        return x, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    if scan_layers:
+        x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+    else:
+        for i in range(cfg.n_layers):
+            bp = jax.tree_util.tree_map(lambda t, i=i: t[i], params["dec_blocks"])
+            x, _ = body(x, bp)
+    x = rms_norm(x, params["final_norm"].astype(x.dtype), cfg.norm_eps)
+    return x @ params["lm_head"].astype(x.dtype)
+
+
+def forward(params, cfg: ModelConfig, frames, tokens, **kw):
+    """Full enc-dec forward for training. Returns (logits, aux=0)."""
+    enc_out = encode(params, cfg, frames,
+                     scan_layers=kw.get("scan_layers", True),
+                     kv_chunk=kw.get("kv_chunk", 512),
+                     remat=kw.get("remat", False))
+    logits = decode_train(params, cfg, tokens, enc_out,
+                          scan_layers=kw.get("scan_layers", True),
+                          kv_chunk=kw.get("kv_chunk", 512),
+                          remat=kw.get("remat", False))
+    return logits, jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class EncDecState:
+    k: jax.Array                 # [L, B, Smax, KV, hd] decoder self-attn
+    v: jax.Array
+    cross_k: jax.Array           # [L, B, T, KV, hd] precomputed from encoder
+    cross_v: jax.Array
+    length: jax.Array
+
+jax.tree_util.register_dataclass(
+    EncDecState, data_fields=["k", "v", "cross_k", "cross_v", "length"],
+    meta_fields=[])
+
+
+def init_serve_state(params, cfg: ModelConfig, enc_out, batch: int,
+                     max_len: int, dtype=None) -> EncDecState:
+    dtype = dtype or jnp.dtype(cfg.compute_dtype)
+    hd = cfg.resolved_head_dim
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, hd)
+
+    def per_layer(bp):
+        return attn.encode_kv(bp["cross_attn"], cfg, enc_out)
+
+    ck, cv = jax.vmap(per_layer)(params["dec_blocks"])
+    return EncDecState(
+        k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+        cross_k=ck.astype(dtype), cross_v=cv.astype(dtype),
+        length=jnp.zeros((), jnp.int32))
+
+
+def decode_step(params, cfg: ModelConfig, state: EncDecState, tokens, *,
+                use_kernel: bool = False):
+    """One decoder token against self KV cache + fixed encoder context."""
+    dtype = jnp.dtype(cfg.compute_dtype)
+    B = tokens.shape[0]
+    hd = cfg.resolved_head_dim
+    length = state.length
+    x = params["token_embed"][tokens].astype(dtype)
+    pos_emb = sinusoidal_positions(state.k.shape[2], cfg.d_model)
+    x = x + jax.lax.dynamic_slice_in_dim(pos_emb, length, 1)[None].astype(dtype)
+
+    def layer(x, xs):
+        bp, kc, vc, ck, cv = xs
+        h = rms_norm(x, bp["norm1"].astype(x.dtype), cfg.norm_eps)
+        pos = length[None, None] * jnp.ones((B, 1), jnp.int32)
+        q, k, v = attn.qkv_project(bp["self_attn"], cfg, h, pos, rope=False)
+        kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype),
+                                          (0, length, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype),
+                                          (0, length, 0, 0))
+        if use_kernel:
+            from repro.kernels import ops as kops
+            a = kops.decode_attention(q[:, 0], kc, vc, length + 1)
+        else:
+            a = attn.decode_attention_ref(q[:, 0], kc, vc, length + 1)
+        a = a.reshape(B, 1, cfg.n_heads * hd).astype(x.dtype)
+        x = x + a @ bp["self_attn"]["wo"].astype(x.dtype)
+
+        h = rms_norm(x, bp["norm_x"].astype(x.dtype), cfg.norm_eps)
+        q = (h @ bp["cross_attn"]["wq"].astype(h.dtype)).reshape(
+            B, cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads, hd)
+        T = ck.shape[1]
+        if use_kernel:
+            from repro.kernels import ops as kops
+            ca = kops.decode_attention(q, ck, cv, jnp.asarray(T, jnp.int32))
+        else:
+            ca = attn.decode_attention_ref(q, ck, cv, jnp.asarray(T, jnp.int32))
+        ca = ca.reshape(B, 1, cfg.n_heads * hd).astype(x.dtype)
+        x = x + ca @ bp["cross_attn"]["wo"].astype(x.dtype)
+
+        h = rms_norm(x, bp["norm2"].astype(x.dtype), cfg.norm_eps)
+        x = x + mlp(bp["mlp"], h)
+        return x, (kc, vc)
+
+    x, (nk, nv) = jax.lax.scan(
+        layer, x,
+        (params["dec_blocks"], state.k, state.v, state.cross_k, state.cross_v))
+    x = rms_norm(x, params["final_norm"].astype(x.dtype), cfg.norm_eps)
+    logits = x @ params["lm_head"].astype(x.dtype)
+    return logits, dataclasses.replace(state, k=nk, v=nv, length=length + 1)

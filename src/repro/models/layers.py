@@ -1,0 +1,76 @@
+"""Shared neural-net building blocks (pure functional, params as pytrees)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dense_init(key, shape, scale=None, dtype=jnp.float32):
+    """Truncated-normal fan-in init."""
+    if scale is None:
+        scale = 1.0 / np.sqrt(shape[0])
+    return scale * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+def embed_init(key, vocab, d, dtype=jnp.float32):
+    return jax.random.normal(key, (vocab, d), dtype) * 0.02
+
+
+def rms_norm(x, weight, eps=1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * weight).astype(dtype)
+
+
+def layer_norm(x, weight, bias, eps=1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * weight + bias).astype(dtype)
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., S, H, hd]; positions: broadcastable to [..., S]."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    cos = jnp.cos(angles)[..., None, :]  # [..., S, 1, hd/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(length: int, d: int):
+    pos = np.arange(length)[:, None]
+    dim = np.arange(d)[None, :]
+    angle = pos / np.power(10000.0, 2 * (dim // 2) / d)
+    enc = np.zeros((length, d), dtype=np.float32)
+    enc[:, 0::2] = np.sin(angle[:, 0::2])
+    enc[:, 1::2] = np.cos(angle[:, 1::2])
+    return jnp.asarray(enc)
+
+
+def init_mlp(key, d, d_ff, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d, d_ff), dtype=dtype),
+        "w_up": dense_init(k2, (d, d_ff), dtype=dtype),
+        "w_down": dense_init(k3, (d_ff, d), dtype=dtype),
+    }
+
+
+def mlp(params, x):
+    """SwiGLU gated MLP."""
+    gate = jax.nn.silu(x @ params["w_gate"].astype(x.dtype))
+    up = x @ params["w_up"].astype(x.dtype)
+    return (gate * up) @ params["w_down"].astype(x.dtype)

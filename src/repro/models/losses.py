@@ -1,0 +1,20 @@
+"""Loss functions for LM training."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def next_token_loss(logits, tokens, *, ignore_prefix: int = 0):
+    """Causal LM loss. logits: [B, S, V]; tokens: [B, S_text].
+
+    When the model prepends non-text positions (VLM image tokens), logits
+    has S = ignore_prefix + S_text and the loss is computed on text only.
+    """
+    if ignore_prefix:
+        logits = logits[:, ignore_prefix:]
+    logits = logits[:, :-1].astype(jnp.float32)
+    targets = tokens[:, 1:]
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

@@ -1,0 +1,151 @@
+"""Top-k Mixture-of-Experts FFN with capacity-based sort dispatch.
+
+TPU adaptation: instead of torch-style per-expert python loops we use a
+sort-based fixed-capacity dispatch (gather -> dense expert matmuls ->
+scatter-add), the MaxText-style "dropping" formulation. Compute cost is
+proportional to top_k/E * capacity_factor (active experts), which is what
+the roofline analysis should see for MoE archs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+
+
+def init_moe(key, cfg: ModelConfig, dtype=jnp.float32):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.moe_experts
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    return {
+        "router": dense_init(kr, (d, e), dtype=dtype),
+        "w_gate": dense_init(kg, (e, d, f), dtype=dtype),
+        "w_up": dense_init(ku, (e, d, f), dtype=dtype),
+        "w_down": dense_init(kd, (e, f, d), dtype=dtype),
+    }
+
+
+def _dispatch_one_group(x, expert_ids, gate_w, capacity, num_experts):
+    """x: [S, d]; expert_ids/gate_w: [S, k]. Returns MoE output [S, d]."""
+    S, d = x.shape
+    k = expert_ids.shape[1]
+    flat_e = expert_ids.reshape(-1)          # [S*k]
+    flat_w = gate_w.reshape(-1)              # [S*k]
+    tok = jnp.arange(S * k) // k             # token index per assignment
+
+    order = jnp.argsort(flat_e, stable=True)
+    e_sorted = flat_e[order]
+    tok_sorted = tok[order]
+    w_sorted = flat_w[order]
+
+    # position within expert: running index minus expert start offset
+    counts = jnp.bincount(flat_e, length=num_experts)
+    starts = jnp.cumsum(counts) - counts
+    pos_in_e = jnp.arange(S * k) - starts[e_sorted]
+    keep = pos_in_e < capacity
+    slot = jnp.where(keep, e_sorted * capacity + pos_in_e, num_experts * capacity)
+
+    # gather tokens into expert buffers [E*C(+1 overflow), d]
+    buf = jnp.zeros((num_experts * capacity + 1, d), x.dtype)
+    buf = buf.at[slot].set(x[tok_sorted])
+    return buf, slot, tok_sorted, w_sorted, keep
+
+
+def moe_ffn(params, cfg: ModelConfig, x):
+    """x: [B, S, d] -> [B, S, d]; router softmax -> top-k -> capacity FFN.
+
+    With cfg.moe_shard_map and an installed mesh (sharding.context), the
+    dispatch runs inside shard_map so the sort/scatter stays local to each
+    data shard — without this, GSPMD cannot shard the sort and all-gathers
+    the GLOBAL batch per device (measured: 64 GiB of all-gather per MoE
+    layer on grok-1; see EXPERIMENTS.md §Perf).
+    """
+    if cfg.moe_shard_map:
+        from repro.sharding.context import current_mesh
+        mesh = current_mesh()
+        if mesh is not None and "data" in mesh.axis_names:
+            return _moe_ffn_shard_map(params, cfg, x, mesh)
+    return _moe_ffn_gspmd(params, cfg, x)
+
+
+def _moe_ffn_shard_map(params, cfg: ModelConfig, x, mesh):
+    """Manually partitioned MoE: local dispatch per data shard, TP expert
+    matmuls over "model" with an explicit psum."""
+    from jax.sharding import PartitionSpec as P
+
+    batch_axes = tuple(a for a in mesh.axis_names if a != "model")
+
+    def local_moe(router, w_gate, w_up, w_down, x_local):
+        # x_local: [B/data, S, d] (replicated over "model")
+        y, aux = _moe_compute(
+            {"router": router, "w_gate": w_gate, "w_up": w_up,
+             "w_down": w_down}, cfg, x_local,
+            psum_axis="model")
+        return y, jax.lax.pmean(aux, batch_axes[-1])
+
+    shard = jax.shard_map(
+        local_moe, mesh=mesh,
+        in_specs=(P(), P(None, None, "model"), P(None, None, "model"),
+                  P(None, "model", None), P(batch_axes, None, None)),
+        out_specs=(P(batch_axes, None, None), P()),
+        check_vma=False)
+    return shard(params["router"], params["w_gate"], params["w_up"],
+                 params["w_down"], x)
+
+
+def _moe_ffn_gspmd(params, cfg: ModelConfig, x):
+    return _moe_compute(params, cfg, x, psum_axis=None)
+
+
+def _moe_compute(params, cfg: ModelConfig, x, *, psum_axis):
+    """Shared MoE body. psum_axis: reduce partial w_down outputs over this
+    mesh axis (shard_map path) or None (GSPMD path)."""
+    B, S, d = x.shape
+    e, k = cfg.moe_experts, cfg.moe_top_k
+    capacity = max(1, int(S * k / e * cfg.moe_capacity_factor))
+
+    logits = x @ params["router"].astype(x.dtype)  # [B, S, E]
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, k)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)  # renormalize
+
+    def per_group(xg, eg, wg):
+        buf, slot, tok_sorted, w_sorted, keep = _dispatch_one_group(
+            xg, eg, wg.astype(xg.dtype), capacity, e)
+        ebuf = buf[: e * capacity].reshape(e, capacity, d)
+        if cfg.moe_token_shard:
+            # beyond-paper sharding variant: shard the expert token buffer
+            # over "model" (token-parallel experts) instead of TP-ing d_ff —
+            # trades the per-layer activation all-reduce for a dispatch
+            # gather (see EXPERIMENTS.md §Perf). No-op without a mesh.
+            try:
+                from jax.sharding import PartitionSpec as P
+                ebuf = jax.lax.with_sharding_constraint(
+                    ebuf, P(None, "model", None))
+            except Exception:
+                pass
+        gate = jax.nn.silu(jnp.einsum("ecd,edf->ecf", ebuf,
+                                      params["w_gate"].astype(xg.dtype)))
+        up = jnp.einsum("ecd,edf->ecf", ebuf, params["w_up"].astype(xg.dtype))
+        out = jnp.einsum("ecf,efd->ecd", gate * up,
+                         params["w_down"].astype(xg.dtype))
+        out_flat = jnp.concatenate(
+            [out.reshape(e * capacity, d), jnp.zeros((1, d), xg.dtype)], axis=0)
+        y = jnp.zeros((S, d), xg.dtype)
+        contrib = out_flat[slot] * (w_sorted * keep)[:, None]
+        y = y.at[tok_sorted].add(contrib)
+        if psum_axis is not None:
+            # TP partial over d_ff shards; psum AFTER the (linear) combine
+            # so the payload is [S, d], not [E, C, d] (2.5x smaller)
+            y = jax.lax.psum(y, psum_axis)
+        return y
+
+    y = jax.vmap(per_group)(x, top_e, top_w)
+
+    # router load-balance auxiliary loss (Switch-style)
+    me = jnp.mean(jax.nn.one_hot(top_e[..., 0], e, dtype=jnp.float32),
+                  axis=(0, 1))
+    ce = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(me * ce)
+    return y, aux

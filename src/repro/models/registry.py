@@ -1,0 +1,75 @@
+"""Uniform model API over all families: init / loss / prefill / decode.
+
+Launchers, tests and the DFL layer use only this facade, so the Cached-DFL
+protocol stays model-agnostic (it sees opaque parameter pytrees).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, transformer
+from repro.models.losses import next_token_loss
+
+
+def init_params(cfg: ModelConfig, key):
+    if cfg.enc_dec:
+        return encdec.init_params(cfg, key)
+    return transformer.init_params(cfg, key)
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict[str, Any], *,
+            scan_layers: bool = True, kv_chunk: int = 512,
+            remat: bool = False, aux_weight: float = 0.01):
+    """batch: {tokens, [image_embeds | frames]} -> scalar loss."""
+    if cfg.enc_dec:
+        logits, aux = encdec.forward(params, cfg, batch["frames"],
+                                     batch["tokens"], scan_layers=scan_layers,
+                                     kv_chunk=kv_chunk, remat=remat)
+        return next_token_loss(logits, batch["tokens"])
+    logits, aux = transformer.forward(
+        params, cfg, batch["tokens"], batch.get("image_embeds"),
+        scan_layers=scan_layers, kv_chunk=kv_chunk, remat=remat)
+    prefix = cfg.image_tokens if cfg.family == "vlm" else 0
+    loss = next_token_loss(logits, batch["tokens"], ignore_prefix=prefix)
+    return loss + aux_weight * aux
+
+
+def prefill(params, cfg: ModelConfig, batch: Dict[str, Any], *,
+            max_len: Optional[int] = None, scan_layers: bool = True,
+            kv_chunk: int = 512):
+    if cfg.enc_dec:
+        enc_out = encdec.encode(params, cfg, batch["frames"],
+                                scan_layers=scan_layers, kv_chunk=kv_chunk)
+        B = batch["frames"].shape[0]
+        state = encdec.init_serve_state(params, cfg, enc_out, B,
+                                        max_len or 512)
+        return None, state
+    return transformer.prefill(params, cfg, batch["tokens"],
+                               batch.get("image_embeds"), max_len=max_len,
+                               scan_layers=scan_layers, kv_chunk=kv_chunk)
+
+
+def decode_step(params, cfg: ModelConfig, state, tokens, *,
+                use_kernel: bool = False, scan_layers: bool = True):
+    if cfg.enc_dec:
+        return encdec.decode_step(params, cfg, state, tokens,
+                                  use_kernel=use_kernel)
+    return transformer.decode_step(params, cfg, state, tokens,
+                                   use_kernel=use_kernel,
+                                   scan_layers=scan_layers)
+
+
+def init_decode_state(params, cfg: ModelConfig, batch: int, max_len: int,
+                      frames=None):
+    """Allocate a decode state with `max_len` capacity (no prefill)."""
+    if cfg.enc_dec:
+        if frames is None:
+            frames = jnp.zeros((batch, cfg.enc_context, cfg.d_model),
+                               jnp.dtype(cfg.compute_dtype))
+        enc_out = encdec.encode(params, cfg, frames)
+        return encdec.init_serve_state(params, cfg, enc_out, batch, max_len)
+    return transformer.init_decode_state(cfg, batch, max_len)

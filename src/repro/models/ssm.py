@@ -1,0 +1,172 @@
+"""Mamba2 / SSD (state-space duality) mixer, chunked for TPU.
+
+TPU adaptation of the paper's SSD algorithm (arXiv:2405.21060): instead of a
+CUDA selective-scan, the sequence is split into chunks; within-chunk terms
+become dense (MXU-friendly) matmuls via decay-weighted attention-like
+matrices, and cross-chunk state is carried by a lax.scan over chunk states.
+Decode is the O(1) recurrent update h = a*h + dt*x B^T, y = h C + D*x.
+
+Head layout (ngroups=1): x: [B, S, H, P]; B/C shared across heads [B, S, N].
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+
+
+def ssm_dims(cfg: ModelConfig):
+    if cfg.family == "ssm":
+        d_inner = cfg.ssm_expand * cfg.d_model
+    else:  # hybrid: ssm branch mirrors the attention width
+        d_inner = cfg.n_heads * cfg.resolved_head_dim
+    n_heads = max(1, d_inner // cfg.ssm_head_dim)
+    return d_inner, n_heads, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def init_ssm(key, cfg: ModelConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    d_inner, H, P, N = ssm_dims(cfg)
+    kin, kout, ka = jax.random.split(key, 3)
+    in_dim = 2 * d_inner + 2 * N + H  # z, x, B, C, dt
+    return {
+        "w_in": dense_init(kin, (d, in_dim), dtype=dtype),
+        "w_out": dense_init(kout, (d_inner, d), dtype=dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(dtype)),
+        "d_skip": jnp.ones((H,), dtype),
+        "dt_bias": jnp.zeros((H,), dtype),
+    }
+
+
+def _project(params, cfg: ModelConfig, u):
+    d_inner, H, P, N = ssm_dims(cfg)
+    zxbcdt = u @ params["w_in"].astype(u.dtype)
+    z, x, Bm, Cm, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + N, 2 * d_inner + 2 * N],
+        axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["a_log"].astype(jnp.float32))  # [H], negative
+    x = x.reshape(*x.shape[:-1], H, P)
+    return z, x, Bm, Cm, dt, A
+
+
+def _segsum(log_a):
+    """log_a: [..., T] -> cumulative segment sums L[..., i, j] = sum_{j<s<=i}."""
+    T = log_a.shape[-1]
+    cs = jnp.cumsum(log_a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # [..., i, j] = sum_{j<s<=i}
+    mask = jnp.tril(jnp.ones((T, T), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, d_skip, chunk: int, h0=None):
+    """Chunked SSD scan.
+
+    x: [B, S, H, P]; dt: [B, S, H]; A: [H]; Bm, Cm: [B, S, N]; d_skip: [H].
+    Returns (y [B, S, H, P], h_final [B, H, P, N]).
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[1] // chunk
+    xc = x.reshape(Bsz, nc, chunk, H, P)
+    dtc = dt.reshape(Bsz, nc, chunk, H)
+    Bc = Bm.reshape(Bsz, nc, chunk, N)
+    Cc = Cm.reshape(Bsz, nc, chunk, N)
+
+    log_a = dtc * A  # [B, nc, T, H]
+    log_a_t = log_a.transpose(0, 1, 3, 2)  # [B, nc, H, T]
+    seg = _segsum(log_a_t)  # [B, nc, H, T, T]
+
+    # 1) intra-chunk (diagonal block): y[i] = sum_{j<=i} exp(seg[i,j]) dt_j (C_i.B_j) x_j
+    cb = jnp.einsum("bcin,bcjn->bcij", Cc, Bc,
+                    preferred_element_type=jnp.float32)  # [B, nc, T, T]
+    att = jnp.exp(seg) * cb[:, :, None, :, :]  # [B, nc, H, i, j]
+    att = att * dtc.transpose(0, 1, 3, 2)[:, :, :, None, :]
+    y_intra = jnp.einsum("bchij,bcjhp->bcihp", att.astype(x.dtype), xc,
+                         preferred_element_type=jnp.float32)
+
+    # 2) chunk state: S_c = sum_j exp(cum(T)-cum(j)) dt_j x_j B_j^T  [B,nc,H,P,N]
+    cum = jnp.cumsum(log_a_t, axis=-1)  # [B, nc, H, T]
+    decay_to_end = jnp.exp(cum[..., -1:] - cum)  # [B, nc, H, T]
+    w = (decay_to_end * dtc.transpose(0, 1, 3, 2)).astype(x.dtype)
+    s_chunk = jnp.einsum("bchj,bcjhp,bcjn->bchpn", w, xc, Bc,
+                         preferred_element_type=jnp.float32)
+
+    # 3) inter-chunk recurrence over chunk states
+    a_chunk = jnp.exp(cum[..., -1])  # [B, nc, H] total decay of each chunk
+
+    def scan_fn(h, inp):
+        a_c, s_c = inp  # [B,H], [B,H,P,N]
+        h_new = h * a_c[..., None, None] + s_c
+        return h_new, h  # emit state ENTERING this chunk
+
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    h_last, h_in = jax.lax.scan(
+        scan_fn, h0.astype(jnp.float32),
+        (a_chunk.transpose(1, 0, 2), s_chunk.transpose(1, 0, 2, 3, 4)))
+    h_in = h_in.transpose(1, 0, 2, 3, 4)  # [B, nc, H, P, N]
+
+    # 4) inter-chunk contribution: y[i] += exp(cum(i)) * C_i . h_in
+    decay_in = jnp.exp(cum).transpose(0, 1, 3, 2)  # [B, nc, T, H]
+    y_inter = jnp.einsum("bcin,bchpn->bcihp", Cc, h_in.astype(x.dtype),
+                         preferred_element_type=jnp.float32)
+    y_inter = y_inter * decay_in[..., None]
+
+    y = (y_intra + y_inter).astype(x.dtype) + xc * d_skip[:, None].astype(x.dtype)
+    y = y.reshape(Bsz, nc * chunk, H, P)[:, :S]
+    return y, h_last
+
+
+def ssm_forward(params, cfg: ModelConfig, u, h0=None):
+    """Full-sequence SSD mixer. u: [B, S, d] -> (y [B, S, d], h_final)."""
+    d_inner, H, P, N = ssm_dims(cfg)
+    z, x, Bm, Cm, dt, A = _project(params, cfg, u)
+    y, h_last = ssd_chunked(x, dt, A, Bm, Cm, params["d_skip"],
+                            cfg.ssm_chunk, h0=h0)
+    y = y.reshape(*u.shape[:-1], d_inner)
+    y = y * jax.nn.silu(z)
+    return y @ params["w_out"].astype(u.dtype), h_last
+
+
+def ssm_decode_step(params, cfg: ModelConfig, u, h):
+    """Single-token recurrent update. u: [B, 1, d]; h: [B, H, P, N]."""
+    d_inner, H, P, N = ssm_dims(cfg)
+    z, x, Bm, Cm, dt, A = _project(params, cfg, u)
+    x1 = x[:, 0]          # [B, H, P]
+    B1 = Bm[:, 0]         # [B, N]
+    C1 = Cm[:, 0]         # [B, N]
+    dt1 = dt[:, 0]        # [B, H]
+    a = jnp.exp(dt1 * A)  # [B, H]
+    upd = jnp.einsum("bhp,bn->bhpn", (dt1[..., None] * x1).astype(jnp.float32),
+                     B1.astype(jnp.float32))
+    h_new = h * a[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", h_new, C1.astype(jnp.float32))
+    y = y + params["d_skip"].astype(jnp.float32)[:, None] * x1.astype(jnp.float32)
+    y = y.reshape(u.shape[0], 1, d_inner).astype(u.dtype)
+    y = y * jax.nn.silu(z)
+    return y @ params["w_out"].astype(u.dtype), h_new
+
+
+def ssm_reference(params, cfg: ModelConfig, u):
+    """Naive step-by-step recurrence (oracle for ssd_chunked)."""
+    d_inner, H, P, N = ssm_dims(cfg)
+    B, S, _ = u.shape
+    h = jnp.zeros((B, H, P, N), jnp.float32)
+    ys = []
+    for t in range(S):
+        y_t, h = ssm_decode_step(params, cfg, u[:, t : t + 1], h)
+        ys.append(y_t)
+    return jnp.concatenate(ys, axis=1)

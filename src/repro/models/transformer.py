@@ -1,0 +1,379 @@
+"""Decoder-only transformer covering dense / MoE / SSM / hybrid / VLM
+families, with stacked-layer parameters (scan-friendly), prefill and
+single-token decode paths.
+
+Parameter layout: every per-layer tensor is stacked along a leading [L]
+axis so the layer loop is a ``lax.scan`` (small HLO, fast 512-device
+compiles); ``scan_layers=False`` unrolls for FLOPs-exact cost analysis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import dense_init, embed_init, mlp, init_mlp, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_block(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 8)
+    p = {"norm1": jnp.ones((cfg.d_model,), dtype)}
+    if not cfg.attn_free:
+        p["attn"] = attn.init_attention(ks[0], cfg, dtype)
+    if cfg.family in ("ssm", "hybrid"):
+        p["ssm"] = ssm_lib.init_ssm(ks[1], cfg, dtype)
+    if cfg.family == "hybrid":
+        p["mix_gate"] = jnp.ones((2, cfg.d_model), dtype)
+    if cfg.moe_experts:
+        p["norm2"] = jnp.ones((cfg.d_model,), dtype)
+        p["moe"] = moe_lib.init_moe(ks[2], cfg, dtype)
+    elif cfg.d_ff:
+        p["norm2"] = jnp.ones((cfg.d_model,), dtype)
+        p["mlp"] = init_mlp(ks[3], cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    dtype = jnp.dtype(cfg.param_dtype)
+    k_emb, k_blocks, k_head, k_proj = jax.random.split(key, 4)
+    layer_keys = jax.random.split(k_blocks, cfg.n_layers)
+    blocks = jax.vmap(lambda k: _init_block(k, cfg, dtype))(layer_keys)
+    params = {
+        "embed": embed_init(k_emb, cfg.vocab, cfg.d_model, dtype),
+        "blocks": blocks,
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "lm_head": dense_init(k_head, (cfg.d_model, cfg.vocab), dtype=dtype),
+    }
+    if cfg.family == "vlm":
+        # projector from the (stubbed) vision encoder embedding space
+        params["img_proj"] = dense_init(k_proj, (cfg.d_model, cfg.d_model),
+                                        dtype=dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# block forward (full sequence)
+# ---------------------------------------------------------------------------
+
+def _block_forward(bp, cfg: ModelConfig, x, positions, kv_chunk):
+    """Returns (x_out, aux_loss, (k, v) or None, ssm_state or None)."""
+    h = rms_norm(x, bp["norm1"].astype(x.dtype), cfg.norm_eps)
+    kv = None
+    ssm_h = None
+    if cfg.family == "hybrid":
+        a_out, kv = attn.full_attention_forward(
+            bp["attn"], cfg, h, positions, kv_chunk=kv_chunk)
+        s_out, ssm_h = ssm_lib.ssm_forward(bp["ssm"], cfg, h)
+        g = bp["mix_gate"].astype(x.dtype)
+        x = x + 0.5 * (a_out * g[0] + s_out * g[1])
+    elif cfg.attn_free:
+        s_out, ssm_h = ssm_lib.ssm_forward(bp["ssm"], cfg, h)
+        x = x + s_out
+    else:
+        a_out, kv = attn.full_attention_forward(
+            bp["attn"], cfg, h, positions, kv_chunk=kv_chunk)
+        x = x + a_out
+
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.moe_experts:
+        h2 = rms_norm(x, bp["norm2"].astype(x.dtype), cfg.norm_eps)
+        y, aux = moe_lib.moe_ffn(bp["moe"], cfg, h2)
+        x = x + y
+    elif cfg.d_ff:
+        h2 = rms_norm(x, bp["norm2"].astype(x.dtype), cfg.norm_eps)
+        x = x + mlp(bp["mlp"], h2)
+    return x, aux, kv, ssm_h
+
+
+def embed_inputs(params, cfg: ModelConfig, tokens, image_embeds=None):
+    """Token (+ optional VLM patch) embedding. Returns [B, S, d] activations."""
+    dtype = jnp.dtype(cfg.compute_dtype)
+    x = params["embed"][tokens].astype(dtype)
+    if cfg.family == "vlm":
+        if image_embeds is None:
+            raise ValueError("vlm arch requires image_embeds")
+        img = image_embeds.astype(dtype) @ params["img_proj"].astype(dtype)
+        x = jnp.concatenate([img, x], axis=1)
+    return x
+
+
+def forward(params, cfg: ModelConfig, tokens, image_embeds=None, *,
+            scan_layers: bool = True, kv_chunk: int = 512,
+            remat: bool = False, return_hidden: bool = False):
+    """Full-sequence causal forward -> logits [B, S_total, vocab]."""
+    x = embed_inputs(params, cfg, tokens, image_embeds)
+    S = x.shape[1]
+    positions = jnp.arange(S)[None, :]
+
+    def body(carry, bp):
+        x, aux = carry
+        x, aux_i, _, _ = _block_forward(bp, cfg, x, positions, kv_chunk)
+        return (x, aux + aux_i), None
+
+    if remat:
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if cfg.remat_policy == "dots" else None)
+        body = jax.checkpoint(body, policy=policy)
+
+    if scan_layers:
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                   params["blocks"])
+    else:
+        aux = jnp.zeros((), jnp.float32)
+        for i in range(cfg.n_layers):
+            bp = jax.tree_util.tree_map(lambda t, i=i: t[i], params["blocks"])
+            (x, aux), _ = body((x, aux), bp)
+
+    x = rms_norm(x, params["final_norm"].astype(x.dtype), cfg.norm_eps)
+    if return_hidden:
+        return x, aux
+    logits = x @ params["lm_head"].astype(x.dtype)
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class DecodeState:
+    """Static-shape decode state: KV caches and/or SSM states per layer.
+
+    With cfg.kv_quant the k/v arrays are int8 and k_scale/v_scale hold the
+    per-(position, head) symmetric quantization scales."""
+    k: Optional[jax.Array]        # [L, B, Smax, KV, hd]
+    v: Optional[jax.Array]
+    ssm: Optional[jax.Array]      # [L, B, H, P, N]
+    length: jax.Array             # [] int32 valid positions
+    k_scale: Optional[jax.Array] = None   # [L, B, Smax, KV, 1] f32
+    v_scale: Optional[jax.Array] = None
+
+jax.tree_util.register_dataclass(
+    DecodeState,
+    data_fields=["k", "v", "ssm", "length", "k_scale", "v_scale"],
+    meta_fields=[])
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
+                      dtype=None) -> DecodeState:
+    dtype = dtype or jnp.dtype(cfg.compute_dtype)
+    k = v = ssm = k_scale = v_scale = None
+    if not cfg.attn_free:
+        # sliding-window archs only need a window-sized cache for decode
+        alloc = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+        shape = (cfg.n_layers, batch, alloc, cfg.n_kv_heads,
+                 cfg.resolved_head_dim)
+        if cfg.kv_quant:
+            k = jnp.zeros(shape, jnp.int8)
+            v = jnp.zeros(shape, jnp.int8)
+            k_scale = jnp.zeros(shape[:-1] + (1,), jnp.float32)
+            v_scale = jnp.zeros(shape[:-1] + (1,), jnp.float32)
+        else:
+            k = jnp.zeros(shape, dtype)
+            v = jnp.zeros(shape, dtype)
+    if cfg.family in ("ssm", "hybrid"):
+        d_inner, H, P, N = ssm_lib.ssm_dims(cfg)
+        ssm = jnp.zeros((cfg.n_layers, batch, H, P, N), jnp.float32)
+    return DecodeState(k=k, v=v, ssm=ssm, length=jnp.zeros((), jnp.int32),
+                       k_scale=k_scale, v_scale=v_scale)
+
+
+def decode_step(params, cfg: ModelConfig, state: DecodeState, tokens, *,
+                use_kernel: bool = False, scan_layers: bool = True):
+    """One decode step. tokens: [B, 1] -> (logits [B, 1, V], new state).
+
+    ``state.length`` counts tokens already in the cache. For sliding-window
+    archs the KV cache is a ring buffer of size `sliding_window`.
+    """
+    dtype = jnp.dtype(cfg.compute_dtype)
+    x = params["embed"][tokens].astype(dtype)
+    length = state.length
+    ring = bool(cfg.sliding_window) and not cfg.attn_free
+    if ring:
+        alloc = state.k.shape[2]
+        write_pos = jnp.mod(length, alloc)
+        eff_len = jnp.minimum(length, alloc)
+    else:
+        write_pos = eff_len = length
+
+    def layer(carry, xs):
+        x = carry
+        bp, kc, vc, ksc, vsc, sc = xs
+        h = rms_norm(x, bp["norm1"].astype(x.dtype), cfg.norm_eps)
+        new_kc, new_vc, new_ksc, new_vsc, new_sc = kc, vc, ksc, vsc, sc
+        if cfg.family == "hybrid":
+            a_out, new_kc, new_vc, new_ksc, new_vsc = _decode_attn(
+                bp["attn"], cfg, h, kc, vc, ksc, vsc, write_pos, eff_len,
+                length, ring, use_kernel)
+            s_out, new_sc = ssm_lib.ssm_decode_step(bp["ssm"], cfg, h, sc)
+            g = bp["mix_gate"].astype(x.dtype)
+            x = x + 0.5 * (a_out * g[0] + s_out * g[1])
+        elif cfg.attn_free:
+            s_out, new_sc = ssm_lib.ssm_decode_step(bp["ssm"], cfg, h, sc)
+            x = x + s_out
+        else:
+            a_out, new_kc, new_vc, new_ksc, new_vsc = _decode_attn(
+                bp["attn"], cfg, h, kc, vc, ksc, vsc, write_pos, eff_len,
+                length, ring, use_kernel)
+            x = x + a_out
+        if cfg.moe_experts:
+            h2 = rms_norm(x, bp["norm2"].astype(x.dtype), cfg.norm_eps)
+            y, _ = moe_lib.moe_ffn(bp["moe"], cfg, h2)
+            x = x + y
+        elif cfg.d_ff:
+            h2 = rms_norm(x, bp["norm2"].astype(x.dtype), cfg.norm_eps)
+            x = x + mlp(bp["mlp"], h2)
+        return x, (new_kc, new_vc, new_ksc, new_vsc, new_sc)
+
+    L = cfg.n_layers
+    zeros = jnp.zeros((L,))
+    xs = (params["blocks"],
+          state.k if state.k is not None else zeros,
+          state.v if state.v is not None else zeros,
+          state.k_scale if state.k_scale is not None else zeros,
+          state.v_scale if state.v_scale is not None else zeros,
+          state.ssm if state.ssm is not None else zeros)
+
+    if scan_layers:
+        x, (nk, nv, nks, nvs, ns) = jax.lax.scan(layer, x, xs)
+    else:
+        outs = []
+        for i in range(L):
+            xs_i = jax.tree_util.tree_map(lambda t, i=i: t[i], xs)
+            x, out_i = layer(x, xs_i)
+            outs.append(out_i)
+        nk, nv, nks, nvs, ns = (jnp.stack([o[j] for o in outs])
+                                for j in range(5))
+
+    x = rms_norm(x, params["final_norm"].astype(x.dtype), cfg.norm_eps)
+    logits = x @ params["lm_head"].astype(x.dtype)
+    new_state = DecodeState(
+        k=nk if state.k is not None else None,
+        v=nv if state.v is not None else None,
+        ssm=ns if state.ssm is not None else None,
+        length=length + 1,
+        k_scale=nks if state.k_scale is not None else None,
+        v_scale=nvs if state.v_scale is not None else None)
+    return logits, new_state
+
+
+def _decode_attn(ap, cfg, x, kc, vc, ksc, vsc, write_pos, eff_len, length,
+                 ring, use_kernel):
+    """Single-token attention with ring-buffer support for SWA caches and
+    optional int8 KV quantization (cfg.kv_quant)."""
+    B = x.shape[0]
+    hd = cfg.resolved_head_dim
+    pos = length[None, None] * jnp.ones((B, 1), jnp.int32)
+    q, k, v = attn.qkv_project(ap, cfg, x, pos, rope=True)
+    if cfg.kv_quant:
+        from repro.kernels.quant_kv import quantize_kv
+        k_q, k_s = quantize_kv(k)
+        v_q, v_s = quantize_kv(v)
+        kc = jax.lax.dynamic_update_slice(kc, k_q, (0, write_pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v_q, (0, write_pos, 0, 0))
+        ksc = jax.lax.dynamic_update_slice(ksc, k_s, (0, write_pos, 0, 0))
+        vsc = jax.lax.dynamic_update_slice(vsc, v_s, (0, write_pos, 0, 0))
+        k_read = kc.astype(jnp.float32) * ksc
+        v_read = vc.astype(jnp.float32) * vsc
+    else:
+        kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype),
+                                          (0, write_pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype),
+                                          (0, write_pos, 0, 0))
+        k_read, v_read = kc, vc
+    q1 = q[:, 0]
+    n_valid = jnp.minimum(eff_len + 1, kc.shape[1])
+    if ring:
+        # ring buffer: every resident entry is within the window by
+        # construction, so attend over all valid slots (no window mask).
+        out = _masked_decode_attn(q1, k_read, v_read, n_valid, 0, use_kernel)
+    else:
+        out = _masked_decode_attn(q1, k_read, v_read, n_valid,
+                                  cfg.sliding_window, use_kernel)
+    out = out.reshape(B, 1, cfg.n_heads * hd).astype(x.dtype)
+    return out @ ap["wo"].astype(x.dtype), kc, vc, ksc, vsc
+
+
+def _masked_decode_attn(q1, kc, vc, n_valid, window, use_kernel):
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return kops.decode_attention(q1, kc, vc, n_valid, window=window)
+    return attn.decode_attention_ref(q1, kc, vc, n_valid, window=window)
+
+
+def prefill(params, cfg: ModelConfig, tokens, image_embeds=None, *,
+            max_len: Optional[int] = None, kv_chunk: int = 512,
+            scan_layers: bool = True):
+    """Process a full prompt, returning (logits, DecodeState ready to decode).
+
+    Note: for ring-buffer (SWA) archs prefill writes only the last `window`
+    positions of K/V into the cache.
+    """
+    x = embed_inputs(params, cfg, tokens, image_embeds)
+    B, S, _ = x.shape
+    max_len = max_len or S
+    positions = jnp.arange(S)[None, :]
+
+    def body(carry, bp):
+        x, aux = carry
+        x, aux_i, kv, ssm_h = _block_forward(bp, cfg, x, positions, kv_chunk)
+        k, v = kv if kv is not None else (jnp.zeros(()), jnp.zeros(()))
+        ssm_h = ssm_h if ssm_h is not None else jnp.zeros(())
+        return (x, aux + aux_i), (k, v, ssm_h)
+
+    if scan_layers:
+        (x, _), (ks, vs, ssms) = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)), params["blocks"])
+    else:
+        carry = (x, jnp.zeros((), jnp.float32))
+        outs = []
+        for i in range(cfg.n_layers):
+            bp = jax.tree_util.tree_map(lambda t, i=i: t[i], params["blocks"])
+            carry, out_i = body(carry, bp)
+            outs.append(out_i)
+        x = carry[0]
+        ks, vs, ssms = (jnp.stack([o[j] for o in outs]) for j in range(3))
+
+    x = rms_norm(x, params["final_norm"].astype(x.dtype), cfg.norm_eps)
+    logits = x @ params["lm_head"].astype(x.dtype)
+
+    state = init_decode_state(cfg, B, max_len)
+    if state.k is not None:
+        if cfg.kv_quant:
+            from repro.kernels.quant_kv import quantize_kv
+            ks, k_sc = quantize_kv(ks)
+            vs, v_sc = quantize_kv(vs)
+        alloc = state.k.shape[2]
+        if cfg.sliding_window and S > alloc:
+            # keep the last `alloc` positions, aligned to the ring layout
+            shift = S % alloc
+            roll_w = lambda a: jnp.roll(a[:, :, -alloc:], shift, axis=2)
+            state = dataclasses.replace(
+                state, k=roll_w(ks).astype(state.k.dtype),
+                v=roll_w(vs).astype(state.v.dtype))
+            if cfg.kv_quant:
+                state = dataclasses.replace(
+                    state, k_scale=roll_w(k_sc), v_scale=roll_w(v_sc))
+        else:
+            dus = lambda dst, src: jax.lax.dynamic_update_slice(
+                dst, src.astype(dst.dtype), (0, 0, 0, 0, 0))
+            state = dataclasses.replace(state, k=dus(state.k, ks),
+                                        v=dus(state.v, vs))
+            if cfg.kv_quant:
+                state = dataclasses.replace(
+                    state, k_scale=dus(state.k_scale, k_sc),
+                    v_scale=dus(state.v_scale, v_sc))
+    if state.ssm is not None:
+        state = dataclasses.replace(state, ssm=ssms.astype(state.ssm.dtype))
+    state = dataclasses.replace(state, length=jnp.asarray(S, jnp.int32))
+    return logits, state

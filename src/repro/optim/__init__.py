@@ -1,0 +1,2 @@
+from repro.optim.sgd import sgd_init, sgd_update  # noqa: F401
+from repro.optim.schedules import ReduceLROnPlateau, cosine_schedule  # noqa: F401

@@ -1,0 +1,43 @@
+"""Learning-rate schedules, incl. a JAX/host reimplementation of PyTorch's
+ReduceLROnPlateau, which the paper uses for all experiments."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class ReduceLROnPlateau:
+    """Host-side plateau scheduler (mode='max' on average test accuracy)."""
+    lr: float
+    factor: float = 0.5
+    patience: int = 5
+    min_lr: float = 1e-4
+    threshold: float = 1e-4
+    mode: str = "max"
+    _best: float = -np.inf
+    _bad: int = 0
+
+    def update(self, metric: float) -> float:
+        improved = (metric > self._best + self.threshold
+                    if self.mode == "max"
+                    else metric < self._best - self.threshold)
+        if improved:
+            self._best = metric
+            self._bad = 0
+        else:
+            self._bad += 1
+            if self._bad > self.patience:
+                self.lr = max(self.lr * self.factor, self.min_lr)
+                self._bad = 0
+        return self.lr
+
+
+def cosine_schedule(base_lr: float, total_steps: int, warmup: int = 0):
+    def lr(step):
+        if warmup and step < warmup:
+            return base_lr * (step + 1) / warmup
+        p = (step - warmup) / max(1, total_steps - warmup)
+        return 0.5 * base_lr * (1 + np.cos(np.pi * min(p, 1.0)))
+    return lr

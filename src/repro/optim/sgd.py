@@ -1,0 +1,30 @@
+"""SGD (paper's optimizer) with optional momentum and weight decay."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.tree import tree_zeros_like
+
+
+def sgd_init(params, momentum: float = 0.0):
+    return tree_zeros_like(params) if momentum else None
+
+
+def sgd_update(params, grads, state, *, lr, momentum: float = 0.0,
+               weight_decay: float = 0.0):
+    """Returns (new_params, new_state)."""
+    if weight_decay:
+        grads = jax.tree_util.tree_map(
+            lambda g, p: g + weight_decay * p.astype(g.dtype), grads, params)
+    if momentum:
+        state = jax.tree_util.tree_map(
+            lambda m, g: momentum * m + g.astype(m.dtype), state, grads)
+        step = state
+    else:
+        step = grads
+    params = jax.tree_util.tree_map(
+        lambda p, s: (p.astype(jnp.float32)
+                      - lr * s.astype(jnp.float32)).astype(p.dtype),
+        params, step)
+    return params, state

@@ -1,0 +1,108 @@
+"""Batched serving scheduler: length-bucketed wave batching over the
+static decode state.
+
+TPU adaptation: vLLM-style paged/continuous batching relies on dynamic KV
+allocation that does not map onto static SPMD shapes, so this scheduler
+uses the honest static alternative real TPU serving stacks start from:
+
+  * requests are bucketed by prompt length (equal-length waves batch
+    together without padding-semantics hacks);
+  * a wave of ≤ `slots` requests prefills as ONE batch, then decodes in
+    lockstep with the compiled decode step (the same program the dry-run
+    lowers for decode_32k);
+  * finished sequences ride along until the wave drains (their outputs
+    are frozen) — the classic static-batching trade-off; per-slot refill
+    would need per-slot attention masks (paged attention), noted as the
+    next step in DESIGN.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import registry as models
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # [S] int32
+    max_new_tokens: int = 16
+    eos_id: int = -1              # -1: never stops early
+    tokens_out: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        if len(self.tokens_out) >= self.max_new_tokens:
+            return True
+        return bool(self.tokens_out) and self.tokens_out[-1] == self.eos_id
+
+
+class BatchScheduler:
+    """Length-bucketed wave scheduler over the static decode state."""
+
+    def __init__(self, params, cfg: ModelConfig, *, slots: int,
+                 max_len: int, use_kernel: bool = False):
+        self.params = params
+        self.cfg = cfg
+        self.slots = slots
+        self.max_len = max_len
+        self.queue: Dict[int, List[Request]] = defaultdict(list)
+        self.finished: Dict[int, Request] = {}
+        self.ticks = 0
+        self._decode = jax.jit(
+            lambda p, s, t: models.decode_step(p, cfg, s, t,
+                                               use_kernel=use_kernel))
+        self._prefill = jax.jit(
+            lambda p, b: models.prefill(p, cfg, b, max_len=max_len))
+
+    def submit(self, req: Request) -> None:
+        self.queue[len(req.prompt)].append(req)
+
+    def _next_wave(self) -> List[Request]:
+        for length in sorted(self.queue):
+            bucket = self.queue[length]
+            if bucket:
+                wave, self.queue[length] = (bucket[: self.slots],
+                                            bucket[self.slots:])
+                return wave
+        return []
+
+    def _run_wave(self, wave: List[Request]) -> None:
+        B = len(wave)
+        prompts = np.stack([r.prompt for r in wave])
+        pad = self.slots - B
+        if pad:  # keep the compiled batch shape
+            prompts = np.concatenate(
+                [prompts, np.zeros((pad, prompts.shape[1]), np.int32)])
+        logits, state = self._prefill(self.params,
+                                      {"tokens": jnp.asarray(prompts)})
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        for i, r in enumerate(wave):
+            r.tokens_out.append(int(tok[i, 0]))
+        budget = max(r.max_new_tokens for r in wave) - 1
+        for _ in range(budget):
+            if all(r.done for r in wave):
+                break
+            logits, state = self._decode(self.params, state, tok)
+            tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+            self.ticks += 1
+            for i, r in enumerate(wave):
+                if not r.done:
+                    r.tokens_out.append(int(tok[i, 0]))
+        for r in wave:
+            self.finished[r.rid] = r
+
+    def run(self) -> Dict[int, Request]:
+        while True:
+            wave = self._next_wave()
+            if not wave:
+                break
+            self._run_wave(wave)
+        return self.finished

@@ -1,0 +1,3 @@
+from repro.sharding.rules import (  # noqa: F401
+    ShardingRules, param_specs, batch_specs, decode_state_specs,
+)

@@ -1,0 +1,25 @@
+"""Ambient mesh context for model-internal shard_map regions.
+
+Models are mesh-agnostic; launchers that want manually-partitioned
+subgraphs (e.g. the MoE local dispatch) install the mesh here.
+"""
+from __future__ import annotations
+
+import contextlib
+
+_MESH = None
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    global _MESH
+    prev = _MESH
+    _MESH = mesh
+    try:
+        yield mesh
+    finally:
+        _MESH = prev
+
+
+def current_mesh():
+    return _MESH

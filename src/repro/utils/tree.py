@@ -1,0 +1,88 @@
+"""Pytree helpers used across the framework."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_size(tree) -> int:
+    """Total number of scalar elements in a pytree."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_stack(trees):
+    """Stack a list of identically-structured pytrees along a new axis 0."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def tree_unstack(tree, n: int):
+    """Inverse of tree_stack: split along axis 0 into n pytrees."""
+    return [jax.tree_util.tree_map(lambda x, i=i: x[i], tree) for i in range(n)]
+
+
+def tree_take(tree, idx, axis: int = 0):
+    """Index every leaf along `axis` (gather, supports traced idx)."""
+    return jax.tree_util.tree_map(lambda x: jnp.take(x, idx, axis=axis), tree)
+
+
+def tree_zeros_like(tree):
+    return jax.tree_util.tree_map(jnp.zeros_like, tree)
+
+
+def tree_add(a, b):
+    return jax.tree_util.tree_map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree_util.tree_map(jnp.subtract, a, b)
+
+
+def tree_scale(tree, s):
+    return jax.tree_util.tree_map(lambda x: x * s, tree)
+
+
+def tree_where(pred, a, b):
+    """Leafwise jnp.where with a scalar/broadcastable predicate."""
+    return jax.tree_util.tree_map(
+        lambda x, y: jnp.where(_expand(pred, x.ndim), x, y), a, b
+    )
+
+
+def _expand(pred, ndim):
+    p = jnp.asarray(pred)
+    while p.ndim < ndim:
+        p = p[..., None]
+    return p
+
+
+def tree_allclose(a, b, rtol=1e-5, atol=1e-6) -> bool:
+    leaves_a = jax.tree_util.tree_leaves(a)
+    leaves_b = jax.tree_util.tree_leaves(b)
+    if len(leaves_a) != len(leaves_b):
+        return False
+    return all(
+        np.allclose(np.asarray(x), np.asarray(y), rtol=rtol, atol=atol)
+        for x, y in zip(leaves_a, leaves_b)
+    )
+
+
+def tree_flatten_concat(tree, dtype=jnp.float32):
+    """Flatten a pytree into a single 1-D vector (for kernels / checksums)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.concatenate([x.reshape(-1).astype(dtype) for x in leaves])
+
+
+def tree_unflatten_concat(flat, tree_like):
+    """Inverse of tree_flatten_concat given a template pytree."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree_like)
+    out, off = [], 0
+    for x in leaves:
+        n = int(np.prod(x.shape))
+        out.append(flat[off : off + n].reshape(x.shape).astype(x.dtype))
+        off += n
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,20 @@
+"""Shared fixtures. NOTE: no XLA device-count flags here — smoke tests and
+benches must see 1 device; only the dry-run subprocess creates 512."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture()
+def key():
+    return jax.random.PRNGKey(0)

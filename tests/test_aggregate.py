@@ -1,0 +1,61 @@
+"""ModelAggregation (Alg. 1): weights, tree path, flat/Pallas path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cache as C
+from repro.core.aggregate import aggregate, aggregate_flat, aggregation_weights
+
+
+def test_weights_normalized():
+    w_self, w_cache = aggregation_weights(
+        10.0, jnp.asarray([5.0, 5.0, 7.0]), jnp.asarray([1.0, 1.0, 0.0]))
+    assert np.isclose(float(w_self + jnp.sum(w_cache)), 1.0)
+    assert float(w_cache[2]) == 0.0  # invalid slot excluded
+
+
+def test_aggregate_matches_manual():
+    params = {"w": jnp.ones((4,)) * 2.0}
+    cache = C.init_cache(params, 2)
+    cache = C.insert(cache, {"w": jnp.ones((4,)) * 8.0}, t=0, origin=1,
+                     samples=30.0, group=0, tau_max=10)
+    out = aggregate(params, 10.0, cache)
+    # (10*2 + 30*8) / 40 = 6.5
+    np.testing.assert_allclose(np.asarray(out["w"]), 6.5, rtol=1e-6)
+
+
+def test_aggregate_empty_cache_is_identity():
+    params = {"w": jnp.arange(6.0)}
+    cache = C.init_cache(params, 3)
+    out = aggregate(params, 5.0, cache)
+    np.testing.assert_allclose(np.asarray(out["w"]), np.arange(6.0),
+                               rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(C_=st.integers(1, 8), D=st.integers(1, 300), seed=st.integers(0, 99))
+def test_flat_kernel_matches_tree(C_, D, seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    flat_params = jax.random.normal(k1, (D,))
+    flat_cache = jax.random.normal(k2, (C_, D))
+    samples = jax.random.uniform(k3, (C_,), minval=0.1)
+    valid = (jax.random.uniform(k4, (C_,)) > 0.4)
+    out_kernel = aggregate_flat(flat_params, flat_cache, 1.0, samples,
+                                valid, use_kernel=True)
+    out_ref = aggregate_flat(flat_params, flat_cache, 1.0, samples,
+                             valid, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(out_kernel), np.asarray(out_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_fleet_vectorized_aggregate():
+    N, cap = 3, 2
+    params = {"w": jnp.stack([jnp.full((4,), float(i)) for i in range(N)])}
+    cache = C.init_cache({"w": jnp.zeros((4,))}, cap)
+    cache = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (N,) + x.shape).copy(), cache)
+    samples = jnp.ones((N,))
+    out = aggregate(params, samples, cache)  # empty caches -> identity
+    np.testing.assert_allclose(np.asarray(out["w"][2]), 2.0, rtol=1e-6)

@@ -1,0 +1,122 @@
+"""Unit + property tests for the Cached-DFL model cache (Alg. 2 & 3)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cache as C
+
+
+def toy_params(val=0.0):
+    return {"w": jnp.full((3, 2), val), "b": jnp.full((4,), val)}
+
+
+def test_init_cache_empty():
+    c = C.init_cache(toy_params(), 5)
+    assert c.capacity == 5
+    assert not bool(jnp.any(c.valid))
+    assert c.models["w"].shape == (5, 3, 2)
+
+
+def test_insert_and_refresh():
+    c = C.init_cache(toy_params(), 3)
+    c = C.insert(c, toy_params(1.0), t=0, origin=7, samples=10.0, group=0,
+                 tau_max=10)
+    assert int(jnp.sum(c.valid)) == 1
+    assert int(c.origin[0]) == 7 and int(c.ts[0]) == 0
+    assert float(c.models["w"][0, 0, 0]) == 1.0
+    # refresh with a NEWER model from the same origin: still one entry
+    c = C.insert(c, toy_params(2.0), t=3, origin=7, samples=10.0, group=0,
+                 tau_max=10)
+    assert int(jnp.sum(c.valid)) == 1
+    assert int(c.ts[0]) == 3
+    assert float(c.models["w"][0, 0, 0]) == 2.0
+    # an OLDER model from the same origin must NOT replace the fresh one
+    c = C.insert(c, toy_params(9.0), t=1, origin=7, samples=10.0, group=0,
+                 tau_max=10)
+    assert int(jnp.sum(c.valid)) == 1
+    assert int(c.ts[0]) == 3
+
+
+def test_staleness_eviction():
+    c = C.init_cache(toy_params(), 4)
+    c = C.insert(c, toy_params(1.0), t=0, origin=1, samples=1.0, group=0,
+                 tau_max=100)
+    c = C.insert(c, toy_params(2.0), t=5, origin=2, samples=1.0, group=0,
+                 tau_max=100)
+    # t - ts >= tau_max evicts: 10-0=10 >= 10 -> origin1 out; 10-5=5 stays
+    c2 = C.evict_stale(c, t=10, tau_max=10)
+    assert int(jnp.sum(c2.valid)) == 1
+    # with a larger tolerance both survive
+    assert int(jnp.sum(C.evict_stale(c, t=10, tau_max=11).valid)) == 2
+
+
+def test_lru_retains_newest():
+    c = C.init_cache(toy_params(), 2)
+    for i, t in enumerate([3, 1, 7, 5]):
+        c = C.insert(c, toy_params(float(t)), t=t, origin=10 + i,
+                     samples=1.0, group=0, tau_max=100)
+    ts = sorted(np.asarray(c.ts).tolist(), reverse=True)
+    assert ts == [7, 5]
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n_ops=st.integers(1, 12),
+    capacity=st.integers(1, 5),
+    tau_max=st.integers(1, 8),
+    data=st.data(),
+)
+def test_cache_invariants(n_ops, capacity, tau_max, data):
+    """Property: after any op sequence — size ≤ capacity, no stale entries,
+    at most one entry per origin, and entries are the freshest seen."""
+    c = C.init_cache(toy_params(), capacity)
+    best_seen = {}
+    t = 0
+    for _ in range(n_ops):
+        t += data.draw(st.integers(0, 3))
+        origin = data.draw(st.integers(0, 6))
+        c = C.insert(c, toy_params(float(t)), t=t, origin=origin,
+                     samples=1.0, group=0, tau_max=tau_max)
+        best_seen[origin] = max(best_seen.get(origin, -1), t)
+
+    valid = np.asarray(c.valid)
+    origins = np.asarray(c.origin)[valid]
+    ts = np.asarray(c.ts)[valid]
+    assert valid.sum() <= capacity
+    assert len(set(origins.tolist())) == len(origins)  # dedup by origin
+    for o, tau in zip(origins, ts):
+        assert t - tau < tau_max          # no stale survivors
+        assert tau <= best_seen[o]        # never newer than seen
+
+
+def test_group_select_respects_slots():
+    # 6 candidates in 2 groups; 2 slots each
+    origin = jnp.arange(6, dtype=jnp.int32)
+    ts = jnp.asarray([5, 4, 3, 9, 8, 7], jnp.int32)
+    group = jnp.asarray([0, 0, 0, 1, 1, 1], jnp.int32)
+    samples = jnp.ones((6,))
+    arrival = ts
+    sel, meta = C.select_group(origin, ts, samples, group, arrival,
+                               capacity=4,
+                               group_slots=jnp.asarray([2, 2], jnp.int32))
+    kept = np.asarray(meta["origin"])
+    kept = kept[kept >= 0]
+    # group0 keeps ts 5,4 (origins 0,1); group1 keeps ts 9,8 (origins 3,4)
+    assert sorted(kept.tolist()) == [0, 1, 3, 4]
+
+
+def test_fifo_vs_lru_difference():
+    """FIFO keeps most recently RECEIVED; LRU keeps freshest TRAINED."""
+    origin = jnp.asarray([1, 2], jnp.int32)
+    ts = jnp.asarray([9, 1], jnp.int32)        # model 1 fresher
+    arrival = jnp.asarray([0, 5], jnp.int32)   # model 2 received later
+    samples = jnp.ones((2,))
+    group = jnp.zeros((2,), jnp.int32)
+    _, meta_lru = C.select_lru(origin, ts, samples, group, arrival, 1)
+    _, meta_fifo = C.select_fifo(origin, ts, samples, group, arrival, 1)
+    assert int(meta_lru["origin"][0]) == 1
+    assert int(meta_fifo["origin"][0]) == 2

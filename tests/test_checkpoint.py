@@ -1,0 +1,40 @@
+"""Checkpoint + model store roundtrips."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.io import load_pytree, save_pytree
+from repro.checkpoint.model_store import ModelStore
+from repro.utils.tree import tree_allclose
+
+
+def test_pytree_roundtrip(tmp_path, key):
+    tree = {"a": jax.random.normal(key, (3, 4)),
+            "nested": {"b": jnp.arange(5), "c": jnp.ones((2,), jnp.bfloat16)}}
+    save_pytree(str(tmp_path / "ckpt"), tree)
+    loaded = load_pytree(str(tmp_path / "ckpt"), tree)
+    assert tree_allclose(tree, loaded)
+
+
+def test_model_store_freshest_and_eviction(tmp_path):
+    store = ModelStore(str(tmp_path / "store"))
+    tpl = {"w": jnp.zeros((4,))}
+    for agent, epoch in [(0, 1), (1, 3), (2, 7), (0, 5)]:
+        store.put({"w": jnp.full((4,), float(epoch))}, agent=agent,
+                  epoch=epoch, samples=1.0)
+    # newest-per-agent: agent 0 keeps epoch 5
+    fresh = store.freshest(10)
+    assert {(e.agent, e.epoch) for e in fresh} == {(0, 5), (1, 3), (2, 7)}
+    loaded = store.load(fresh[0], tpl)
+    assert float(loaded["w"][0]) == fresh[0].epoch
+    # staleness eviction mirrors tau_max kick-out
+    store.evict_stale(now_epoch=10, tau_max=5)
+    assert {(e.agent, e.epoch) for e in store.entries} == {(2, 7)}
+
+
+def test_model_store_persistence(tmp_path):
+    root = str(tmp_path / "store2")
+    s1 = ModelStore(root)
+    s1.put({"w": jnp.ones((2,))}, agent=4, epoch=2, samples=3.0)
+    s2 = ModelStore(root)  # fresh handle reads the index
+    assert len(s2.entries) == 1 and s2.entries[0].agent == 4

@@ -1,0 +1,149 @@
+"""Fleet-level cache exchange (DTN model spreading) semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cache as C
+from repro.core import gossip
+
+
+def fleet_params(N, scale=1.0):
+    return {"w": jnp.arange(N, dtype=jnp.float32)[:, None] * scale
+            * jnp.ones((N, 4))}
+
+
+def empty_fleet_cache(N, cap):
+    c = C.init_cache({"w": jnp.zeros((4,))}, cap)
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (N,) + x.shape).copy(), c)
+
+
+def test_exchange_fetches_partner_model():
+    N, cap = 4, 3
+    params = fleet_params(N)
+    cache = empty_fleet_cache(N, cap)
+    partners = jnp.asarray([[1], [0], [-1], [-1]], jnp.int32)
+    samples = jnp.ones((N,)) * 10
+    group = jnp.zeros((N,), jnp.int32)
+    out = gossip.exchange(params, cache, partners, 0, samples, group,
+                          tau_max=10, policy="lru")
+    # agent 0 now caches agent 1's model (value 1.0) and vice versa
+    assert int(out.origin[0, 0]) == 1
+    assert float(out.models["w"][0, 0, 0]) == 1.0
+    assert int(out.origin[1, 0]) == 0
+    # isolated agents keep empty caches
+    assert int(jnp.sum(out.valid[2])) == 0
+
+
+def test_exchange_spreads_cached_models_two_hops():
+    """i gets j's cache contents: models travel multiple hops over epochs."""
+    N, cap = 3, 2
+    params = fleet_params(N)
+    cache = empty_fleet_cache(N, cap)
+    samples = jnp.ones((N,))
+    group = jnp.zeros((N,), jnp.int32)
+    # epoch 0: 1 meets 2 -> agent 1 caches model 2
+    p01 = jnp.asarray([[-1], [2], [1]], jnp.int32)
+    cache = gossip.exchange(params, cache, p01, 0, samples, group,
+                            tau_max=10, policy="lru")
+    # epoch 1: 0 meets 1 -> agent 0 gets model 1 AND cached model 2
+    p10 = jnp.asarray([[1], [0], [-1]], jnp.int32)
+    cache = gossip.exchange(params, cache, p10, 1, samples, group,
+                            tau_max=10, policy="lru")
+    origins0 = set(np.asarray(cache.origin[0]).tolist()) - {-1}
+    assert origins0 == {1, 2}
+    # the relayed copy of model 2 keeps its ORIGINAL timestamp (staleness!)
+    idx2 = int(np.argwhere(np.asarray(cache.origin[0]) == 2)[0, 0])
+    assert int(cache.ts[0, idx2]) == 0
+
+
+def test_exchange_stale_kickout():
+    N, cap = 2, 2
+    params = fleet_params(N)
+    cache = empty_fleet_cache(N, cap)
+    samples = jnp.ones((N,))
+    group = jnp.zeros((N,), jnp.int32)
+    p = jnp.asarray([[1], [0]], jnp.int32)
+    cache = gossip.exchange(params, cache, p, 0, samples, group,
+                            tau_max=5, policy="lru")
+    # far in the future with no refresh: entries must be kicked out
+    none = jnp.asarray([[-1], [-1]], jnp.int32)
+    cache = gossip.exchange(params, cache, none, 20, samples, group,
+                            tau_max=5, policy="lru")
+    assert int(jnp.sum(cache.valid)) == 0
+
+
+def test_exchange_newest_copy_wins():
+    """When both sides hold copies of the same origin, keep the freshest."""
+    N, cap = 3, 2
+    params = fleet_params(N)
+    samples = jnp.ones((N,))
+    group = jnp.zeros((N,), jnp.int32)
+    cache = empty_fleet_cache(N, cap)
+    # agent0 caches model2@t=0; agent1 meets 2 at t=3 (fresher copy)
+    cache = gossip.exchange(params, cache, jnp.asarray([[2], [-1], [0]]),
+                            0, samples, group, tau_max=100, policy="lru")
+    cache = gossip.exchange(params, cache, jnp.asarray([[-1], [2], [1]]),
+                            3, samples, group, tau_max=100, policy="lru")
+    # t=4: 0 meets 1 -> 0 should hold model2 with ts=3, not ts=0
+    cache = gossip.exchange(params, cache, jnp.asarray([[1], [0], [-1]]),
+                            4, samples, group, tau_max=100, policy="lru")
+    o0 = np.asarray(cache.origin[0])
+    ts0 = np.asarray(cache.ts[0])
+    idx = np.argwhere(o0 == 2)
+    assert len(idx) == 1
+    assert int(ts0[idx[0, 0]]) == 3
+
+
+def test_all_policies_run():
+    """Every cache-update policy must execute through the fleet exchange."""
+    import jax
+    N, cap = 4, 2
+    params = fleet_params(N)
+    samples = jnp.ones((N,))
+    group = jnp.asarray([0, 0, 1, 1], jnp.int32)
+    partners = jnp.asarray([[1], [0], [3], [2]], jnp.int32)
+    for policy in ("lru", "fifo", "random", "group"):
+        cache = empty_fleet_cache(N, cap)
+        out = gossip.exchange(
+            params, cache, partners, 0, samples, group, tau_max=10,
+            policy=policy,
+            group_slots=jnp.asarray([1, 1], jnp.int32),
+            rng=jax.random.PRNGKey(0))
+        assert int(jnp.sum(out.valid)) >= N  # every agent cached someone
+
+
+def test_exchange_invariants_random_contact_graphs():
+    """Property: after arbitrary contact sequences — caches never exceed
+    capacity, hold ≤1 entry per origin, and never violate τ_max."""
+    import jax
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 999), epochs=st.integers(1, 5),
+           tau_max=st.integers(1, 6))
+    def prop(seed, epochs, tau_max):
+        N, cap = 5, 3
+        key = jax.random.PRNGKey(seed)
+        params = fleet_params(N)
+        cache = empty_fleet_cache(N, cap)
+        samples = jnp.ones((N,))
+        group = jnp.zeros((N,), jnp.int32)
+        for t in range(epochs):
+            key, k = jax.random.split(key)
+            met = jax.random.bernoulli(k, 0.4, (N, N))
+            met = met & met.T & ~jnp.eye(N, dtype=bool)
+            from repro.mobility.manhattan import partners_from_contacts
+            partners = partners_from_contacts(met, 2)
+            cache = gossip.exchange(params, cache, partners, t, samples,
+                                    group, tau_max=tau_max, policy="lru")
+            valid = np.asarray(cache.valid)
+            ts = np.asarray(cache.ts)
+            origin = np.asarray(cache.origin)
+            assert valid.sum(axis=1).max() <= cap
+            for i in range(N):
+                origins_i = origin[i][valid[i]]
+                assert len(set(origins_i.tolist())) == len(origins_i)
+                assert ((t - ts[i][valid[i]]) < tau_max).all()
+
+    prop()

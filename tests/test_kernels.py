@@ -1,0 +1,86 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles
+(interpret=True on CPU, per the assignment)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("C,D", [(1, 128), (3, 1000), (10, 70001),
+                                 (16, 131072), (30, 257)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_cache_aggregate_sweep(C, D, dtype):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(C * D), 3)
+    cache = jax.random.normal(k1, (C, D), dtype)
+    w = jax.random.uniform(k2, (C,))
+    valid = (jax.random.uniform(k3, (C,)) > 0.3).astype(jnp.float32)
+    out = ops.cache_aggregate(cache, w, valid, block_d=8192)
+    exp = ref.cache_aggregate_ref(cache, w, valid)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=tol, atol=tol)
+
+
+def test_cache_aggregate_all_invalid():
+    cache = jnp.ones((4, 256))
+    out = ops.cache_aggregate(cache, jnp.ones((4,)), jnp.zeros((4,)))
+    np.testing.assert_allclose(np.asarray(out), 0.0)
+
+
+@pytest.mark.parametrize(
+    "B,S,KV,G,hd,win",
+    [(2, 700, 2, 4, 64, 0),     # unaligned S
+     (1, 1024, 4, 1, 128, 0),   # MHA-style (G=1)
+     (2, 1500, 2, 2, 64, 256),  # sliding window
+     (3, 300, 1, 8, 128, 0),    # deep GQA fan-out
+     (2, 512, 2, 7, 64, 0)])    # odd group count (qwen-like)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_sweep(B, S, KV, G, hd, win, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(B * S + hd), 4)
+    q = jax.random.normal(ks[0], (B, KV, G, hd), dtype)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), dtype)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), dtype)
+    length = jnp.asarray(S - 17, jnp.int32)
+    out = ops.decode_attention(q, k, v, length, window=win, block_s=256)
+    exp = ref.decode_attention_ref(q, k, v, length, window=win)
+    tol = 1e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=tol, atol=tol)
+
+
+@settings(max_examples=15, deadline=None)
+@given(length=st.integers(1, 160), block_s=st.sampled_from([32, 64, 128]))
+def test_decode_attention_length_property(length, block_s):
+    """Any valid length, any block size: masked positions never leak."""
+    B, S, KV, G, hd = 1, 160, 2, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(length), 4)
+    q = jax.random.normal(ks[0], (B, KV, G, hd))
+    k = jax.random.normal(ks[1], (B, S, KV, hd))
+    v = jax.random.normal(ks[2], (B, S, KV, hd))
+    # poison the invalid region: must not affect the result
+    k_poison = k.at[:, length:].set(1e4)
+    v_poison = v.at[:, length:].set(-1e4)
+    out = ops.decode_attention(q, k_poison, v_poison,
+                               jnp.asarray(length, jnp.int32),
+                               block_s=block_s)
+    exp = ref.decode_attention_ref(q, k, v, jnp.asarray(length, jnp.int32))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_decode_attention_matches_softmax_directly():
+    """Cross-check the oracle itself against a dense softmax."""
+    B, S, KV, G, hd = 2, 64, 2, 3, 16
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    q = jax.random.normal(ks[0], (B, KV, G, hd))
+    k = jax.random.normal(ks[1], (B, S, KV, hd))
+    v = jax.random.normal(ks[2], (B, S, KV, hd))
+    out = ref.decode_attention_ref(q, k, v, jnp.asarray(S, jnp.int32))
+    s = jnp.einsum("bkgh,bskh->bkgs", q, k) / np.sqrt(hd)
+    p = jax.nn.softmax(s, axis=-1)
+    exp = jnp.einsum("bkgs,bskh->bkgh", p, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), rtol=1e-5,
+                               atol=1e-5)

@@ -1,0 +1,77 @@
+"""Manhattan mobility model invariants."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import MobilityConfig
+from repro.mobility import manhattan as mob
+
+
+CFG = MobilityConfig(grid_w=6, grid_h=9, step_seconds=1.0)
+
+
+def test_positions_stay_on_grid():
+    N = 20
+    state = mob.init_mobility(jax.random.PRNGKey(0), N, CFG)
+    key = jax.random.PRNGKey(1)
+    for _ in range(50):
+        key, k = jax.random.split(key)
+        state = mob.step(state, k, CFG)
+    pos = np.asarray(mob.positions(state, CFG))
+    assert (pos[:, 0] >= -1e-3).all()
+    assert (pos[:, 0] <= (CFG.grid_w - 1) * CFG.block_w + 1e-3).all()
+    assert (pos[:, 1] >= -1e-3).all()
+    assert (pos[:, 1] <= (CFG.grid_h - 1) * CFG.block_h + 1e-3).all()
+    # a vehicle is always on a street: x or y aligns with the grid
+    on_x = np.min(np.abs(pos[:, 0:1] - np.arange(CFG.grid_w) * CFG.block_w),
+                  axis=1) < 1e-2
+    on_y = np.min(np.abs(pos[:, 1:2] - np.arange(CFG.grid_h) * CFG.block_h),
+                  axis=1) < 1e-2
+    assert (on_x | on_y).all()
+
+
+def test_contacts_symmetric_no_self():
+    state = mob.init_mobility(jax.random.PRNGKey(2), 30, CFG)
+    met = np.asarray(mob.contacts_now(state, CFG))
+    assert (met == met.T).all()
+    assert not met.diagonal().any()
+
+
+def test_band_restriction():
+    N = 12
+    band, group = mob.make_bands(N, 3, free_per_band=1)
+    state = mob.init_mobility(jax.random.PRNGKey(3), N, CFG)
+    state = mob.init_mobility(jax.random.PRNGKey(3), N, CFG,
+                              band=jnp.asarray(band))
+    key = jax.random.PRNGKey(4)
+    for _ in range(100):
+        key, k = jax.random.split(key)
+        state = mob.step(state, k, CFG)
+    y = np.asarray(state.node[:, 1])
+    b = np.asarray(band)
+    h = CFG.grid_h // 3
+    for i in range(N):
+        if b[i] >= 0:
+            assert b[i] * h <= y[i] < (b[i] + 1) * h + 1, (i, b[i], y[i])
+
+
+def test_simulate_epoch_contact_union():
+    state = mob.init_mobility(jax.random.PRNGKey(5), 16, CFG)
+    state2, met = mob.simulate_epoch(state, jax.random.PRNGKey(6), CFG, 30.0)
+    met = np.asarray(met)
+    assert (met == met.T).all()
+    # higher speed should produce at least as many contacts on average
+    fast = MobilityConfig(grid_w=6, grid_h=9, speed=3 * CFG.speed)
+    _, met_fast = mob.simulate_epoch(state, jax.random.PRNGKey(6), fast, 30.0)
+    assert np.asarray(met_fast).sum() >= met.sum() * 0.5  # stochastic slack
+
+
+def test_partners_padding():
+    met = jnp.asarray([[False, True, True], [True, False, False],
+                       [True, False, False]])
+    p = np.asarray(mob.partners_from_contacts(met, 2))
+    assert p[0].tolist() == [1, 2]
+    assert p[1].tolist() == [0, -1]

@@ -1,0 +1,58 @@
+"""Federated partitioner tests (paper §4.1 settings)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.fl import partition as P
+
+
+def labels(n=1000, classes=10, seed=0):
+    return np.random.default_rng(seed).integers(0, classes, n)
+
+
+def test_iid_covers_all():
+    y = labels()
+    idx, counts = P.iid_partition(np.random.default_rng(0), y, 10)
+    used = np.concatenate([idx[i, :counts[i]] for i in range(10)])
+    assert len(np.unique(used)) == len(y)
+
+
+def test_shards_noniid_label_concentration():
+    y = labels(2000)
+    idx, counts = P.shards_noniid_partition(np.random.default_rng(0), y, 20)
+    # uneven counts: some agents have ~4x the shards of others
+    assert counts.max() >= 3 * counts.min()
+    # each agent sees few distinct labels (exreme non-iid)
+    distinct = [len(np.unique(y[idx[i, :counts[i]]])) for i in range(20)]
+    assert np.median(distinct) <= 4
+
+
+def test_dirichlet_partition_nonempty():
+    y = labels()
+    idx, counts = P.dirichlet_partition(np.random.default_rng(0), y, 15,
+                                        pi=0.5)
+    assert (counts >= 1).all()
+    used = np.concatenate([idx[i, :counts[i]] for i in range(15)])
+    assert len(used) >= len(y) * 0.95
+
+
+def test_grouped_partition_label_areas():
+    y = labels(3000)
+    groups = np.repeat(np.arange(3), 4)
+    area_labels = [[0, 1, 2, 3], [4, 5, 6], [7, 8, 9]]
+    idx, counts = P.grouped_label_partition(np.random.default_rng(0), y, 12,
+                                            groups, area_labels)
+    for i in range(12):
+        seen = set(np.unique(y[idx[i, :counts[i]]]).tolist())
+        assert seen <= set(area_labels[groups[i]])
+
+
+@settings(max_examples=10, deadline=None)
+@given(n_agents=st.integers(2, 30), seed=st.integers(0, 20))
+def test_partitions_within_bounds(n_agents, seed):
+    y = labels(500, seed=seed)
+    for fn in (P.iid_partition, P.shards_noniid_partition,
+               P.dirichlet_partition):
+        idx, counts = fn(np.random.default_rng(seed), y, n_agents)
+        assert idx.shape[0] == n_agents
+        assert (counts <= idx.shape[1]).all()
+        assert (idx < len(y)).all() and (idx >= 0).all()

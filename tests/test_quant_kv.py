@@ -1,0 +1,80 @@
+"""Int8 KV-cache decode: quantization roundtrip + kernel vs f32 oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.quant_kv import (decode_attention_quant, dequantize_kv,
+                                    quantize_kv)
+
+
+def test_quant_roundtrip_error_bounded():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 64, 4, 32)) * 3.0
+    q, s = quantize_kv(x)
+    err = jnp.max(jnp.abs(dequantize_kv(q, s) - x))
+    # symmetric int8: per-row error <= scale/2 = amax/254
+    assert float(err) <= float(jnp.max(jnp.abs(x))) / 127.0
+
+
+@pytest.mark.parametrize("B,S,KV,G,hd,win",
+                         [(2, 700, 2, 4, 64, 0),
+                          (1, 300, 1, 8, 128, 0),
+                          (1, 1024, 2, 2, 64, 256)])
+def test_quant_decode_close_to_f32(B, S, KV, G, hd, win):
+    ks = jax.random.split(jax.random.PRNGKey(B * S), 3)
+    q = jax.random.normal(ks[0], (B, KV, G, hd))
+    k = jax.random.normal(ks[1], (B, S, KV, hd))
+    v = jax.random.normal(ks[2], (B, S, KV, hd))
+    length = jnp.asarray(S - 11, jnp.int32)
+    k_q, k_s = quantize_kv(k)
+    v_q, v_s = quantize_kv(v)
+    out = decode_attention_quant(q, k_q, k_s, v_q, v_s, length,
+                                 window=win, block_s=256)
+    exp = ref.decode_attention_ref(q, k, v, length, window=win)
+    # int8 KV error bound: ~1% of output scale
+    err = float(jnp.max(jnp.abs(out - exp)))
+    assert err < 5e-2, err
+
+
+def test_quant_matches_dequantized_exact():
+    """Kernel(int8) must equal oracle(dequantized int8) to float tolerance
+    — isolates kernel bugs from quantization error."""
+    B, S, KV, G, hd = 1, 256, 2, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (B, KV, G, hd))
+    k = jax.random.normal(ks[1], (B, S, KV, hd))
+    v = jax.random.normal(ks[2], (B, S, KV, hd))
+    length = jnp.asarray(200, jnp.int32)
+    k_q, k_s = quantize_kv(k)
+    v_q, v_s = quantize_kv(v)
+    out = decode_attention_quant(q, k_q, k_s, v_q, v_s, length, block_s=128)
+    exp = ref.decode_attention_ref(q, dequantize_kv(k_q, k_s).astype(jnp.float32),
+                                   dequantize_kv(v_q, v_s).astype(jnp.float32),
+                                   length)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_kv_quant_decode_end_to_end():
+    """cfg.kv_quant: int8 cache decode must track the f32 forward closely."""
+    import dataclasses
+    from repro.configs import registry as R
+    from repro.models import registry as M
+    from repro.models import transformer as T
+
+    key = jax.random.PRNGKey(0)
+    cfg = dataclasses.replace(R.get_smoke_config("internlm2-1.8b"),
+                              compute_dtype="float32", kv_quant=True)
+    p = M.init_params(cfg, key)
+    toks = jax.random.randint(key, (2, 20), 0, cfg.vocab)
+    full, _ = T.forward(p, cfg, toks)
+    _, state = T.prefill(p, cfg, toks[:, :12], max_len=28)
+    assert state.k.dtype == jnp.int8 and state.k_scale is not None
+    outs = []
+    for t in range(12, 20):
+        lg, state = T.decode_step(p, cfg, state, toks[:, t : t + 1])
+        outs.append(lg)
+    dec = jnp.concatenate(outs, axis=1)
+    err = float(jnp.max(jnp.abs(dec - full[:, 12:20])))
+    assert err < 0.35, err

@@ -1,0 +1,99 @@
+"""Roofline machinery unit tests: HLO collective parsing, extrapolation,
+staleness-decayed aggregation weights."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cache as C
+from repro.core.aggregate import aggregate, aggregation_weights
+from repro.launch.roofline import (RooflineTerms, collective_bytes,
+                                   extrapolate, model_flops, _tensor_bytes)
+from repro.configs import registry as R
+from repro.configs.base import get_shape
+
+
+HLO = """
+  %ag = bf16[16,1024]{1,0} all-gather(%x), replica_groups=...
+  %ar.1 = f32[8,8]{1,0} all-reduce(%y), channel_id=1
+  %tuple = (f32[4,4]{1,0}, f32[2]{0}) all-reduce(%a, %b), channel_id=2
+  %cp = u32[128]{0} collective-permute(%z), source_target_pairs=...
+  %noise = f32[99]{0} add(%p, %q)
+  %a2a = bf16[32,32]{1,0} all-to-all(%w), dimensions={0}
+"""
+
+
+def test_tensor_bytes():
+    assert _tensor_bytes("bf16[16,1024]{1,0}") == 16 * 1024 * 2
+    assert _tensor_bytes("(f32[4,4], f32[2])") == 16 * 4 + 8
+
+
+def test_collective_bytes_parses_ops():
+    out = collective_bytes(HLO)
+    assert out["all-gather"] == 16 * 1024 * 2
+    assert out["all-reduce"] == 2 * (8 * 8 * 4 + 16 * 4 + 2 * 4)  # 2x rule
+    assert out["collective-permute"] == 128 * 4
+    assert out["all-to-all"] == 32 * 32 * 2
+
+
+def test_extrapolation_linear():
+    b2 = {"flops": 100.0, "bytes": 10.0}
+    b3 = {"flops": 150.0, "bytes": 14.0}
+    out = extrapolate(b2, b3, 10)
+    assert out["flops"] == 100 + 8 * 50
+    assert out["bytes"] == 10 + 8 * 4
+
+
+def test_bottleneck_classification():
+    t = RooflineTerms(arch="a", shape="s", mesh="m", chips=256,
+                      hlo_flops=197e12, hlo_bytes=819e9 * 2,
+                      coll_bytes=50e9 * 0.5, coll_breakdown={},
+                      model_flops=197e12 * 256 * 0.5,
+                      bytes_per_device=1.0)
+    assert abs(t.compute_s - 1.0) < 1e-9
+    assert abs(t.memory_s - 2.0) < 1e-9
+    assert abs(t.collective_s - 0.5) < 1e-9
+    assert t.bottleneck == "memory"
+    assert abs(t.useful_flops_ratio - 0.5) < 1e-9
+
+
+def test_model_flops_kinds():
+    cfg = R.get_config("internlm2-1.8b")
+    n = cfg.active_param_count()
+    tr = model_flops(cfg, get_shape("train_4k"))
+    pf = model_flops(cfg, get_shape("prefill_32k"))
+    dc = model_flops(cfg, get_shape("decode_32k"))
+    assert tr == 6.0 * n * 4096 * 256
+    assert pf == 2.0 * n * 32768 * 32
+    assert dc == 2.0 * n * 128
+
+
+def test_moe_active_flops_smaller():
+    moe = R.get_config("mixtral-8x7b")
+    assert moe.active_param_count() < 0.4 * moe.param_count()
+
+
+def test_staleness_decay_weights():
+    ages = jnp.asarray([0, 2, 4], jnp.int32)
+    w_self, w = aggregation_weights(
+        1.0, jnp.ones((3,)), jnp.ones((3,)), ages=ages, staleness_decay=0.5)
+    # raw: self 1, cache [1, .25, .0625] -> normalized ratios preserved
+    np.testing.assert_allclose(float(w[0] / w[1]), 4.0, rtol=1e-5)
+    np.testing.assert_allclose(float(w[0] / w[2]), 16.0, rtol=1e-5)
+    # γ=1 recovers the paper's flat weights
+    _, w_flat = aggregation_weights(
+        1.0, jnp.ones((3,)), jnp.ones((3,)), ages=ages, staleness_decay=1.0)
+    assert np.allclose(np.asarray(w_flat), w_flat[0])
+
+
+def test_aggregate_with_decay_prefers_fresh():
+    params = {"w": jnp.zeros((2,))}
+    cache = C.init_cache(params, 2)
+    cache = C.insert(cache, {"w": jnp.full((2,), 10.0)}, t=0, origin=1,
+                     samples=1.0, group=0, tau_max=100)
+    cache = C.insert(cache, {"w": jnp.full((2,), 20.0)}, t=9, origin=2,
+                     samples=1.0, group=0, tau_max=100)
+    flat = aggregate(params, 1.0, cache, t=10, include_self=False)
+    decayed = aggregate(params, 1.0, cache, t=10, staleness_decay=0.5,
+                        include_self=False)
+    # flat: (10+20)/2 = 15; decayed leans toward the fresh model (20)
+    np.testing.assert_allclose(float(flat["w"][0]), 15.0, rtol=1e-5)
+    assert float(decayed["w"][0]) > 19.0

@@ -1,0 +1,55 @@
+"""Sharding rules: every produced PartitionSpec must divide its dim for
+every assigned architecture (the dry-run's correctness precondition)."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import registry as R
+from repro.launch import specs as specs_lib
+from repro.sharding.rules import ShardingRules, param_specs
+
+AXES = {"model": 16, "data": 16, "pod": 2}
+
+
+def check_divisible(shapes, specs):
+    flat_s = jax.tree_util.tree_leaves(shapes)
+    flat_p = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_s) == len(flat_p)
+    for x, spec in zip(flat_s, flat_p):
+        for dim, axis in zip(x.shape, spec):
+            if axis is None:
+                continue
+            names = axis if isinstance(axis, tuple) else (axis,)
+            size = 1
+            for n in names:
+                size *= AXES[n]
+            assert dim % size == 0, (x.shape, spec)
+
+
+@pytest.mark.parametrize("arch", R.ARCH_IDS)
+@pytest.mark.parametrize("fsdp", [False, True])
+def test_param_specs_divisible(arch, fsdp):
+    cfg = R.get_config(arch)
+    shapes = specs_lib.param_shapes(cfg)
+    rules = ShardingRules(model_size=16, data_size=16, fsdp=fsdp)
+    specs = param_specs(cfg, shapes, rules)
+    check_divisible(shapes, specs)
+
+
+@pytest.mark.parametrize("arch", R.ARCH_IDS)
+def test_some_params_are_sharded(arch):
+    """The rules must actually shard the big tensors (no all-replicated)."""
+    cfg = R.get_config(arch)
+    shapes = specs_lib.param_shapes(cfg)
+    rules = ShardingRules(model_size=16, data_size=16, fsdp=False)
+    specs = param_specs(cfg, shapes, rules)
+    flat_s = jax.tree_util.tree_leaves(shapes)
+    flat_p = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    sharded_elems = sum(
+        int(__import__("numpy").prod(x.shape))
+        for x, s in zip(flat_s, flat_p) if any(a is not None for a in s))
+    total = sum(int(__import__("numpy").prod(x.shape)) for x in flat_s)
+    assert sharded_elems / total > 0.9, (
+        f"{arch}: only {sharded_elems/total:.0%} of params sharded")

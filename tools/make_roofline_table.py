@@ -1,0 +1,68 @@
+"""Build the EXPERIMENTS.md §Roofline markdown table from the dry-run
+artifacts in experiments/dryrun.
+
+    PYTHONPATH=src python tools/make_roofline_table.py [--mesh single]
+"""
+import argparse
+import glob
+import json
+import os
+
+
+def fmt_s(x):
+    if x >= 1.0:
+        return f"{x:8.2f}s "
+    return f"{x * 1e3:8.2f}ms"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+
+    rows = []
+    for path in sorted(glob.glob(os.path.join(args.dir,
+                                              f"*_{args.mesh}.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        rows.append(r)
+
+    shape_order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
+                   "long_500k": 3}
+    rows.sort(key=lambda r: (r["arch"], shape_order.get(r["shape"], 9)))
+
+    if args.markdown:
+        print("| arch | shape | compute | memory | collective | bottleneck"
+              " | useful FLOPs | GiB/dev | note |")
+        print("|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r["status"] == "skip":
+            if args.markdown:
+                print(f"| {r['arch']} | {r['shape']} | — | — | — | — | — |"
+                      f" — | SKIP (full attention) |")
+            else:
+                print(f"{r['arch']:<20} {r['shape']:<12} SKIP")
+            continue
+        if r["status"] != "ok" or "roofline" not in r:
+            print(f"{r['arch']:<20} {r['shape']:<12} {r['status']}")
+            continue
+        t = r["roofline"]
+        gib = t["bytes_per_device"] / 2**30
+        note = "over-HBM" if gib > 16 else ""
+        if args.markdown:
+            print(f"| {r['arch']} | {r['shape']} | {fmt_s(t['compute_s'])} |"
+                  f" {fmt_s(t['memory_s'])} | {fmt_s(t['collective_s'])} |"
+                  f" {t['bottleneck']} | {t['useful_flops_ratio']:.0%} |"
+                  f" {gib:.1f} | {note} |")
+        else:
+            print(f"{r['arch']:<20} {r['shape']:<12} "
+                  f"comp={fmt_s(t['compute_s'])} mem={fmt_s(t['memory_s'])} "
+                  f"coll={fmt_s(t['collective_s'])} -> "
+                  f"{t['bottleneck']:<10} useful={t['useful_flops_ratio']:.0%}"
+                  f" dev={gib:6.1f}GiB {note}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,123 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Perf-iteration driver (§Perf hillclimb): lower one (arch × shape) with a
+named set of knob overrides, extract the extrapolated roofline metrics and
+print before/after-comparable numbers.
+
+    PYTHONPATH=src python tools/perf_iter.py --arch deepseek-67b \
+        --shape train_4k --variant baseline
+    PYTHONPATH=src python tools/perf_iter.py --arch deepseek-67b \
+        --shape train_4k --variant mb4_bf16 --microbatches 4 \
+        --param-dtype bfloat16
+
+Writes experiments/perf/<arch>_<shape>_<variant>.json.
+"""
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+
+from repro.configs import registry as cfg_registry
+from repro.launch.dryrun import (_cost_metrics, build_lowering, make_rules)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import (RooflineTerms, extrapolate, format_row,
+                                   model_flops, summarize_memory)
+from repro.configs.base import get_shape
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--param-dtype", default="")
+    ap.add_argument("--compute-dtype", default="")
+    ap.add_argument("--remat-policy", default="")
+    ap.add_argument("--moe-token-shard", action="store_true")
+    ap.add_argument("--moe-shard-map", action="store_true")
+    ap.add_argument("--kv-quant", action="store_true")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--fsdp", action="store_true")
+    ap.add_argument("--pure-fsdp", action="store_true",
+                    help="no TP: batch over both axes, weights FSDP-sharded")
+    ap.add_argument("--cache-size", type=int, default=3)
+    ap.add_argument("--kv-chunk", type=int, default=512)
+    ap.add_argument("--out", default="experiments/perf")
+    args = ap.parse_args()
+
+    cfg = cfg_registry.get_config(args.arch)
+    over = {}
+    if args.param_dtype:
+        over["param_dtype"] = args.param_dtype
+    if args.compute_dtype:
+        over["compute_dtype"] = args.compute_dtype
+    if args.remat_policy:
+        over["remat_policy"] = args.remat_policy
+    if args.moe_token_shard:
+        over["moe_token_shard"] = True
+    if args.moe_shard_map:
+        over["moe_shard_map"] = True
+    if args.kv_quant:
+        over["kv_quant"] = True
+    if over:
+        cfg = dataclasses.replace(cfg, **over)
+
+    mesh = make_production_mesh()
+    rules = make_rules(cfg, mesh)
+    if args.no_fsdp:
+        rules = dataclasses.replace(rules, fsdp=False)
+    if args.fsdp:
+        rules = dataclasses.replace(rules, fsdp=True)
+    if args.pure_fsdp:
+        rules = dataclasses.replace(rules, pure_fsdp=True, fsdp=False)
+
+    t0 = time.time()
+    # full scan compile for memory analysis
+    low, _ = build_lowering(cfg, args.shape, mesh, scan_layers=True,
+                            cache_size=args.cache_size, rules=rules,
+                            microbatches=args.microbatches,
+                            kv_chunk=args.kv_chunk)
+    mem = summarize_memory(low.compile().memory_analysis())
+    # 2L/3L extrapolation for flops/bytes/collectives
+    bases = {}
+    for L in (2, 3):
+        cfg_l = dataclasses.replace(
+            cfg, n_layers=L, enc_layers=L if cfg.enc_dec else 0)
+        low_l, _ = build_lowering(cfg_l, args.shape, mesh,
+                                  scan_layers=False,
+                                  cache_size=args.cache_size, rules=rules,
+                                  microbatches=args.microbatches,
+                                  kv_chunk=args.kv_chunk)
+        bases[L] = _cost_metrics(low_l.compile())
+    total = extrapolate(bases[2], bases[3], cfg.n_layers)
+    terms = RooflineTerms(
+        arch=args.arch, shape=args.shape, mesh=f"single/{args.variant}",
+        chips=mesh.devices.size,
+        hlo_flops=total["flops"], hlo_bytes=total["bytes"],
+        coll_bytes=total["coll_bytes"],
+        coll_breakdown={k[5:]: v for k, v in total.items()
+                        if k.startswith("coll_")},
+        model_flops=model_flops(cfg, get_shape(args.shape)),
+        bytes_per_device=mem["total_bytes_per_device"] or 0)
+    print(format_row(terms))
+    print(f"  coll breakdown: "
+          f"{ {k: f'{v/1e9:.1f}GB' for k, v in terms.coll_breakdown.items() if v} }")
+    print(f"  wall: {time.time() - t0:.0f}s")
+
+    os.makedirs(args.out, exist_ok=True)
+    path = os.path.join(args.out,
+                        f"{args.arch}_{args.shape}_{args.variant}.json")
+    with open(path, "w") as f:
+        json.dump({"variant": args.variant, "overrides": over,
+                   "microbatches": args.microbatches,
+                   "fsdp": rules.fsdp, "memory": mem,
+                   "roofline": terms.to_dict()}, f, indent=1, default=str)
+    print(f"  -> {path}")
+
+
+if __name__ == "__main__":
+    main()
