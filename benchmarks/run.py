@@ -12,6 +12,8 @@ BENCHES = [
     ("bench_staleness_stats", "paper Table 2 (τ_max vs #cached/age)"),
     ("bench_tau_max", "paper Fig. 4 (τ_max vs convergence)"),
     ("bench_mobility", "paper Fig. 5 (mobility speed)"),
+    ("bench_mobility_models", "beyond-paper: convergence across mobility "
+                              "models + encounter stats"),
     ("bench_group_cache", "paper Fig. 6 (group-based caching)"),
     ("bench_staleness_decay", "beyond-paper: staleness-decayed aggregation"),
     ("bench_cache_policies", "paper contribution 3: LRU vs FIFO vs Random"),

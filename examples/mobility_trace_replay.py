@@ -1,0 +1,91 @@
+"""Drive Cached-DFL from a contact-trace schedule instead of simulated
+motion — the workflow for replaying real DTN traces or crafted stress
+scenarios through the unchanged experiment loop.
+
+The demo builds a "commuter" schedule with community structure: agents
+mostly meet inside their home cluster, plus a sparse set of cross-cluster
+"commute" contacts — exactly the regime where model caching carries
+information between communities. It saves the schedule as .npz (the
+edge-list layout real traces arrive in), replays it end-to-end, and
+prints the measured encounter statistics next to the learning curve.
+
+    PYTHONPATH=src python examples/mobility_trace_replay.py [--epochs 12]
+"""
+import argparse
+import os
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.configs.base import DFLConfig, MobilityConfig
+from repro.fl.experiment import ExperimentConfig, run_experiment
+from repro.mobility import stats
+from repro.mobility import trace as trace_lib
+
+
+def commuter_edges(n_agents: int, n_clusters: int, T: int, seed: int = 0):
+    """Edge list [time, src, dst]: dense in-cluster meetings + rare bridges."""
+    rng = np.random.default_rng(seed)
+    cluster = np.arange(n_agents) % n_clusters
+    time, src, dst = [], [], []
+    for t in range(T):
+        # in-cluster: each cluster holds one random rendezvous per frame
+        for c in range(n_clusters):
+            members = np.flatnonzero(cluster == c)
+            if len(members) >= 2 and rng.random() < 0.6:
+                i, j = rng.choice(members, size=2, replace=False)
+                time.append(t), src.append(i), dst.append(j)
+        # commute: occasionally a random cross-cluster pair meets
+        if rng.random() < 0.15:
+            i, j = rng.choice(n_agents, size=2, replace=False)
+            time.append(t), src.append(i), dst.append(j)
+    return np.asarray(time), np.asarray(src), np.asarray(dst)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--epochs", type=int, default=12)
+    ap.add_argument("--agents", type=int, default=12)
+    ap.add_argument("--clusters", type=int, default=3)
+    ap.add_argument("--trace", default="", help="existing .npz to replay")
+    args = ap.parse_args()
+
+    frames_per_epoch, T = 20, 20 * 40
+    if args.trace:
+        path = args.trace
+    else:
+        path = os.path.join(tempfile.mkdtemp(prefix="trace_replay_"),
+                            "commuter.npz")
+        t, i, j = commuter_edges(args.agents, args.clusters, T)
+        np.savez_compressed(path, time=t, src=i, dst=j, num_steps=T,
+                            num_agents=args.agents)
+        print(f"wrote synthetic commuter trace: {path} "
+              f"({len(t)} contact events, {T} frames)")
+
+    mobility = MobilityConfig(model="trace", trace_path=path,
+                              trace_frames_per_epoch=frames_per_epoch)
+
+    # encounter statistics of the schedule we are about to replay
+    seq, _ = trace_lib.load_trace(path)
+    st = stats.encounter_stats(jax.numpy.asarray(seq), mobility.step_seconds)
+    print("trace stats:", stats.summarize(st))
+
+    cfg = ExperimentConfig(
+        algorithm="cached",
+        distribution="noniid",
+        dfl=DFLConfig(num_agents=args.agents, cache_size=5, local_steps=5,
+                      batch_size=32, epoch_seconds=frames_per_epoch),
+        mobility=mobility,
+        epochs=args.epochs,
+        n_train=2000, n_test=400, image_hw=16,
+        partner_sample="random",
+        lr_plateau=False,
+    )
+    hist = run_experiment(cfg, verbose=True)
+    print(f"replay: best_acc={hist['best_acc']:.4f} "
+          f"epochs={len(hist['epoch'])} wall={hist['wall_s']:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -148,12 +148,41 @@ class DFLConfig:
 
 @dataclasses.dataclass(frozen=True)
 class MobilityConfig:
-    """Manhattan mobility model (paper §4.4)."""
-    speed: float = 13.89            # m/s
+    """Mobility scenario config; ``model`` picks a registered mobility model.
+
+    Registered models (see ``repro.mobility.registry``): ``manhattan``
+    (paper §4.4 grid), ``random_waypoint``, ``levy_walk``, ``community``
+    (RPGM group mobility), ``trace`` (contact-schedule replay). Shared
+    fields come first; per-model fields are grouped below and ignored by
+    models that don't use them.
+    """
+    model: str = "manhattan"
+    speed: float = 13.89            # m/s (manhattan / levy cruise speed)
     comm_range: float = 100.0       # meters
+    step_seconds: float = 1.0       # sim integration step
+    num_bands: int = 3              # area bands for group-restricted runs
+    # --- manhattan grid (paper §4.4) ---
     p_straight: float = 0.5
     grid_w: int = 10                # intersections east-west
     grid_h: int = 30                # intersections north-south
     block_w: float = 274.0          # meters between avenues
     block_h: float = 80.0           # meters between streets
-    step_seconds: float = 1.0       # sim integration step
+    # --- continuous plane (random_waypoint / levy_walk / community) ---
+    area_w: float = 2000.0          # meters
+    area_h: float = 2000.0          # meters
+    # --- random waypoint ---
+    v_min: float = 5.0              # m/s, per-leg speed draw
+    v_max: float = 15.0
+    pause_max: float = 0.0          # seconds of pause at each waypoint
+    # --- levy walk (truncated power-law flight lengths) ---
+    levy_alpha: float = 1.5         # tail exponent, P(l) ∝ l^-(1+α)
+    levy_min_flight: float = 20.0   # meters
+    levy_max_flight: float = 2000.0
+    # --- community / RPGM group mobility ---
+    community_radius: float = 150.0 # members orbit within this of the center
+    center_speed: float = 5.0       # m/s, group-center waypoint speed
+    roam_prob: float = 0.05         # chance a member leg roams the full area
+    # --- contact-trace replay ---
+    trace_path: str = ""            # .npz with contacts [T,N,N] or edge list
+    trace_frames_per_epoch: int = 0 # 0 -> int(epoch_seconds / step_seconds)
+    trace_loop: bool = True         # wrap around vs hold last frame

@@ -1,9 +1,10 @@
 """Reusable fleet-experiment harness — the engine behind train.py, the
 benchmarks (one per paper figure/table) and the examples.
 
-Reproduces the paper's experimental loop: Manhattan mobility → contacts →
-Cached-DFL / DFL / CFL epochs → average-test-accuracy metric with
-ReduceLROnPlateau and early stopping.
+Reproduces the paper's experimental loop: mobility (any registered model,
+selected by ``MobilityConfig.model``) → contacts → Cached-DFL / DFL / CFL
+epochs → average-test-accuracy metric with ReduceLROnPlateau and early
+stopping.
 """
 from __future__ import annotations
 
@@ -21,7 +22,8 @@ from repro.configs.paper_models import CNNConfig, PAPER_CONFIGS
 from repro.core import rounds as rounds_lib
 from repro.data.synthetic import make_image_dataset
 from repro.fl import partition as part_lib
-from repro.mobility import manhattan as mob
+from repro.mobility import registry as mob_registry
+from repro.mobility.base import make_bands, partners_from_contacts
 from repro.models import cnn as cnn_lib
 from repro.optim.schedules import ReduceLROnPlateau
 
@@ -41,6 +43,7 @@ class ExperimentConfig:
     n_test: int = 1000
     image_hw: int = 0                 # 0 -> model default
     max_partners: int = 4
+    partner_sample: str = "lowest-id"  # lowest-id | random (radio budget)
     early_stop_patience: int = 20
     dirichlet_pi: float = 0.5
     overlap: int = 0                  # grouped: label overlap between areas
@@ -66,12 +69,19 @@ def _area_labels(num_groups: int, overlap: int, num_classes: int = 10):
 
 def build_fleet(cfg: ExperimentConfig):
     """Returns (model_cfg, state, data, counts, test_batch, mobility_state,
-    group_slots)."""
+    group_slots, mob_model, mob_cfg)."""
     model_cfg: CNNConfig = PAPER_CONFIGS[cfg.model]
     if cfg.image_hw:
         model_cfg = dataclasses.replace(model_cfg, image_hw=cfg.image_hw)
     rng = np.random.default_rng(cfg.seed)
     N = cfg.dfl.num_agents
+
+    # mobility: select the registered model by name; grouped runs thread the
+    # group count into the area-band restriction
+    mob_cfg = cfg.mobility
+    if cfg.distribution == "grouped" and mob_cfg.num_bands != cfg.num_groups:
+        mob_cfg = dataclasses.replace(mob_cfg, num_bands=cfg.num_groups)
+    mob_model = mob_registry.get_model(mob_cfg.model)
 
     tx, ty, ex, ey = make_image_dataset(
         cfg.seed, n_train=cfg.n_train, n_test=cfg.n_test,
@@ -87,7 +97,7 @@ def build_fleet(cfg: ExperimentConfig):
         idx, counts = part_lib.dirichlet_partition(rng, ty, N,
                                                    pi=cfg.dirichlet_pi)
     elif cfg.distribution == "grouped":
-        band, group = mob.make_bands(N, cfg.num_groups)
+        band, group = make_bands(N, cfg.num_groups)
         idx, counts = part_lib.grouped_label_partition(
             rng, ty, N, np.asarray(group),
             _area_labels(cfg.num_groups, cfg.overlap))
@@ -107,16 +117,16 @@ def build_fleet(cfg: ExperimentConfig):
     params0 = cnn_lib.init_params(model_cfg, key)
     state = rounds_lib.init_fleet(params0, N, cfg.dfl.cache_size,
                                   counts.astype(np.float32), group=group)
-    mstate = mob.init_mobility(jax.random.PRNGKey(cfg.seed + 1), N,
-                               cfg.mobility, band=band)
+    mstate = mob_model.init(jax.random.PRNGKey(cfg.seed + 1), N, mob_cfg,
+                            band=band)
     return (model_cfg, state, data, jnp.asarray(counts), test_batch, mstate,
-            group_slots)
+            group_slots, mob_model, mob_cfg)
 
 
 def run_experiment(cfg: ExperimentConfig, *, verbose: bool = False,
                    record_cache_stats: bool = False) -> Dict:
     (model_cfg, state, data, counts, test_batch, mstate,
-     group_slots) = build_fleet(cfg)
+     group_slots, mob_model, mob_cfg) = build_fleet(cfg)
 
     loss_fn = lambda p, b: cnn_lib.loss_fn(p, model_cfg, b["images"],
                                            b["labels"])
@@ -143,7 +153,7 @@ def run_experiment(cfg: ExperimentConfig, *, verbose: bool = False,
                 rounds_lib.cfl_epoch, lr=lr, rho=cfg.dfl.rho, **common))
         raise ValueError(cfg.algorithm)
 
-    sim = jax.jit(functools.partial(mob.simulate_epoch, cfg=cfg.mobility,
+    sim = jax.jit(functools.partial(mob_model.simulate_epoch, cfg=mob_cfg,
                                     seconds=cfg.dfl.epoch_seconds))
     eval_fn = jax.jit(functools.partial(rounds_lib.fleet_accuracy,
                                         acc_fn=acc_fn))
@@ -157,9 +167,15 @@ def run_experiment(cfg: ExperimentConfig, *, verbose: bool = False,
     best, best_epoch = -1.0, 0
     t0 = time.time()
     for ep in range(cfg.epochs):
-        key, k1, k2 = jax.random.split(key, 3)
+        # deterministic partner selection keeps the historical key stream
+        if cfg.partner_sample == "lowest-id":
+            key, k1, k2 = jax.random.split(key, 3)
+            k3 = None
+        else:
+            key, k1, k2, k3 = jax.random.split(key, 4)
         mstate, met = sim(mstate, k1)
-        partners = mob.partners_from_contacts(met, cfg.max_partners)
+        partners = partners_from_contacts(met, cfg.max_partners,
+                                          sample=cfg.partner_sample, key=k3)
         if cfg.algorithm == "cfl":
             state, _ = epoch_fn(state, data, counts, k2)
         else:

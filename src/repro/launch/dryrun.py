@@ -166,6 +166,8 @@ def _split_leading(bspecs):
 
 def _cost_metrics(compiled) -> dict:
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):   # jax <= 0.4.x: one dict per device
+        ca = ca[0] if ca else {}
     text = compiled.as_text()
     coll = collective_bytes(text)
     return {

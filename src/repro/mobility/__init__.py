@@ -1,4 +1,16 @@
+"""Pluggable mobility subsystem.
+
+Models are selected by name via :mod:`repro.mobility.registry`
+(``MobilityConfig.model``); all satisfy the :class:`~repro.mobility.base.
+MobilityModel` protocol and feed the same ``simulate_epoch → union
+contact matrix → partners_from_contacts`` contract the fleet loop uses.
+"""
+from repro.mobility.base import (  # noqa: F401
+    MobilityModel, contacts_from_positions, make_bands,
+    partners_from_contacts,
+)
+from repro.mobility.registry import available, get_model, register  # noqa: F401
+# Manhattan back-compat exports (historically `from repro.mobility import *`)
 from repro.mobility.manhattan import (  # noqa: F401
     MobilityState, init_mobility, positions, simulate_epoch,
-    partners_from_contacts, make_bands,
 )

@@ -1,0 +1,152 @@
+"""Mobility subsystem protocol + shared helpers.
+
+Every mobility model is a :class:`MobilityModel` bundle of pure, jit-able
+functions over an opaque pytree state:
+
+    init(key, num_agents, cfg, band=None)   -> state
+    step(state, key, cfg)                   -> state      (advance step_seconds)
+    positions(state, cfg)                   -> [N, 2] f32 (meters)
+    contacts_now(state, cfg)                -> [N, N] bool (symmetric, diag F)
+    simulate_epoch(state, key, cfg, seconds)-> (state, [N, N] bool union)
+
+The fleet loop in ``fl/experiment.py`` only consumes the
+``simulate_epoch -> union contact matrix -> partners_from_contacts``
+contract, so any registered model slots in unchanged. Models with
+community structure honour ``band`` ([N] int32, -1 = unrestricted) so the
+grouped data partition / group-cache case study works for all of them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MobilityConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class MobilityModel:
+    """A named mobility model: pure functions over an opaque state pytree."""
+    name: str
+    init: Callable[..., Any]
+    step: Callable[..., Any]
+    positions: Callable[..., Any]
+    contacts_now: Callable[..., Any]
+    simulate_epoch: Callable[..., Any]
+
+
+# ---------------------------------------------------------------------------
+# shared geometry / contact helpers
+# ---------------------------------------------------------------------------
+
+def contacts_from_positions(pos: jax.Array, comm_range: float) -> jax.Array:
+    """[N, N] bool symmetric contact matrix (diag False) from positions."""
+    d2 = jnp.sum((pos[:, None] - pos[None, :]) ** 2, axis=-1)
+    within = d2 <= comm_range ** 2
+    return within & ~jnp.eye(pos.shape[0], dtype=bool)
+
+
+def band_limits_y(cfg: MobilityConfig, band: jax.Array
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Continuous-plane y-range [lo, hi) in meters for an area band.
+
+    Free vehicles (band == -1) get the whole area. The plane analogue of
+    ``manhattan._band_limits``.
+    """
+    h = cfg.area_h / max(cfg.num_bands, 1)
+    b = band.astype(jnp.float32)
+    lo = jnp.where(band < 0, 0.0, b * h)
+    hi = jnp.where(band < 0, cfg.area_h, (b + 1.0) * h)
+    return lo, hi
+
+
+def default_band(num_agents: int) -> jax.Array:
+    return jnp.full((num_agents,), -1, jnp.int32)
+
+
+def make_bands(num_agents: int, num_bands: int, free_per_band: int = 3,
+               key=None):
+    """Assign agents to area bands; a few 'free' vehicles roam anywhere.
+
+    Mirrors the paper's 3-area setup (30 restricted + 3-4 free per area).
+    Returns band assignment [N] (-1 = free) and data-group [N] (free
+    vehicles still have a home data group). Shared by every
+    community-structured mobility model, not just the Manhattan grid.
+    """
+    per = num_agents // num_bands
+    group = jnp.repeat(jnp.arange(num_bands, dtype=jnp.int32), per)
+    if group.shape[0] < num_agents:
+        extra = jnp.arange(num_agents - group.shape[0], dtype=jnp.int32) % num_bands
+        group = jnp.concatenate([group, extra])
+    band = group.copy()
+    # first `free_per_band` agents of each band are free-roaming
+    idx = jnp.arange(num_agents)
+    start = (group * per)
+    band = jnp.where(idx - start < free_per_band, -1, band)
+    return band, group
+
+
+def advance_toward(pos: jax.Array, dest: jax.Array, travel: jax.Array
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Move straight toward ``dest`` by ``travel`` meters, snapping on
+    arrival. Returns (new_pos [N, 2], arrived [N] bool)."""
+    delta = dest - pos
+    dist = jnp.linalg.norm(delta, axis=1)
+    arrive = dist <= travel
+    unit = delta / jnp.maximum(dist, 1e-9)[:, None]
+    new = jnp.where(arrive[:, None], dest, pos + unit * travel[:, None])
+    return new, arrive
+
+
+def generic_simulate_epoch(step_fn: Callable, contacts_fn: Callable
+                           ) -> Callable:
+    """Build a simulate_epoch from step + contacts_now (one lax.scan)."""
+
+    def simulate_epoch(state, key, cfg: MobilityConfig, seconds: float):
+        n_steps = max(1, int(seconds / cfg.step_seconds))
+        keys = jax.random.split(key, n_steps)
+
+        def body(carry, k):
+            st, met = carry
+            st = step_fn(st, k, cfg)
+            met = met | contacts_fn(st, cfg)
+            return (st, met), None
+
+        met0 = jnp.zeros(
+            jax.eval_shape(lambda s: contacts_fn(s, cfg), state).shape, bool)
+        (state, met), _ = jax.lax.scan(body, (state, met0), keys)
+        return state, met
+
+    return simulate_epoch
+
+
+# ---------------------------------------------------------------------------
+# partner selection under a radio budget
+# ---------------------------------------------------------------------------
+
+def partners_from_contacts(met: jax.Array, max_partners: int, *,
+                           sample: str = "lowest-id",
+                           key: Optional[jax.Array] = None) -> jax.Array:
+    """[N, D] partner ids from a contact matrix, -1 padded.
+
+    ``sample="lowest-id"`` keeps the historical deterministic order (lowest
+    agent ids first — a fixed D2D pairing order). ``sample="random"``
+    permutes each row's contacts with ``key`` before capping at D, so no
+    agent is systematically starved under a radio budget — the fairer
+    default for non-grid models.
+    """
+    N = met.shape[0]
+    if sample == "lowest-id":
+        rank = jnp.where(met, jnp.arange(N, dtype=jnp.float32)[None, :],
+                         jnp.inf)
+    elif sample == "random":
+        if key is None:
+            raise ValueError("sample='random' requires a PRNG key")
+        rank = jnp.where(met, jax.random.uniform(key, met.shape), jnp.inf)
+    else:
+        raise ValueError(f"unknown partner sample mode {sample!r}")
+    idx = jnp.argsort(rank, axis=1)[:, :max_partners]
+    chosen = jnp.take_along_axis(met, idx, axis=1)
+    return jnp.where(chosen, idx, -1).astype(jnp.int32)

@@ -1,0 +1,134 @@
+"""Community / RPGM group mobility (Reference Point Group Mobility).
+
+``cfg.num_bands`` group centers each do a random waypoint over the whole
+area; members orbit their group's moving center, re-sampling a local
+target inside ``community_radius`` whenever they reach the previous one.
+With probability ``roam_prob`` a member's next leg targets a uniform
+point anywhere (inter-community roaming — the contact bridge that lets
+models spread between communities). Free agents (band == -1) always roam.
+
+This maps naturally onto the paper's grouped data distribution and
+group-cache policy: band IS the community id, so the same ``make_bands``
+assignment drives both the data partition and the motion.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MobilityConfig
+from repro.mobility.base import (
+    MobilityModel, advance_toward, contacts_from_positions,
+    generic_simulate_epoch)
+from repro.mobility.registry import register
+
+
+@dataclasses.dataclass
+class CommunityState:
+    pos: jax.Array          # [N, 2] member positions (meters)
+    target: jax.Array       # [N, 2] absolute current member target
+    speed: jax.Array        # [N] member speed for the current leg
+    roaming: jax.Array      # [N] bool — current leg ignores the community
+    band: jax.Array         # [N] int32 community id (-1 = free roamer)
+    centers: jax.Array      # [G, 2] group-center positions
+    center_dest: jax.Array  # [G, 2] group-center waypoints
+
+jax.tree_util.register_dataclass(
+    CommunityState,
+    data_fields=["pos", "target", "speed", "roaming", "band", "centers",
+                 "center_dest"],
+    meta_fields=[])
+
+
+def _uniform_area(key, n: int, cfg: MobilityConfig) -> jax.Array:
+    return jax.random.uniform(key, (n, 2)) * jnp.array(
+        [cfg.area_w, cfg.area_h])
+
+
+def _disc_offsets(key, n: int, radius: float) -> jax.Array:
+    kr, kt = jax.random.split(key)
+    r = radius * jnp.sqrt(jax.random.uniform(kr, (n,)))
+    t = jax.random.uniform(kt, (n,), maxval=2.0 * jnp.pi)
+    return jnp.stack([r * jnp.cos(t), r * jnp.sin(t)], axis=1)
+
+
+def _member_targets(key, state_band, centers, cfg: MobilityConfig):
+    """Sample fresh member targets + roam flags + speeds."""
+    n = state_band.shape[0]
+    ko, ku, kr, ks = jax.random.split(key, 4)
+    g = jnp.clip(state_band, 0, centers.shape[0] - 1)
+    local = centers[g] + _disc_offsets(ko, n, cfg.community_radius)
+    anywhere = _uniform_area(ku, n, cfg)
+    roam = (state_band < 0) | (jax.random.uniform(kr, (n,)) < cfg.roam_prob)
+    target = jnp.where(roam[:, None], anywhere, local)
+    target = jnp.clip(target, 0.0, jnp.array([cfg.area_w, cfg.area_h]))
+    speed = jax.random.uniform(ks, (n,), minval=cfg.v_min, maxval=cfg.v_max)
+    return target, roam, speed
+
+
+def init_community(key, num_agents: int, cfg: MobilityConfig,
+                   band: Optional[jax.Array] = None) -> CommunityState:
+    if band is None:
+        # without an explicit grouped assignment, spread agents round-robin
+        band = jnp.arange(num_agents, dtype=jnp.int32) % max(cfg.num_bands, 1)
+    band = band.astype(jnp.int32)
+    g = max(cfg.num_bands, 1)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    centers = _uniform_area(k1, g, cfg)
+    center_dest = _uniform_area(k2, g, cfg)
+    target, roam, speed = _member_targets(k3, band, centers, cfg)
+    gi = jnp.clip(band, 0, g - 1)
+    pos = jnp.where((band < 0)[:, None],
+                    _uniform_area(k4, num_agents, cfg),
+                    jnp.clip(centers[gi] + _disc_offsets(
+                        k4, num_agents, cfg.community_radius),
+                        0.0, jnp.array([cfg.area_w, cfg.area_h])))
+    return CommunityState(pos=pos, target=target, speed=speed, roaming=roam,
+                          band=band, centers=centers,
+                          center_dest=center_dest)
+
+
+def step(state: CommunityState, key, cfg: MobilityConfig) -> CommunityState:
+    dt = cfg.step_seconds
+    kc, km = jax.random.split(key)
+    g = state.centers.shape[0]
+    # group centers: plain waypoint over the full area
+    c_travel = jnp.full((g,), cfg.center_speed * dt)
+    centers, c_arrive = advance_toward(state.centers, state.center_dest,
+                                      c_travel)
+    center_dest = jnp.where(c_arrive[:, None], _uniform_area(kc, g, cfg),
+                            state.center_dest)
+    # members: walk toward their target; targets of non-roaming members
+    # drift with the center so the community stays coherent
+    drift = centers - state.centers
+    gi = jnp.clip(state.band, 0, g - 1)
+    target = jnp.where(state.roaming[:, None], state.target,
+                       state.target + drift[gi])
+    target = jnp.clip(target, 0.0, jnp.array([cfg.area_w, cfg.area_h]))
+    pos, arrive = advance_toward(state.pos, target, state.speed * dt)
+    new_target, new_roam, new_speed = _member_targets(km, state.band,
+                                                      centers, cfg)
+    return CommunityState(
+        pos=pos,
+        target=jnp.where(arrive[:, None], new_target, target),
+        speed=jnp.where(arrive, new_speed, state.speed),
+        roaming=jnp.where(arrive, new_roam, state.roaming),
+        band=state.band, centers=centers, center_dest=center_dest)
+
+
+def positions(state: CommunityState, cfg: MobilityConfig) -> jax.Array:
+    return state.pos
+
+
+def contacts_now(state: CommunityState, cfg: MobilityConfig) -> jax.Array:
+    return contacts_from_positions(state.pos, cfg.comm_range)
+
+
+simulate_epoch = generic_simulate_epoch(step, contacts_now)
+
+MODEL = register(MobilityModel(
+    name="community", init=init_community, step=step, positions=positions,
+    contacts_now=contacts_now, simulate_epoch=simulate_epoch))

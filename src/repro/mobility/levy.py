@@ -1,0 +1,106 @@
+"""Lévy walk mobility — truncated power-law flight lengths.
+
+The standard model for human/vehicle mobility (Rhee et al., "On the
+Levy-walk nature of human mobility"): each flight has a uniformly random
+heading and a length drawn from a truncated Pareto distribution
+P(l) ∝ l^-(1+α) on [levy_min_flight, levy_max_flight]. Small α → heavy
+tail → occasional very long flights that mix the fleet; large α →
+near-Brownian local motion. Agents reflect off area (and band) borders.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MobilityConfig
+from repro.mobility.base import (
+    MobilityModel, band_limits_y, contacts_from_positions, default_band,
+    generic_simulate_epoch)
+from repro.mobility.registry import register
+from repro.mobility.waypoint import _sample_point
+
+
+@dataclasses.dataclass
+class LevyState:
+    pos: jax.Array      # [N, 2] float32 meters
+    heading: jax.Array  # [N, 2] float32 unit direction
+    remain: jax.Array   # [N] float32 meters left in the current flight
+    band: jax.Array     # [N] int32 (-1 = free)
+
+jax.tree_util.register_dataclass(
+    LevyState, data_fields=["pos", "heading", "remain", "band"],
+    meta_fields=[])
+
+
+def _sample_flight(key, n: int, cfg: MobilityConfig):
+    """Headings + truncated-Pareto lengths via inverse-CDF sampling."""
+    ka, kl = jax.random.split(key)
+    theta = jax.random.uniform(ka, (n,), maxval=2.0 * jnp.pi)
+    heading = jnp.stack([jnp.cos(theta), jnp.sin(theta)], axis=1)
+    u = jax.random.uniform(kl, (n,))
+    a = cfg.levy_alpha
+    lmin, lmax = cfg.levy_min_flight, max(cfg.levy_max_flight,
+                                          cfg.levy_min_flight + 1e-6)
+    ratio = (lmin / lmax) ** a
+    length = lmin * (1.0 - u * (1.0 - ratio)) ** (-1.0 / a)
+    return heading, length
+
+
+def init_levy(key, num_agents: int, cfg: MobilityConfig,
+              band: Optional[jax.Array] = None) -> LevyState:
+    if band is None:
+        band = default_band(num_agents)
+    band = band.astype(jnp.int32)
+    k1, k2 = jax.random.split(key)
+    pos = _sample_point(k1, band, cfg)
+    heading, length = _sample_flight(k2, num_agents, cfg)
+    return LevyState(pos=pos, heading=heading, remain=length, band=band)
+
+
+def _reflect(pos, heading, band, cfg: MobilityConfig):
+    """Bounce off the area borders (and the agent's band slice in y)."""
+    lo, hi = band_limits_y(cfg, band)
+    x, y = pos[:, 0], pos[:, 1]
+    hx, hy = heading[:, 0], heading[:, 1]
+    over_x = (x < 0.0) | (x > cfg.area_w)
+    x = jnp.clip(jnp.where(x < 0.0, -x, jnp.where(x > cfg.area_w,
+                                                  2 * cfg.area_w - x, x)),
+                 0.0, cfg.area_w)
+    over_y = (y < lo) | (y > hi)
+    y = jnp.clip(jnp.where(y < lo, 2 * lo - y,
+                           jnp.where(y > hi, 2 * hi - y, y)), lo, hi)
+    hx = jnp.where(over_x, -hx, hx)
+    hy = jnp.where(over_y, -hy, hy)
+    return jnp.stack([x, y], 1), jnp.stack([hx, hy], 1)
+
+
+def step(state: LevyState, key, cfg: MobilityConfig) -> LevyState:
+    travel = jnp.minimum(cfg.speed * cfg.step_seconds, state.remain)
+    pos = state.pos + state.heading * travel[:, None]
+    pos, heading = _reflect(pos, state.heading, state.band, cfg)
+    remain = state.remain - travel
+    done = remain <= 1e-6
+    new_heading, new_len = _sample_flight(key, state.band.shape[0], cfg)
+    return LevyState(
+        pos=pos,
+        heading=jnp.where(done[:, None], new_heading, heading),
+        remain=jnp.where(done, new_len, remain),
+        band=state.band)
+
+
+def positions(state: LevyState, cfg: MobilityConfig) -> jax.Array:
+    return state.pos
+
+
+def contacts_now(state: LevyState, cfg: MobilityConfig) -> jax.Array:
+    return contacts_from_positions(state.pos, cfg.comm_range)
+
+
+simulate_epoch = generic_simulate_epoch(step, contacts_now)
+
+MODEL = register(MobilityModel(
+    name="levy_walk", init=init_levy, step=step, positions=positions,
+    contacts_now=contacts_now, simulate_epoch=simulate_epoch))

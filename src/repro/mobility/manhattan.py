@@ -23,6 +23,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import MobilityConfig
+from repro.mobility.base import (  # noqa: F401  (re-exported for back-compat)
+    MobilityModel, contacts_from_positions, generic_simulate_epoch,
+    make_bands, partners_from_contacts)
+from repro.mobility.registry import register
 
 # direction encoding: 0=+x (E), 1=+y (N), 2=-x (W), 3=-y (S)
 _DX = jnp.array([1, 0, -1, 0], jnp.int32)
@@ -41,33 +45,20 @@ jax.tree_util.register_dataclass(
     meta_fields=[])
 
 
-def make_bands(num_agents: int, num_bands: int, free_per_band: int = 3,
-               key=None):
-    """Assign agents to area bands; a few 'free' vehicles roam anywhere.
+def _band_limits(cfg: MobilityConfig, band):
+    """y-node range [lo, hi) for a band; free vehicles get the whole grid.
 
-    Mirrors the paper's 3-area setup (30 restricted + 3-4 free per area).
-    Returns band assignment [N] (-1 = free) and data-group [N] (free
-    vehicles still have a home data group).
+    The band count comes from ``cfg.num_bands`` (threaded from
+    ``ExperimentConfig.num_groups`` by the experiment harness), so grouped
+    runs with ≠3 groups restrict vehicles correctly.
     """
-    per = num_agents // num_bands
-    group = jnp.repeat(jnp.arange(num_bands, dtype=jnp.int32), per)
-    if group.shape[0] < num_agents:
-        extra = jnp.arange(num_agents - group.shape[0], dtype=jnp.int32) % num_bands
-        group = jnp.concatenate([group, extra])
-    band = group.copy()
-    # first `free_per_band` agents of each band are free-roaming
-    idx = jnp.arange(num_agents)
-    start = (group * per)
-    band = jnp.where(idx - start < free_per_band, -1, band)
-    return band, group
-
-
-def _band_limits(cfg: MobilityConfig, band, num_bands: int = 3):
-    """y-node range [lo, hi) for a band; free vehicles get the whole grid."""
-    h = cfg.grid_h // num_bands
-    lo = jnp.where(band < 0, 0, band * h)
-    hi = jnp.where(band < 0, cfg.grid_h, jnp.where(
-        band == num_bands - 1, cfg.grid_h, (band + 1) * h))
+    num_bands = max(cfg.num_bands, 1)
+    # proportional integer bounds: never empty (hi > lo) and always inside
+    # the grid, even when num_bands > grid_h
+    lo = jnp.where(band < 0, 0, (band * cfg.grid_h) // num_bands)
+    hi = jnp.where(band < 0, cfg.grid_h,
+                   jnp.maximum(((band + 1) * cfg.grid_h) // num_bands,
+                               lo + 1))
     return lo, hi
 
 
@@ -78,7 +69,8 @@ def init_mobility(key, num_agents: int, cfg: MobilityConfig,
     k1, k2, k3 = jax.random.split(key, 3)
     lo, hi = _band_limits(cfg, band)
     nx = jax.random.randint(k1, (num_agents,), 0, cfg.grid_w)
-    ny = lo + jax.random.randint(k2, (num_agents,), 0, 1_000_000) % jnp.maximum(hi - lo, 1)
+    # per-agent [lo, hi) bounds sample uniformly — no modulo bias
+    ny = jax.random.randint(k2, (num_agents,), lo, jnp.maximum(hi, lo + 1))
     node = jnp.stack([nx, ny], axis=1).astype(jnp.int32)
     dirn = jax.random.randint(k3, (num_agents,), 0, 4).astype(jnp.int32)
     state = MobilityState(node=node, dirn=dirn,
@@ -156,38 +148,13 @@ def positions(state: MobilityState, cfg: MobilityConfig) -> jax.Array:
 
 def contacts_now(state: MobilityState, cfg: MobilityConfig) -> jax.Array:
     """[N, N] bool symmetric contact matrix (diag False)."""
-    pos = positions(state, cfg)
-    d2 = jnp.sum((pos[:, None] - pos[None, :]) ** 2, axis=-1)
-    within = d2 <= cfg.comm_range ** 2
-    return within & ~jnp.eye(pos.shape[0], dtype=bool)
+    return contacts_from_positions(positions(state, cfg), cfg.comm_range)
 
 
-def simulate_epoch(state: MobilityState, key, cfg: MobilityConfig,
-                   seconds: float) -> Tuple[MobilityState, jax.Array]:
-    """Run one epoch; returns union contact matrix over all sub-steps."""
-    n_steps = max(1, int(seconds / cfg.step_seconds))
-    keys = jax.random.split(key, n_steps)
-
-    def body(carry, k):
-        st, met = carry
-        st = step(st, k, cfg)
-        met = met | contacts_now(st, cfg)
-        return (st, met), None
-
-    N = state.dirn.shape[0]
-    met0 = jnp.zeros((N, N), bool)
-    (state, met), _ = jax.lax.scan(body, (state, met0), keys)
-    return state, met
+# one epoch of simulation; returns the union contact matrix over sub-steps
+simulate_epoch = generic_simulate_epoch(step, contacts_now)
 
 
-def partners_from_contacts(met: jax.Array, max_partners: int) -> jax.Array:
-    """[N, D] partner ids from a contact matrix, -1 padded.
-
-    Deterministic: lowest agent ids first (matches a fixed D2D pairing
-    order); capped at D contacts per epoch (radio budget).
-    """
-    N = met.shape[0]
-    # rank contacts: non-contacts pushed to the end
-    key = jnp.where(met, jnp.arange(N)[None, :], N + 1)
-    order = jnp.sort(key, axis=1)[:, :max_partners]
-    return jnp.where(order <= N, order, -1).astype(jnp.int32)
+MODEL = register(MobilityModel(
+    name="manhattan", init=init_mobility, step=step, positions=positions,
+    contacts_now=contacts_now, simulate_epoch=simulate_epoch))

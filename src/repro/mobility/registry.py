@@ -1,0 +1,37 @@
+"""Registry of mobility models, keyed by name.
+
+``get_model("levy_walk")`` etc. — the experiment harness, benchmarks and
+tools select mobility by ``MobilityConfig.model`` instead of importing a
+specific module. Third-party models register themselves by calling
+:func:`register` at import time.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.mobility.base import MobilityModel
+
+_REGISTRY: Dict[str, MobilityModel] = {}
+
+
+def register(model: MobilityModel) -> MobilityModel:
+    _REGISTRY[model.name] = model
+    return model
+
+
+def _ensure_builtins() -> None:
+    # import for registration side effects; cheap after the first call
+    from repro.mobility import community, levy, manhattan, trace, waypoint  # noqa: F401
+
+
+def get_model(name: str) -> MobilityModel:
+    _ensure_builtins()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown mobility model {name!r}; "
+                       f"registered: {available()}")
+    return _REGISTRY[name]
+
+
+def available() -> List[str]:
+    _ensure_builtins()
+    return sorted(_REGISTRY)

@@ -1,0 +1,152 @@
+"""Contact-trace replay mobility — precomputed contact schedules.
+
+Drives the experiment loop from a recorded (or synthetic) contact
+schedule instead of simulated motion, so real DTN traces and adversarial
+stress schedules exercise exactly the same Cached-DFL code path.
+
+Accepted ``.npz`` layouts (``cfg.trace_path``):
+  * dense:      ``contacts`` [T, N, N] bool (symmetrized automatically),
+                optional ``pos`` [T, N, 2] float32 for visualisation
+  * edge list:  ``time``/``src``/``dst`` int arrays plus scalar
+                ``num_steps``/``num_agents`` (each undirected contact
+                listed once per frame it is active)
+
+The schedule lives inside the state pytree, so ``simulate_epoch`` stays
+fully jit-able; an epoch consumes ``trace_frames_per_epoch`` frames
+(default: ``epoch_seconds / step_seconds``) and unions them, wrapping
+around (``trace_loop``) or holding the last frame.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import MobilityConfig
+from repro.mobility.base import MobilityModel
+from repro.mobility.registry import register
+
+
+@dataclasses.dataclass
+class TraceState:
+    contacts: jax.Array  # [T, N, N] bool schedule
+    pos: jax.Array       # [T, N, 2] float32 (zeros if the trace has none)
+    t: jax.Array         # [] int32 — current frame index
+
+jax.tree_util.register_dataclass(
+    TraceState, data_fields=["contacts", "pos", "t"], meta_fields=[])
+
+
+def contacts_from_edges(time: np.ndarray, src: np.ndarray, dst: np.ndarray,
+                        num_steps: int, num_agents: int) -> np.ndarray:
+    """Dense [T, N, N] bool schedule from an undirected edge list."""
+    seq = np.zeros((num_steps, num_agents, num_agents), bool)
+    t = np.asarray(time, np.int64)
+    i = np.asarray(src, np.int64)
+    j = np.asarray(dst, np.int64)
+    if t.size and (t.max() >= num_steps or max(i.max(), j.max()) >= num_agents
+                   or min(t.min(), i.min(), j.min()) < 0):
+        raise ValueError("edge list indices out of range "
+                         "[0, num_steps/num_agents)")
+    seq[t, i, j] = True
+    seq[t, j, i] = True
+    seq[:, np.arange(num_agents), np.arange(num_agents)] = False
+    return seq
+
+
+def save_trace(path: str, contacts: np.ndarray,
+               pos: Optional[np.ndarray] = None) -> None:
+    """Write a dense contact schedule the ``trace`` model can replay."""
+    arrays = {"contacts": np.asarray(contacts, bool)}
+    if pos is not None:
+        arrays["pos"] = np.asarray(pos, np.float32)
+    np.savez_compressed(path, **arrays)
+
+
+def load_trace(path: str) -> Tuple[np.ndarray, Optional[np.ndarray]]:
+    with np.load(path) as z:
+        if "contacts" in z:
+            seq = np.asarray(z["contacts"], bool)
+            pos = np.asarray(z["pos"], np.float32) if "pos" in z else None
+        elif "time" in z:
+            seq = contacts_from_edges(z["time"], z["src"], z["dst"],
+                                      int(z["num_steps"]),
+                                      int(z["num_agents"]))
+            pos = None
+        else:
+            raise ValueError(
+                f"{path}: expected 'contacts' [T,N,N] or an edge list "
+                "('time','src','dst','num_steps','num_agents')")
+    if seq.ndim != 3 or seq.shape[1] != seq.shape[2]:
+        raise ValueError(f"{path}: contacts must be [T, N, N], got {seq.shape}")
+    return seq, pos
+
+
+def init_from_contacts(contacts, pos=None) -> TraceState:
+    """Build a replay state from an in-memory [T, N, N] schedule."""
+    seq = jnp.asarray(contacts, bool)
+    seq = (seq | jnp.swapaxes(seq, 1, 2))   # symmetrize
+    n = seq.shape[1]
+    seq = seq & ~jnp.eye(n, dtype=bool)[None]
+    if pos is None:
+        pos = jnp.zeros((seq.shape[0], n, 2), jnp.float32)
+    return TraceState(contacts=seq, pos=jnp.asarray(pos, jnp.float32),
+                      t=jnp.asarray(0, jnp.int32))
+
+
+def init_trace(key, num_agents: int, cfg: MobilityConfig,
+               band: Optional[jax.Array] = None) -> TraceState:
+    if not cfg.trace_path:
+        raise ValueError("mobility model 'trace' needs cfg.trace_path "
+                         "(or use trace.init_from_contacts directly)")
+    seq, pos = load_trace(cfg.trace_path)
+    if seq.shape[1] != num_agents:
+        raise ValueError(
+            f"trace {cfg.trace_path} has {seq.shape[1]} agents, "
+            f"experiment expects {num_agents}")
+    return init_from_contacts(seq, pos)
+
+
+def _advance_t(state: TraceState, cfg: MobilityConfig) -> jax.Array:
+    T = state.contacts.shape[0]
+    if cfg.trace_loop:
+        return (state.t + 1) % T
+    return jnp.minimum(state.t + 1, T - 1)
+
+
+def step(state: TraceState, key, cfg: MobilityConfig) -> TraceState:
+    return dataclasses.replace(state, t=_advance_t(state, cfg))
+
+
+def positions(state: TraceState, cfg: MobilityConfig) -> jax.Array:
+    return state.pos[state.t]
+
+
+def contacts_now(state: TraceState, cfg: MobilityConfig) -> jax.Array:
+    return state.contacts[state.t]
+
+
+def simulate_epoch(state: TraceState, key, cfg: MobilityConfig,
+                   seconds: float):
+    """Union the next ``frames`` schedule entries (read frame, then advance)."""
+    frames = cfg.trace_frames_per_epoch or max(
+        1, int(seconds / cfg.step_seconds))
+
+    def body(carry, _):
+        st, met = carry
+        met = met | contacts_now(st, cfg)
+        st = step(st, None, cfg)
+        return (st, met), None
+
+    n = state.contacts.shape[1]
+    met0 = jnp.zeros((n, n), bool)
+    (state, met), _ = jax.lax.scan(body, (state, met0), None, length=frames)
+    return state, met
+
+
+MODEL = register(MobilityModel(
+    name="trace", init=init_trace, step=step, positions=positions,
+    contacts_now=contacts_now, simulate_epoch=simulate_epoch))

@@ -1,0 +1,103 @@
+"""Random waypoint mobility on a continuous plane.
+
+Each agent picks a uniform destination in the area, a per-leg speed in
+[v_min, v_max], travels in a straight line, optionally pauses, repeats.
+Area bands restrict an agent's destinations to a horizontal slice of the
+plane (the continuous analogue of the Manhattan model's area bands), so
+grouped data partitioning works unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MobilityConfig
+from repro.mobility.base import (
+    MobilityModel, advance_toward, band_limits_y, contacts_from_positions,
+    default_band, generic_simulate_epoch)
+from repro.mobility.registry import register
+
+
+@dataclasses.dataclass
+class WaypointState:
+    pos: jax.Array    # [N, 2] float32 meters
+    dest: jax.Array   # [N, 2] float32 current waypoint
+    speed: jax.Array  # [N] float32 m/s for the current leg
+    pause: jax.Array  # [N] float32 seconds of pause remaining
+    band: jax.Array   # [N] int32 area restriction (-1 = free)
+
+jax.tree_util.register_dataclass(
+    WaypointState, data_fields=["pos", "dest", "speed", "pause", "band"],
+    meta_fields=[])
+
+
+def _sample_point(key, band, cfg: MobilityConfig) -> jax.Array:
+    """[N, 2] uniform points, y restricted to each agent's band slice."""
+    kx, ky = jax.random.split(key)
+    n = band.shape[0]
+    lo, hi = band_limits_y(cfg, band)
+    x = jax.random.uniform(kx, (n,), minval=0.0, maxval=cfg.area_w)
+    y = lo + jax.random.uniform(ky, (n,)) * (hi - lo)
+    return jnp.stack([x, y], axis=1)
+
+
+def _sample_leg(key, band, cfg: MobilityConfig):
+    kd, ks, kp = jax.random.split(key, 3)
+    n = band.shape[0]
+    dest = _sample_point(kd, band, cfg)
+    speed = jax.random.uniform(ks, (n,), minval=cfg.v_min, maxval=cfg.v_max)
+    pause = jax.random.uniform(kp, (n,), maxval=max(cfg.pause_max, 1e-6))
+    pause = jnp.where(cfg.pause_max > 0, pause, 0.0)
+    return dest, speed, pause
+
+
+def init_waypoint(key, num_agents: int, cfg: MobilityConfig,
+                  band: Optional[jax.Array] = None) -> WaypointState:
+    if band is None:
+        band = default_band(num_agents)
+    band = band.astype(jnp.int32)
+    k1, k2 = jax.random.split(key)
+    pos = _sample_point(k1, band, cfg)
+    dest, speed, _ = _sample_leg(k2, band, cfg)
+    return WaypointState(pos=pos, dest=dest, speed=speed,
+                         pause=jnp.zeros((num_agents,), jnp.float32),
+                         band=band)
+
+
+def step(state: WaypointState, key, cfg: MobilityConfig) -> WaypointState:
+    dt = cfg.step_seconds
+    moving = state.pause <= 0.0
+    moved, arrived = advance_toward(state.pos, state.dest, state.speed * dt)
+    pos = jnp.where(moving[:, None], moved, state.pos)
+    arrive = moving & arrived
+    pause = jnp.where(moving, jnp.where(arrive, 0.0, state.pause),
+                      jnp.maximum(state.pause - dt, 0.0))
+    # agents that arrived start pausing; agents whose pause just ended get
+    # a fresh leg
+    new_dest, new_speed, new_pause = _sample_leg(key, state.band, cfg)
+    need_leg = arrive | (~moving & (pause <= 0.0))
+    return WaypointState(
+        pos=pos,
+        dest=jnp.where(need_leg[:, None], new_dest, state.dest),
+        speed=jnp.where(need_leg, new_speed, state.speed),
+        pause=jnp.where(arrive, new_pause, pause),
+        band=state.band)
+
+
+def positions(state: WaypointState, cfg: MobilityConfig) -> jax.Array:
+    return state.pos
+
+
+def contacts_now(state: WaypointState, cfg: MobilityConfig) -> jax.Array:
+    return contacts_from_positions(state.pos, cfg.comm_range)
+
+
+simulate_epoch = generic_simulate_epoch(step, contacts_now)
+
+MODEL = register(MobilityModel(
+    name="random_waypoint", init=init_waypoint, step=step,
+    positions=positions, contacts_now=contacts_now,
+    simulate_epoch=simulate_epoch))

@@ -84,12 +84,22 @@ def _moe_ffn_shard_map(params, cfg: ModelConfig, x, mesh):
             psum_axis="model")
         return y, jax.lax.pmean(aux, batch_axes[-1])
 
-    shard = jax.shard_map(
+    import inspect
+    try:
+        from jax import shard_map as shard_map_fn  # jax >= 0.5
+    except ImportError:
+        from jax.experimental.shard_map import shard_map as shard_map_fn
+    # the replication-check kwarg was renamed check_rep -> check_vma; key
+    # off the actual signature, not the import location
+    sig = inspect.signature(shard_map_fn).parameters
+    check_kw = ({"check_vma": False} if "check_vma" in sig
+                else {"check_rep": False})
+    shard = shard_map_fn(
         local_moe, mesh=mesh,
         in_specs=(P(), P(None, None, "model"), P(None, None, "model"),
                   P(None, "model", None), P(batch_axes, None, None)),
         out_specs=(P(batch_axes, None, None), P()),
-        check_vma=False)
+        **check_kw)
     return shard(params["router"], params["w_gate"], params["w_up"],
                  params["w_down"], x)
 

@@ -1,0 +1,161 @@
+"""Protocol conformance for every registered mobility model.
+
+Any model reachable through the registry must satisfy the contract the
+fleet loop assumes: symmetric bool contact matrix with a False diagonal,
+jit-able simulate_epoch, determinism under a fixed seed, finite
+positions, and band restriction (where the model supports bands).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import MobilityConfig
+from repro.mobility import registry
+from repro.mobility import trace as trace_lib
+from repro.mobility.base import make_bands, partners_from_contacts
+
+N = 12
+
+
+@pytest.fixture(scope="module")
+def trace_path(tmp_path_factory):
+    rng = np.random.default_rng(3)
+    seq = rng.random((40, N, N)) < 0.2
+    path = tmp_path_factory.mktemp("traces") / "t.npz"
+    trace_lib.save_trace(str(path), seq)
+    return str(path)
+
+
+def small_cfg(name: str, trace_path: str) -> MobilityConfig:
+    return MobilityConfig(model=name, grid_w=5, grid_h=6,
+                          area_w=500.0, area_h=600.0,
+                          levy_max_flight=500.0, community_radius=100.0,
+                          trace_path=trace_path if name == "trace" else "",
+                          trace_frames_per_epoch=10)
+
+
+def all_models():
+    return registry.available()
+
+
+@pytest.mark.parametrize("name", all_models())
+def test_epoch_contract(name, trace_path):
+    cfg = small_cfg(name, trace_path)
+    model = registry.get_model(name)
+    state = model.init(jax.random.PRNGKey(0), N, cfg)
+    sim = jax.jit(lambda s, k: model.simulate_epoch(s, k, cfg, 30.0))
+    state2, met = sim(state, jax.random.PRNGKey(1))
+    met = np.asarray(met)
+    assert met.shape == (N, N) and met.dtype == bool
+    assert (met == met.T).all()
+    assert not met.diagonal().any()
+    pos = np.asarray(model.positions(state2, cfg))
+    assert pos.shape == (N, 2) and np.isfinite(pos).all()
+
+
+@pytest.mark.parametrize("name", all_models())
+def test_epoch_deterministic(name, trace_path):
+    cfg = small_cfg(name, trace_path)
+    model = registry.get_model(name)
+    out = []
+    for _ in range(2):
+        state = model.init(jax.random.PRNGKey(4), N, cfg)
+        _, met = model.simulate_epoch(state, jax.random.PRNGKey(5), cfg, 20.0)
+        out.append(np.asarray(met))
+    assert (out[0] == out[1]).all()
+
+
+@pytest.mark.parametrize("name", all_models())
+def test_step_keeps_contacts_well_formed(name, trace_path):
+    cfg = small_cfg(name, trace_path)
+    model = registry.get_model(name)
+    state = model.init(jax.random.PRNGKey(6), N, cfg)
+    key = jax.random.PRNGKey(7)
+    for _ in range(5):
+        key, k = jax.random.split(key)
+        state = model.step(state, k, cfg)
+    met = np.asarray(model.contacts_now(state, cfg))
+    assert (met == met.T).all() and not met.diagonal().any()
+
+
+@pytest.mark.parametrize("name", ["random_waypoint", "levy_walk"])
+def test_plane_band_restriction(name, trace_path):
+    """Banded agents stay inside their horizontal slice of the area."""
+    cfg = dataclasses.replace(small_cfg(name, trace_path), num_bands=2)
+    model = registry.get_model(name)
+    band, _ = make_bands(N, 2, free_per_band=1)
+    state = model.init(jax.random.PRNGKey(8), N, cfg, band=jnp.asarray(band))
+    key = jax.random.PRNGKey(9)
+    for _ in range(60):
+        key, k = jax.random.split(key)
+        state = model.step(state, k, cfg)
+    y = np.asarray(model.positions(state, cfg))[:, 1]
+    h = cfg.area_h / 2
+    for i, b in enumerate(np.asarray(band)):
+        if b >= 0:
+            assert b * h - 1e-3 <= y[i] <= (b + 1) * h + 1e-3, (i, b, y[i])
+
+
+def test_manhattan_band_count_threads_through():
+    """≠3 groups restrict correctly now that num_bands is threaded."""
+    cfg = MobilityConfig(grid_w=4, grid_h=10, num_bands=5)
+    model = registry.get_model("manhattan")
+    band = jnp.arange(N, dtype=jnp.int32) % 5
+    state = model.init(jax.random.PRNGKey(10), N, cfg, band=band)
+    key = jax.random.PRNGKey(11)
+    for _ in range(80):
+        key, k = jax.random.split(key)
+        state = model.step(state, k, cfg)
+    y = np.asarray(state.node[:, 1])
+    h = cfg.grid_h // 5
+    for i, b in enumerate(np.asarray(band)):
+        assert b * h <= y[i] <= (b + 1) * h + 1, (i, b, y[i])
+
+
+def test_trace_replay_matches_schedule(trace_path):
+    seq, _ = trace_lib.load_trace(trace_path)
+    cfg = MobilityConfig(model="trace", trace_path=trace_path,
+                         trace_frames_per_epoch=10)
+    model = registry.get_model("trace")
+    state = model.init(jax.random.PRNGKey(0), N, cfg)
+    _, met1 = model.simulate_epoch(state, None, cfg, 0.0)
+    expect = seq[:10].any(0)
+    expect = (expect | expect.T) & ~np.eye(N, dtype=bool)
+    assert (np.asarray(met1) == expect).all()
+
+
+def test_trace_edge_list_rejects_bad_indices():
+    with pytest.raises(ValueError):
+        trace_lib.contacts_from_edges(np.array([-1]), np.array([0]),
+                                      np.array([1]), 5, 4)
+    with pytest.raises(ValueError):
+        trace_lib.contacts_from_edges(np.array([5]), np.array([0]),
+                                      np.array([1]), 5, 4)
+
+
+def test_trace_agent_mismatch_raises(trace_path):
+    cfg = MobilityConfig(model="trace", trace_path=trace_path)
+    with pytest.raises(ValueError):
+        registry.get_model("trace").init(jax.random.PRNGKey(0), N + 1, cfg)
+
+
+def test_partners_random_sampling_fair():
+    """Random sampling must only return true contacts and vary selection."""
+    met = jnp.ones((8, 8), bool) & ~jnp.eye(8, dtype=bool)
+    seen = set()
+    for s in range(10):
+        p = np.asarray(partners_from_contacts(
+            met, 2, sample="random", key=jax.random.PRNGKey(s)))
+        assert (p >= 0).all()           # fully connected: no padding
+        assert (p != np.arange(8)[:, None]).all()
+        seen.add(tuple(p[0]))
+    assert len(seen) > 1                # lowest-id would always pick (1, 2)
+
+
+def test_partners_random_requires_key():
+    met = jnp.zeros((3, 3), bool)
+    with pytest.raises(ValueError):
+        partners_from_contacts(met, 2, sample="random")

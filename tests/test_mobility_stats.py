@@ -1,0 +1,76 @@
+"""Encounter statistics on hand-built contact traces."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import MobilityConfig
+from repro.mobility import registry, stats
+
+
+def pair_trace(pattern, n=3, i=0, j=1):
+    """[T, n, n] trace with the given on/off pattern on pair (i, j)."""
+    T = len(pattern)
+    seq = np.zeros((T, n, n), bool)
+    seq[:, i, j] = seq[:, j, i] = np.asarray(pattern, bool)
+    return jnp.asarray(seq)
+
+
+def test_single_pair_counts_and_durations():
+    # contact t=1..2, gap t=3..4, contact t=5: 2 encounters, 3 contact steps
+    seq = pair_trace([0, 1, 1, 0, 0, 1])
+    s = stats.encounter_stats(seq, step_seconds=2.0)
+    counts = np.asarray(s["encounter_counts"])
+    assert counts[0, 1] == counts[1, 0] == 2
+    assert counts.sum() == 4            # both triangles
+    # meeting rate: 4 encounter-endpoints / (3 agents * 6 steps * 2 s)
+    assert np.isclose(float(s["meeting_rate"]), 4 / (3 * 6 * 2.0))
+    # mean duration: 3 contact steps * 2 pairs * 2 s / 4 encounters = 3 s
+    assert np.isclose(float(s["mean_contact_duration"]), 3.0)
+
+
+def test_inter_contact_gap():
+    # falling edge at t=3, next rising edge at t=5 -> gap of 2 steps
+    seq = pair_trace([0, 1, 1, 0, 0, 1])
+    s = stats.encounter_stats(seq, step_seconds=1.0)
+    hist = np.asarray(s["inter_contact_hist"])
+    assert hist[2] == 2 and hist.sum() == 2   # one gap per triangle
+    assert np.isclose(float(s["mean_inter_contact"]), 2.0)
+    cdf = np.asarray(s["inter_contact_cdf"])
+    assert np.isclose(cdf[-1], 1.0)
+    assert (np.diff(cdf) >= -1e-9).all()
+
+
+def test_leading_and_trailing_gaps_censored():
+    # contact only at t=2: no interior gaps at all
+    seq = pair_trace([0, 0, 1, 0, 0])
+    s = stats.encounter_stats(seq)
+    assert int(np.asarray(s["inter_contact_hist"]).sum()) == 0
+    assert float(s["mean_inter_contact"]) == 0.0
+    assert int(np.asarray(s["encounter_counts"])[0, 1]) == 1
+
+
+def test_no_contacts_all_zero():
+    seq = jnp.zeros((10, 4, 4), bool)
+    s = stats.encounter_stats(seq)
+    assert float(s["meeting_rate"]) == 0.0
+    assert float(s["contact_fraction"]) == 0.0
+    assert float(s["mean_contact_duration"]) == 0.0
+
+
+def test_diagonal_ignored():
+    seq = jnp.tile(jnp.eye(4, dtype=bool)[None], (5, 1, 1))
+    s = stats.encounter_stats(seq)
+    assert float(s["meeting_rate"]) == 0.0
+
+
+def test_stats_jit_and_collect():
+    cfg = MobilityConfig(model="random_waypoint", area_w=300.0, area_h=300.0)
+    model = registry.get_model("random_waypoint")
+    state = model.init(jax.random.PRNGKey(0), 8, cfg)
+    _, seq = stats.collect_contacts(model, state, jax.random.PRNGKey(1),
+                                    cfg, n_steps=40)
+    assert seq.shape == (40, 8, 8)
+    jitted = jax.jit(lambda s: stats.encounter_stats(s, 1.0))
+    out = jitted(seq)
+    assert np.isfinite(float(out["meeting_rate"]))
+    assert 0.0 <= float(out["contact_fraction"]) <= 1.0

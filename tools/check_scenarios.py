@@ -1,0 +1,87 @@
+"""Scenario smoke gate: every registered mobility model × {cached, dfl}.
+
+Runs 2 tiny epochs of the full experiment loop per combination and fails
+(non-zero exit) on NaN accuracy, shape errors, or exceptions — so a
+mobility/scenario regression is caught in seconds without the full
+benchmark suite.
+
+    PYTHONPATH=src python tools/check_scenarios.py
+"""
+from __future__ import annotations
+
+import math
+import os
+import sys
+import tempfile
+import time
+import traceback
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs.base import DFLConfig, MobilityConfig  # noqa: E402
+from repro.fl.experiment import ExperimentConfig, run_experiment  # noqa: E402
+from repro.mobility import registry  # noqa: E402
+from repro.mobility import trace as trace_lib  # noqa: E402
+
+N_AGENTS = 6
+ALGORITHMS = ("cached", "dfl")
+
+
+def tiny_mobility(name: str, trace_path: str) -> MobilityConfig:
+    if name == "trace":
+        return MobilityConfig(model=name, trace_path=trace_path,
+                              trace_frames_per_epoch=5)
+    return MobilityConfig(model=name, grid_w=4, grid_h=6,
+                          area_w=400.0, area_h=400.0,
+                          levy_max_flight=400.0, community_radius=80.0)
+
+
+def make_trace(path: str) -> None:
+    rng = np.random.default_rng(0)
+    seq = rng.random((20, N_AGENTS, N_AGENTS)) < 0.15
+    trace_lib.save_trace(path, seq | seq.transpose(0, 2, 1))
+
+
+def check(name: str, algorithm: str, trace_path: str) -> str | None:
+    cfg = ExperimentConfig(
+        algorithm=algorithm, distribution="noniid",
+        dfl=DFLConfig(num_agents=N_AGENTS, cache_size=3, local_steps=2,
+                      batch_size=16, epoch_seconds=10.0),
+        mobility=tiny_mobility(name, trace_path),
+        epochs=2, n_train=300, n_test=60, image_hw=8,
+        lr_plateau=False, partner_sample="random")
+    hist = run_experiment(cfg)
+    if len(hist["acc"]) != cfg.epochs:
+        return f"expected {cfg.epochs} eval points, got {len(hist['acc'])}"
+    bad = [a for a in hist["acc"] if not math.isfinite(a)]
+    if bad:
+        return f"non-finite accuracy: {hist['acc']}"
+    return None
+
+
+def main() -> int:
+    tmp = tempfile.mkdtemp(prefix="check_scenarios_")
+    trace_path = os.path.join(tmp, "trace.npz")
+    make_trace(trace_path)
+    failures = 0
+    for name in registry.available():
+        for algorithm in ALGORITHMS:
+            t0 = time.time()
+            try:
+                err = check(name, algorithm, trace_path)
+            except Exception as e:  # noqa: BLE001
+                traceback.print_exc()
+                err = f"{type(e).__name__}: {e}"
+            status = "PASS" if err is None else f"FAIL ({err})"
+            failures += err is not None
+            print(f"{name:>16} × {algorithm:<6} {status} "
+                  f"[{time.time() - t0:.1f}s]")
+    print(f"{failures} failure(s) across "
+          f"{len(registry.available()) * len(ALGORITHMS)} scenarios")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
