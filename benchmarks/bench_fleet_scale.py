@@ -1,0 +1,181 @@
+"""Fleet-scale throughput sweep: fused scan engine vs legacy per-epoch loop.
+
+Measures pure epoch throughput (no evals) for N ∈ {10, 25, 50, 100}
+vehicles × cache sizes, in three driver modes:
+
+  legacy      — the full pre-PR epoch path: 3+ jitted dispatches per epoch
+                with host round-trips, gossip phase 2 materializing the
+                [N, C+1, ...] concatenated stack, reference model impl
+                (grouped-conv / select-and-scatter pool);
+  host_select — the same host loop with this PR's epoch internals
+                (allocation-light gossip gather, fast model impl) —
+                isolates the scan driver's contribution vs `fused`;
+  fused       — the scanned multi-epoch engine (one dispatch per chunk,
+                lr/num_epochs traced, donated buffers off-CPU).
+
+Also asserts the engine's compile discipline: exactly one trace per
+(algorithm, shape), zero recompiles on LR or epoch-count changes.
+
+Emits ``BENCH_fleet.json`` (epochs/sec per mode, speedups, compile counts,
+peak-memory estimates) in the working directory.
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_fleet_scale
+Env:  REPRO_BENCH_FAST=1 trims the sweep for smoke runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import json
+import os
+import resource
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DFLConfig, MobilityConfig
+from repro.fl.experiment import (ExperimentConfig, build_fleet,
+                                 make_engine, make_epoch_fn)
+from repro.mobility.base import partners_from_contacts
+from repro.models import cnn as cnn_lib
+from repro.utils.tree import tree_bytes
+
+FAST = os.environ.get("REPRO_BENCH_FAST", "0") == "1"
+
+SWEEP = [(10, 5), (25, 10), (50, 10), (100, 10)]
+if FAST:
+    SWEEP = [(10, 5), (50, 10)]
+TIMED_EPOCHS = 3 if FAST else 6
+
+
+def make_cfg(N: int, cache_size: int) -> ExperimentConfig:
+    """Cache-traffic-dominated regime: 1 local step, small batch, so the
+    per-epoch cost is the DTN exchange + aggregation, as at paper scale
+    where K ≪ C·|model|."""
+    return ExperimentConfig(
+        algorithm="cached", distribution="noniid",
+        dfl=DFLConfig(num_agents=N, cache_size=cache_size, tau_max=10,
+                      local_steps=1, batch_size=16, lr=0.1,
+                      epoch_seconds=60.0),
+        mobility=MobilityConfig(grid_w=4, grid_h=6),
+        epochs=TIMED_EPOCHS, eval_every=TIMED_EPOCHS, seed=0,
+        n_train=2000, n_test=200, image_hw=16, lr_plateau=False)
+
+
+def _loss_fn(model_cfg, impl: str = "fast"):
+    return lambda p, b: cnn_lib.loss_fn(p, model_cfg, b["images"],
+                                        b["labels"], impl=impl)
+
+
+def bench_legacy(cfg: ExperimentConfig, gather_mode: str,
+                 impl: str = "fast"):
+    """Epochs/sec of the historical host loop (one eval-free epoch at a
+    time: sim dispatch → eager partner selection → epoch dispatch)."""
+    (model_cfg, state, data, counts, _tb, mstate,
+     group_slots, mob_model, mob_cfg) = build_fleet(cfg)
+    epoch_fn, counter = make_epoch_fn(cfg, loss_fn=_loss_fn(model_cfg, impl),
+                                      group_slots=group_slots,
+                                      gather_mode=gather_mode)
+    sim = jax.jit(functools.partial(mob_model.simulate_epoch, cfg=mob_cfg,
+                                    seconds=cfg.dfl.epoch_seconds))
+    key = jax.random.PRNGKey(cfg.seed + 2)
+    lr = cfg.dfl.lr
+
+    def one_epoch(state, mstate, key):
+        key, k1, k2 = jax.random.split(key, 3)
+        mstate, met = sim(mstate, k1)
+        partners = partners_from_contacts(met, cfg.max_partners)
+        state, _ = epoch_fn(state, partners, data, counts, k2, lr)
+        return state, mstate, key
+
+    state, mstate, key = one_epoch(state, mstate, key)      # compile
+    jax.block_until_ready(state)
+    t0 = time.perf_counter()
+    for _ in range(cfg.epochs):
+        state, mstate, key = one_epoch(state, mstate, key)
+    jax.block_until_ready(state)
+    dt = time.perf_counter() - t0
+    return cfg.epochs / dt, counter["traces"], state
+
+
+def bench_fused(cfg: ExperimentConfig):
+    """Epochs/sec of the scanned engine + compile-discipline checks."""
+    (model_cfg, state, data, counts, _tb, mstate,
+     group_slots, mob_model, mob_cfg) = build_fleet(cfg)
+    eng = make_engine(cfg, loss_fn=_loss_fn(model_cfg), mob_model=mob_model,
+                      mob_cfg=mob_cfg, group_slots=group_slots,
+                      chunk=cfg.epochs)
+    key = jax.random.PRNGKey(cfg.seed + 2)
+    lr = cfg.dfl.lr
+
+    out = eng.run(state, mstate, key, lr, data, counts, cfg.epochs)  # compile
+    state, mstate, key, _ = jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    out = eng.run(state, mstate, key, lr, data, counts, cfg.epochs)
+    state, mstate, key, _ = jax.block_until_ready(out)
+    dt = time.perf_counter() - t0
+    eps = cfg.epochs / dt
+
+    # LR and epoch-count changes must not retrace the engine
+    traces_before = eng.traces
+    out = eng.run(state, mstate, key, lr * 0.5, data, counts,
+                  max(cfg.epochs - 1, 1))
+    state, mstate, key, _ = jax.block_until_ready(out)
+    recompiles = eng.traces - traces_before
+    return eps, eng.traces, recompiles, state
+
+
+def main():
+    rows = []
+    for N, C in SWEEP:
+        cfg = make_cfg(N, C)
+        legacy_eps, legacy_traces, state = bench_legacy(
+            cfg, "concat", impl="reference")          # full pre-PR path
+        host_eps, _, _ = bench_legacy(cfg, "select", impl="fast")
+        fused_eps, fused_traces, recompiles, _ = bench_fused(cfg)
+
+        params_mb = tree_bytes(state.params) / 2**20
+        cache_mb = tree_bytes(state.cache.models) / 2**20
+        D = tree_bytes(state.params) // (4 * N)
+        concat_temp_mb = N * (C + 1) * D * 4 / 2**20
+        row = {
+            "num_agents": N,
+            "cache_size": C,
+            "param_dim": int(D),
+            "timed_epochs": cfg.epochs,
+            "legacy_eps": round(legacy_eps, 3),
+            "host_select_eps": round(host_eps, 3),
+            "fused_eps": round(fused_eps, 3),
+            "speedup_fused_vs_legacy": round(fused_eps / legacy_eps, 2),
+            "speedup_scan_driver_only": round(fused_eps / host_eps, 2),
+            "legacy_traces": legacy_traces,
+            "fused_traces": fused_traces,
+            "recompiles_on_lr_and_epoch_change": recompiles,
+            "params_mb": round(params_mb, 2),
+            "cache_mb": round(cache_mb, 2),
+            "concat_temp_saved_mb": round(concat_temp_mb, 2),
+            "ru_maxrss_mb": round(
+                resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024, 1),
+        }
+        rows.append(row)
+        print(f"N={N:4d} C={C:3d}  legacy {legacy_eps:6.2f} ep/s  "
+              f"host_select {host_eps:6.2f}  fused {fused_eps:6.2f}  "
+              f"({row['speedup_fused_vs_legacy']}x total, "
+              f"{row['speedup_scan_driver_only']}x driver)  "
+              f"recompiles={recompiles}")
+
+    report = {
+        "bench": "fleet_scale",
+        "backend": jax.default_backend(),
+        "fast": FAST,
+        "rows": rows,
+    }
+    with open("BENCH_fleet.json", "w") as f:
+        json.dump(report, f, indent=2)
+    print("wrote BENCH_fleet.json")
+    return report
+
+
+if __name__ == "__main__":
+    main()

@@ -1,9 +1,11 @@
 """Cached-DFL: the paper's primary contribution as a composable JAX module."""
 from repro.core.cache import ModelCache, init_cache, evict_stale, insert  # noqa: F401
-from repro.core.aggregate import aggregate, aggregate_flat  # noqa: F401
-from repro.core.gossip import exchange  # noqa: F401
+from repro.core.aggregate import (  # noqa: F401
+    aggregate, aggregate_flat, aggregate_flat_gathered,
+)
+from repro.core.gossip import exchange, gather_winners  # noqa: F401
 from repro.core.local_update import local_update, fleet_local_update  # noqa: F401
 from repro.core.rounds import (  # noqa: F401
-    FleetState, init_fleet, cached_dfl_epoch, dfl_epoch, cfl_epoch,
-    fleet_accuracy,
+    FleetState, FleetEngine, init_fleet, make_epoch_step, make_fleet_engine,
+    cached_dfl_epoch, dfl_epoch, cfl_epoch, fleet_accuracy, fleet_eval,
 )

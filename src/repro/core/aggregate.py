@@ -79,3 +79,31 @@ def aggregate_flat(flat_params, flat_cache, own_samples, cache_samples,
                                        valid.astype(jnp.float32))
     return (w_self * flat_params.astype(jnp.float32) + acc).astype(
         flat_params.dtype)
+
+
+def aggregate_flat_gathered(flat_params, src, sel, own_samples,
+                            cand_samples, valid, *, use_kernel: bool = True,
+                            include_self: bool = True):
+    """Single-pass gather + aggregate over a candidate pool.
+
+    flat_params: [D] own model; src: [M, D] candidate pool (cache rows +
+    fresh models as produced by the gossip metadata phase); sel: [C] int32
+    winning rows; cand_samples/valid: [C] per-winner weights/mask.
+
+    Fuses gossip phase 2 with ModelAggregation: the winners are streamed
+    from ``src`` directly into the weighted reduction (Pallas kernel when
+    ``use_kernel``), so the gathered [C, D] cache copy never round-trips
+    through HBM between CacheUpdate and ModelAggregation.
+    """
+    w_self, w_cache = aggregation_weights(own_samples, cand_samples,
+                                          valid.astype(jnp.float32),
+                                          include_self)
+    w = w_cache * valid.astype(jnp.float32)
+    if use_kernel:
+        from repro.kernels import ops as kops
+        acc = kops.gather_cache_aggregate(src, sel, w)
+    else:
+        from repro.kernels import ref as kref
+        acc = kref.gather_cache_aggregate_ref(src, sel, w)
+    return (w_self * flat_params.astype(jnp.float32) + acc).astype(
+        flat_params.dtype)

@@ -5,11 +5,13 @@ The whole fleet's exchange for one epoch is a single vectorized program:
   phase 1 (metadata): per agent, build the candidate set
       own cache ∪ {partner j's fresh model} ∪ partner j's cache  (∀ j met)
       and run the cache-update policy purely on (origin, ts, …) arrays;
-  phase 2 (gather): fetch only the winning models' weights with one
-      advanced-indexing gather from the stacked global state.
+  phase 2 (gather): fetch only the winning models' weights with a clamped
+      advanced-indexing gather from the cache plus a ``jnp.where`` select
+      of the own-model rows (no stacked ``[N, C+1, ...]`` copy).
 
 This two-phase split is the TPU adaptation of Algorithm 2: selecting by
-metadata first avoids materializing N·D·(C+1) candidate model copies.
+metadata first avoids materializing N·D·(C+1) candidate model copies, and
+the select-based gather keeps phase 2 free of full-cache temporaries.
 """
 from __future__ import annotations
 
@@ -82,10 +84,50 @@ def _candidates(cache: ModelCache, t, partners, own_ts, own_samples,
     return ts, origin, samples, group, arrival, src_a, src_s
 
 
+def gather_winners(cache_models, params, gather_a, gather_s, *,
+                   mode: str = "select"):
+    """Phase-2 weight fetch: winners[i, c] = model at (gather_a, gather_s).
+
+    Slot index ``C`` refers to agent ``gather_a``'s own (fresh) model; slots
+    ``0..C-1`` are its cache entries.
+
+    ``mode="select"`` (default) is the allocation-light path: one clamped
+    gather from the cache plus a gather from ``params``, combined with a
+    ``jnp.where`` on the own-model mask. XLA fuses the select into the
+    gathers, so no ``[N, C+1, ...]`` stacked copy of the whole cache is ever
+    materialized. ``mode="concat"`` keeps the original stack-then-gather
+    formulation as a bit-exact reference for tests and benchmarks.
+    """
+    def select_leaf(cache_leaf, params_leaf):
+        C = cache_leaf.shape[1]
+        slot = jnp.minimum(gather_s, C - 1)          # clamp own-model slot C
+        from_cache = cache_leaf[gather_a, slot]
+        own = params_leaf[gather_a].astype(cache_leaf.dtype)
+        is_own = (gather_s == C).reshape(
+            gather_s.shape + (1,) * (cache_leaf.ndim - 2))
+        return jnp.where(is_own, own, from_cache)
+
+    def concat_leaf(cache_leaf, params_leaf):
+        # stacked [N, C+1, ...]: cache slots then own model
+        stacked = jnp.concatenate(
+            [cache_leaf, params_leaf[:, None].astype(cache_leaf.dtype)],
+            axis=1)
+        return stacked[gather_a, gather_s]
+
+    if mode == "select":
+        leaf = select_leaf
+    elif mode == "concat":
+        leaf = concat_leaf
+    else:
+        raise ValueError(f"unknown gather mode {mode!r}")
+    return jax.tree_util.tree_map(leaf, cache_models, params)
+
+
 def exchange(params, cache: ModelCache, partners, t, own_samples, own_group,
              *, tau_max: int, policy: str = "lru",
              group_slots: Optional[jax.Array] = None,
-             rng: Optional[jax.Array] = None) -> ModelCache:
+             rng: Optional[jax.Array] = None,
+             gather_mode: str = "select") -> ModelCache:
     """One epoch of DTN-like cache exchange for the whole fleet.
 
     params: pytree [N, ...] (post-local-update models x̃_i(t));
@@ -124,13 +166,6 @@ def exchange(params, cache: ModelCache, partners, t, own_samples, own_group,
     # phase 2: gather winning model weights only
     gather_a = jnp.take_along_axis(src_a, sel, axis=1)  # [N, C]
     gather_s = jnp.take_along_axis(src_s, sel, axis=1)
-
-    def leaf(cache_leaf, params_leaf):
-        # stacked [N, C+1, ...]: cache slots then own model
-        stacked = jnp.concatenate(
-            [cache_leaf, params_leaf[:, None].astype(cache_leaf.dtype)],
-            axis=1)
-        return stacked[gather_a, gather_s]
-
-    models = jax.tree_util.tree_map(leaf, cache.models, params)
+    models = gather_winners(cache.models, params, gather_a, gather_s,
+                            mode=gather_mode)
     return dataclasses.replace(cache, models=models, **meta)

@@ -6,7 +6,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -57,7 +57,9 @@ def cached_dfl_epoch(state: FleetState, partners, data, counts, key, *,
                      lr, rho: float = 0.0, tau_max: int = 10,
                      policy: str = "lru",
                      group_slots: Optional[jax.Array] = None,
-                     staleness_decay: float = 1.0) -> FleetState:
+                     staleness_decay: float = 1.0,
+                     gather_mode: str = "select"
+                     ) -> Tuple[FleetState, jax.Array]:
     """One global epoch of Algorithm 1 for the whole fleet.
 
     partners: [N, D] contact lists for this epoch (-1 padded).
@@ -75,7 +77,7 @@ def cached_dfl_epoch(state: FleetState, partners, data, counts, key, *,
     cache = gossip.exchange(
         tilde, state.cache, partners, state.t, state.samples, state.group,
         tau_max=tau_max, policy=policy, group_slots=group_slots,
-        rng=k_policy)
+        rng=k_policy, gather_mode=gather_mode)
 
     # 3) ModelAggregation over all cached models (+ own)
     new_params = aggregate(tilde, state.samples, cache, t=state.t,
@@ -91,7 +93,7 @@ def cached_dfl_epoch(state: FleetState, partners, data, counts, key, *,
 
 def dfl_epoch(state: FleetState, partners, data, counts, key, *,
               loss_fn: Callable, local_steps: int, batch_size: int, lr,
-              rho: float = 0.0) -> FleetState:
+              rho: float = 0.0) -> Tuple[FleetState, jax.Array]:
     """DeFedAvg (paper's "DFL" baseline): local update, then pairwise
     sample-weighted averaging with the first contacted partner only."""
     N = state.samples.shape[0]
@@ -120,7 +122,7 @@ def dfl_epoch(state: FleetState, partners, data, counts, key, *,
 
 def cfl_epoch(state: FleetState, data, counts, key, *, loss_fn: Callable,
               local_steps: int, batch_size: int, lr,
-              rho: float = 0.0) -> FleetState:
+              rho: float = 0.0) -> Tuple[FleetState, jax.Array]:
     """Centralized FL (FedAvg): all agents aggregate on a server each epoch."""
     N = state.samples.shape[0]
     local_keys = jax.random.split(key, N)
@@ -139,6 +141,151 @@ def cfl_epoch(state: FleetState, data, counts, key, *, loss_fn: Callable,
 
 
 # ---------------------------------------------------------------------------
+# uniform epoch step
+# ---------------------------------------------------------------------------
+
+def make_epoch_step(algorithm: str, *, loss_fn: Callable, local_steps: int,
+                    batch_size: int, rho: float = 0.0, tau_max: int = 10,
+                    policy: str = "lru",
+                    group_slots: Optional[jax.Array] = None,
+                    staleness_decay: float = 1.0,
+                    gather_mode: str = "select") -> Callable:
+    """Bind an algorithm's hyperparameters into a uniform per-epoch step
+
+        step(state, partners, data, counts, key, lr) -> (state, losses)
+
+    (cfl ignores ``partners``). The single source of the algorithm dispatch
+    for the legacy jitted loop, the fused engine, and the benchmarks — so
+    a new hyperparameter is threaded in exactly one place.
+    """
+    common = dict(loss_fn=loss_fn, local_steps=local_steps,
+                  batch_size=batch_size, rho=rho)
+    if algorithm == "cached":
+        def step(state, partners, data, counts, key, lr):
+            return cached_dfl_epoch(
+                state, partners, data, counts, key, lr=lr, tau_max=tau_max,
+                policy=policy, group_slots=group_slots,
+                staleness_decay=staleness_decay, gather_mode=gather_mode,
+                **common)
+    elif algorithm == "dfl":
+        def step(state, partners, data, counts, key, lr):
+            return dfl_epoch(state, partners, data, counts, key, lr=lr,
+                             **common)
+    elif algorithm == "cfl":
+        def step(state, partners, data, counts, key, lr):
+            return cfl_epoch(state, data, counts, key, lr=lr, **common)
+    else:
+        raise ValueError(f"unknown algorithm {algorithm!r}")
+    return step
+
+
+# ---------------------------------------------------------------------------
+# fused fleet-epoch engine
+# ---------------------------------------------------------------------------
+
+class FleetEngine:
+    """A fused multi-epoch driver: one jit-compiled on-device loop that
+    chains mobility → partner selection → a full FL epoch for up to
+    ``chunk`` epochs per call.
+
+    ``run(state, mstate, key, lr, data, counts, num_epochs)`` returns
+    ``(state, mstate, key, losses)`` where ``losses`` is the per-epoch mean
+    training loss ``[chunk]`` (NaN past ``num_epochs``). ``lr`` and
+    ``num_epochs`` are *traced* scalars: changing either between calls never
+    retraces — the epoch loop is a ``lax.fori_loop`` with a traced bound, so
+    any total epoch budget runs through one compiled executable and partial
+    chunks pay for exactly the epochs they run. ``traces`` counts actual
+    retraces (one per (algorithm, shape) by construction).
+
+    With ``donate=True`` the fleet and mobility state buffers are donated to
+    XLA, so the ``[N, C, ...]`` cache is updated in place between calls
+    instead of doubling peak memory (donation is a no-op on backends that
+    don't support aliasing, e.g. CPU).
+    """
+
+    def __init__(self, run_fn: Callable, *, chunk: int, donate: bool):
+        self.chunk = chunk
+        self.donate = donate
+        self._traces = 0
+
+        def counted(*args):
+            self._traces += 1          # runs at trace time only
+            return run_fn(*args)
+
+        self.run = jax.jit(counted,
+                           donate_argnums=(0, 1) if donate else ())
+
+    @property
+    def traces(self) -> int:
+        return self._traces
+
+
+def make_fleet_engine(*, algorithm: str, mob_model, mob_cfg,
+                      epoch_seconds: float, max_partners: int,
+                      partner_sample: str = "lowest-id",
+                      partners_fn: Optional[Callable] = None,
+                      loss_fn: Callable, local_steps: int, batch_size: int,
+                      lr_default: float = 0.1, rho: float = 0.0,
+                      tau_max: int = 10, policy: str = "lru",
+                      group_slots: Optional[jax.Array] = None,
+                      staleness_decay: float = 1.0,
+                      gather_mode: str = "select",
+                      chunk: int = 1,
+                      donate: Optional[bool] = None) -> FleetEngine:
+    """Build the fused epoch engine for one (algorithm, scenario) pair.
+
+    The per-epoch key discipline matches the legacy host loop exactly
+    (``split(key, 3)`` for deterministic partner sampling, ``split(key, 4)``
+    for random sampling), so a fused run reproduces the legacy trajectory
+    from the same seed.
+    """
+    from repro.mobility.base import partners_from_contacts
+
+    if partners_fn is None:
+        partners_fn = partners_from_contacts
+    if donate is None:
+        # CPU XLA can't alias buffers; skip donation to avoid warning spam.
+        donate = jax.default_backend() != "cpu"
+
+    step = make_epoch_step(
+        algorithm, loss_fn=loss_fn, local_steps=local_steps,
+        batch_size=batch_size, rho=rho, tau_max=tau_max, policy=policy,
+        group_slots=group_slots, staleness_decay=staleness_decay,
+        gather_mode=gather_mode)
+
+    def epoch_step(state, mstate, key, lr, data, counts):
+        if partner_sample == "lowest-id":
+            key, k1, k2 = jax.random.split(key, 3)
+            k3 = None
+        else:
+            key, k1, k2, k3 = jax.random.split(key, 4)
+        mstate, met = mob_model.simulate_epoch(mstate, k1, cfg=mob_cfg,
+                                               seconds=epoch_seconds)
+        partners = partners_fn(met, max_partners, sample=partner_sample,
+                               key=k3)
+        state, losses = step(state, partners, data, counts, k2, lr)
+        return state, mstate, key, losses
+
+    def run_epochs(state, mstate, key, lr, data, counts, num_epochs):
+        losses0 = jnp.full((chunk,), jnp.nan, jnp.float32)
+
+        def body(i, carry):
+            state, mstate, key, losses = carry
+            state, mstate, key, ep_losses = epoch_step(
+                state, mstate, key, lr, data, counts)
+            losses = jax.lax.dynamic_update_index_in_dim(
+                losses, jnp.mean(ep_losses), i, 0)
+            return state, mstate, key, losses
+
+        # clamp to the losses-buffer capacity: epochs past `chunk` would
+        # run but pile their losses into the last slot
+        return jax.lax.fori_loop(0, jnp.minimum(num_epochs, chunk), body,
+                                 (state, mstate, key, losses0))
+
+    return FleetEngine(run_epochs, chunk=chunk, donate=donate)
+
+
+# ---------------------------------------------------------------------------
 # fleet evaluation
 # ---------------------------------------------------------------------------
 
@@ -146,3 +293,18 @@ def fleet_accuracy(state: FleetState, acc_fn: Callable, test_batch) -> jax.Array
     """Average test metric over all agents' local models (paper's metric)."""
     accs = jax.vmap(lambda p: acc_fn(p, test_batch))(state.params)
     return jnp.mean(accs), accs
+
+
+def fleet_eval(state: FleetState, acc_fn: Callable, test_batch):
+    """On-device fleet evaluation: (mean_acc, cache_num, cache_age) scalars.
+
+    Cache occupancy / staleness stats are reduced inside the jitted eval so
+    only three scalars cross the host boundary — the legacy path pulled the
+    full [N, C] metadata to host every eval.
+    """
+    acc, _ = fleet_accuracy(state, acc_fn, test_batch)
+    vf = state.cache.valid.astype(jnp.float32)
+    ages = (state.t - state.cache.ts).astype(jnp.float32)
+    cache_num = jnp.mean(jnp.sum(vf, axis=1))
+    cache_age = jnp.sum(ages * vf) / jnp.maximum(jnp.sum(vf), 1.0)
+    return acc, cache_num, cache_age

@@ -123,8 +123,55 @@ def build_fleet(cfg: ExperimentConfig):
             group_slots, mob_model, mob_cfg)
 
 
+def make_epoch_fn(cfg: ExperimentConfig, *, loss_fn: Callable,
+                  group_slots=None, gather_mode: str = "select"):
+    """Jitted single-epoch step for the legacy per-epoch driver.
+
+    ``lr`` is threaded as a *traced* call argument (historically it was
+    closed over as a static Python float, so every ReduceLROnPlateau step
+    recompiled the whole epoch). Returns ``(epoch_fn, counter)`` where
+    ``counter["traces"]`` counts actual retraces — exactly 1 per
+    (algorithm, shape) regardless of LR changes.
+    """
+    counter = {"traces": 0}
+    step = rounds_lib.make_epoch_step(
+        cfg.algorithm, loss_fn=loss_fn, local_steps=cfg.dfl.local_steps,
+        batch_size=cfg.dfl.batch_size, rho=cfg.dfl.rho,
+        tau_max=cfg.dfl.tau_max, policy=cfg.dfl.policy,
+        group_slots=group_slots, staleness_decay=cfg.dfl.staleness_decay,
+        gather_mode=gather_mode)
+
+    def fn(state, partners, data, counts, key, lr):
+        counter["traces"] += 1
+        return step(state, partners, data, counts, key, lr)
+
+    return jax.jit(fn), counter
+
+
+def make_engine(cfg: ExperimentConfig, *, loss_fn: Callable, mob_model,
+                mob_cfg, group_slots=None, gather_mode: str = "select",
+                chunk: Optional[int] = None, donate: Optional[bool] = None):
+    """Build the fused scan engine for an experiment config."""
+    return rounds_lib.make_fleet_engine(
+        algorithm=cfg.algorithm, mob_model=mob_model, mob_cfg=mob_cfg,
+        epoch_seconds=cfg.dfl.epoch_seconds, max_partners=cfg.max_partners,
+        partner_sample=cfg.partner_sample, loss_fn=loss_fn,
+        local_steps=cfg.dfl.local_steps, batch_size=cfg.dfl.batch_size,
+        rho=cfg.dfl.rho, tau_max=cfg.dfl.tau_max, policy=cfg.dfl.policy,
+        group_slots=group_slots, staleness_decay=cfg.dfl.staleness_decay,
+        gather_mode=gather_mode,
+        chunk=cfg.eval_every if chunk is None else chunk, donate=donate)
+
+
 def run_experiment(cfg: ExperimentConfig, *, verbose: bool = False,
-                   record_cache_stats: bool = False) -> Dict:
+                   record_cache_stats: bool = False,
+                   engine: str = "fused") -> Dict:
+    """Run one fleet experiment end to end.
+
+    engine="fused" (default) drives `eval_every` epochs per jit call through
+    the scanned engine; engine="legacy" keeps the historical 3-dispatch
+    per-epoch host loop (the benchmark baseline).
+    """
     (model_cfg, state, data, counts, test_batch, mstate,
      group_slots, mob_model, mob_cfg) = build_fleet(cfg)
 
@@ -132,80 +179,79 @@ def run_experiment(cfg: ExperimentConfig, *, verbose: bool = False,
                                            b["labels"])
     acc_fn = lambda p, b: cnn_lib.accuracy(p, model_cfg, b["images"],
                                            b["labels"])
-
-    policy = cfg.dfl.policy
-    common = dict(loss_fn=loss_fn, local_steps=cfg.dfl.local_steps,
-                  batch_size=cfg.dfl.batch_size)
-
-    def make_epoch(lr):
-        if cfg.algorithm == "cached":
-            fn = functools.partial(
-                rounds_lib.cached_dfl_epoch, lr=lr, rho=cfg.dfl.rho,
-                tau_max=cfg.dfl.tau_max, policy=policy,
-                group_slots=group_slots,
-                staleness_decay=cfg.dfl.staleness_decay, **common)
-            return jax.jit(fn)
-        if cfg.algorithm == "dfl":
-            return jax.jit(functools.partial(
-                rounds_lib.dfl_epoch, lr=lr, rho=cfg.dfl.rho, **common))
-        if cfg.algorithm == "cfl":
-            return jax.jit(functools.partial(
-                rounds_lib.cfl_epoch, lr=lr, rho=cfg.dfl.rho, **common))
-        raise ValueError(cfg.algorithm)
-
-    sim = jax.jit(functools.partial(mob_model.simulate_epoch, cfg=mob_cfg,
-                                    seconds=cfg.dfl.epoch_seconds))
-    eval_fn = jax.jit(functools.partial(rounds_lib.fleet_accuracy,
+    eval_fn = jax.jit(functools.partial(rounds_lib.fleet_eval,
                                         acc_fn=acc_fn))
 
     sched = ReduceLROnPlateau(lr=cfg.dfl.lr)
     lr = cfg.dfl.lr
-    epoch_fn = make_epoch(lr)
     key = jax.random.PRNGKey(cfg.seed + 2)
     history: Dict[str, List] = {"epoch": [], "acc": [], "lr": [],
                                 "cache_num": [], "cache_age": []}
     best, best_epoch = -1.0, 0
+    stop = False
     t0 = time.time()
-    for ep in range(cfg.epochs):
-        # deterministic partner selection keeps the historical key stream
-        if cfg.partner_sample == "lowest-id":
-            key, k1, k2 = jax.random.split(key, 3)
-            k3 = None
-        else:
-            key, k1, k2, k3 = jax.random.split(key, 4)
-        mstate, met = sim(mstate, k1)
-        partners = partners_from_contacts(met, cfg.max_partners,
-                                          sample=cfg.partner_sample, key=k3)
-        if cfg.algorithm == "cfl":
-            state, _ = epoch_fn(state, data, counts, k2)
-        else:
-            state, _ = epoch_fn(state, partners, data, counts, k2)
-        if (ep + 1) % cfg.eval_every == 0:
-            acc, _ = eval_fn(state, test_batch=test_batch)
-            acc = float(acc)
-            history["epoch"].append(ep + 1)
-            history["acc"].append(acc)
-            history["lr"].append(lr)
-            if record_cache_stats and cfg.algorithm == "cached":
-                valid = np.asarray(state.cache.valid)
-                ages = np.asarray(state.t - state.cache.ts)
-                history["cache_num"].append(float(valid.sum(1).mean()))
-                history["cache_age"].append(
-                    float((ages * valid).sum() / max(valid.sum(), 1)))
-            if cfg.lr_plateau:
-                new_lr = sched.update(acc)
-                if new_lr != lr:
-                    lr = new_lr
-                    epoch_fn = make_epoch(lr)
-            if acc > best + 1e-4:
-                best, best_epoch = acc, ep
-            elif ep - best_epoch >= cfg.early_stop_patience:
-                if verbose:
-                    print(f"early stop at epoch {ep + 1}")
-                break
+
+    def evaluate(ep):
+        """Eval at 0-based epoch index ep; returns True to early-stop."""
+        nonlocal lr, best, best_epoch
+        acc, cache_num, cache_age = eval_fn(state, test_batch=test_batch)
+        acc = float(acc)                     # scalars only cross to host
+        history["epoch"].append(ep + 1)
+        history["acc"].append(acc)
+        history["lr"].append(lr)
+        if record_cache_stats and cfg.algorithm == "cached":
+            history["cache_num"].append(float(cache_num))
+            history["cache_age"].append(float(cache_age))
+        if cfg.lr_plateau:
+            lr = sched.update(acc)           # traced arg: no retrace on change
+        if acc > best + 1e-4:
+            best, best_epoch = acc, ep
+        elif ep - best_epoch >= cfg.early_stop_patience:
             if verbose:
-                print(f"epoch {ep + 1:4d} acc={acc:.4f} lr={lr:.4f} "
-                      f"({time.time() - t0:.1f}s)")
+                print(f"early stop at epoch {ep + 1}")
+            return True
+        if verbose:
+            print(f"epoch {ep + 1:4d} acc={acc:.4f} lr={lr:.4f} "
+                  f"({time.time() - t0:.1f}s)")
+        return False
+
+    if engine == "fused":
+        eng = make_engine(cfg, loss_fn=loss_fn, mob_model=mob_model,
+                          mob_cfg=mob_cfg, group_slots=group_slots)
+        ep = 0
+        while ep < cfg.epochs and not stop:
+            n = min(eng.chunk, cfg.epochs - ep)
+            state, mstate, key, _ = eng.run(state, mstate, key, lr, data,
+                                            counts, n)
+            ep += n
+            if ep % cfg.eval_every == 0:
+                stop = evaluate(ep - 1)
+        history["epoch_traces"] = eng.traces
+    elif engine == "legacy":
+        epoch_fn, counter = make_epoch_fn(cfg, loss_fn=loss_fn,
+                                          group_slots=group_slots)
+        sim = jax.jit(functools.partial(mob_model.simulate_epoch,
+                                        cfg=mob_cfg,
+                                        seconds=cfg.dfl.epoch_seconds))
+        for ep in range(cfg.epochs):
+            # deterministic partner selection keeps the historical key stream
+            if cfg.partner_sample == "lowest-id":
+                key, k1, k2 = jax.random.split(key, 3)
+                k3 = None
+            else:
+                key, k1, k2, k3 = jax.random.split(key, 4)
+            mstate, met = sim(mstate, k1)
+            partners = partners_from_contacts(
+                met, cfg.max_partners, sample=cfg.partner_sample, key=k3)
+            state, _ = epoch_fn(state, partners, data, counts, k2, lr)
+            if (ep + 1) % cfg.eval_every == 0:
+                if evaluate(ep):
+                    break
+        history["epoch_traces"] = counter["traces"]
+    else:
+        raise ValueError(f"unknown engine {engine!r}")
+
+    history["engine"] = engine
     history["best_acc"] = best
     history["final_acc"] = history["acc"][-1] if history["acc"] else 0.0
     history["wall_s"] = time.time() - t0

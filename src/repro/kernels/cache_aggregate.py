@@ -14,11 +14,32 @@ stalls on them. BLOCK_D is sized so a tile fits comfortably in VMEM
 from __future__ import annotations
 
 import functools
+import os
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+
+def default_interpret() -> bool:
+    """Backend auto-detection for the ``interpret`` flag.
+
+    These kernels use TPU-specific Pallas features (scalar prefetch, VMEM
+    block specs), so the compiled path is TPU-only; every other backend
+    (CPU, GPU) runs the interpreter. ``REPRO_PALLAS_COMPILED=1`` forces
+    the compiled path, ``=0`` forces the interpreter (both override the
+    auto-detection, e.g. for debugging a TPU kernel in interpret mode).
+    """
+    env = os.environ.get("REPRO_PALLAS_COMPILED")
+    if env is not None:
+        return env != "1"
+    return jax.default_backend() != "tpu"
+
+
+def _resolve_interpret(interpret: Optional[bool]) -> bool:
+    return default_interpret() if interpret is None else interpret
 
 
 def _kernel(w_ref, cache_ref, out_ref):
@@ -31,12 +52,13 @@ def _kernel(w_ref, cache_ref, out_ref):
 
 
 def cache_aggregate(cache, weights, valid, *, block_d: int = 65536,
-                    interpret: bool = True):
+                    interpret: Optional[bool] = None):
     """cache: [C, D]; weights, valid: [C] f32 -> out [D] f32.
 
-    On CPU we always run interpret=True (the kernel body executes in
-    Python); on TPU set interpret=False for the compiled path.
+    interpret=None auto-detects the backend (compiled kernel on TPU,
+    interpreter elsewhere); pass an explicit bool to override.
     """
+    interpret = _resolve_interpret(interpret)
     C, D = cache.shape
     block_d = min(block_d, max(128, D))
     pad = (-D) % block_d
@@ -57,4 +79,65 @@ def cache_aggregate(cache, weights, valid, *, block_d: int = 65536,
         out_shape=jax.ShapeDtypeStruct((Dp,), jnp.float32),
         interpret=interpret,
     )(w, cache)
+    return out[:D]
+
+
+# ---------------------------------------------------------------------------
+# fused gather + aggregate
+# ---------------------------------------------------------------------------
+
+def _gather_kernel(idx_ref, w_ref, src_ref, out_ref):
+    # idx_ref, w_ref: [C] in SMEM (scalar prefetch); src_ref: [1, BD] — the
+    # block of source row idx_ref[c] selected by the index map.
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = src_ref[...].astype(jnp.float32)[0]         # [BD]
+    out_ref[...] += w_ref[c].astype(jnp.float32) * x
+
+
+def gather_cache_aggregate(src, idx, weights, *, block_d: int = 65536,
+                           interpret: Optional[bool] = None):
+    """Fused CacheUpdate-gather + ModelAggregation reduction.
+
+    out[d] = Σ_c weights[c] · src[idx[c], d]
+
+    src: [M, D] candidate model pool (cache rows + fresh models);
+    idx: [C] int32 winning-row indices from the metadata phase;
+    weights: [C] f32 aggregation weights (0 for invalid slots).
+
+    Instead of materializing the gathered [C, D] winner set in HBM and
+    re-reading it for the weighted reduction, the index map DMAs each
+    winning row's tile straight into VMEM (row id rides along as scalar
+    prefetch) and the reduction accumulates in the output tile — the cache
+    makes exactly one HBM trip between CacheUpdate and ModelAggregation.
+    """
+    M, D = src.shape
+    C = idx.shape[0]
+    block_d = min(block_d, max(128, D))
+    pad = (-D) % block_d
+    if pad:
+        src = jnp.pad(src, ((0, 0), (0, pad)))
+    Dp = D + pad
+    idx = jnp.clip(idx.astype(jnp.int32), 0, M - 1)
+    w = weights.astype(jnp.float32)
+
+    grid = (Dp // block_d, C)   # c innermost: out tile accumulates in VMEM
+    out = pl.pallas_call(
+        _gather_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[pl.BlockSpec((1, block_d),
+                                   lambda i, c, idx_ref, w_ref:
+                                   (idx_ref[c], i))],
+            out_specs=pl.BlockSpec((block_d,),
+                                   lambda i, c, idx_ref, w_ref: (i,)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((Dp,), jnp.float32),
+        interpret=_resolve_interpret(interpret),
+    )(idx, w, src)
     return out[:D]

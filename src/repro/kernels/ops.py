@@ -1,22 +1,21 @@
 """jit'd public wrappers around the Pallas kernels.
 
-``interpret`` defaults to True because this container is CPU-only; on a
-real TPU runtime set REPRO_PALLAS_COMPILED=1 to run the compiled kernels.
+``interpret`` is auto-detected from the backend: compiled kernels on TPU,
+interpreter everywhere else (the kernels use TPU-specific Pallas
+features). Override with REPRO_PALLAS_COMPILED=1 (force compiled) or =0
+(force interpreter) — see
+:func:`repro.kernels.cache_aggregate.default_interpret`.
 """
 from __future__ import annotations
 
 import functools
-import os
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import cache_aggregate as _ca
 from repro.kernels import decode_attention as _da
-
-
-def _interpret() -> bool:
-    return os.environ.get("REPRO_PALLAS_COMPILED", "0") != "1"
+from repro.kernels.cache_aggregate import default_interpret as _interpret
 
 
 @functools.partial(jax.jit, static_argnames=("block_d",))
@@ -24,6 +23,14 @@ def cache_aggregate(cache, weights, valid, *, block_d: int = 65536):
     """Masked weighted reduction over the cache axis: [C, D] -> [D] f32."""
     return _ca.cache_aggregate(cache, weights, valid, block_d=block_d,
                                interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("block_d",))
+def gather_cache_aggregate(src, idx, weights, *, block_d: int = 65536):
+    """Fused winner-gather + weighted reduction:
+    out[d] = Σ_c weights[c] · src[idx[c], d]; src [M, D] -> [D] f32."""
+    return _ca.gather_cache_aggregate(src, idx, weights, block_d=block_d,
+                                      interpret=_interpret())
 
 
 @functools.partial(jax.jit, static_argnames=("window", "block_s"))

@@ -17,6 +17,16 @@ def cache_aggregate_ref(cache, weights, valid):
     return jnp.einsum("c,cd->d", w, cache.astype(jnp.float32))
 
 
+def gather_cache_aggregate_ref(src, idx, weights):
+    """out[d] = Σ_c weights[c] * src[idx[c], d].
+
+    src: [M, D]; idx: [C] int32 (clamped); weights: [C] float32.
+    """
+    idx = jnp.clip(idx.astype(jnp.int32), 0, src.shape[0] - 1)
+    gathered = src[idx].astype(jnp.float32)          # [C, D]
+    return jnp.einsum("c,cd->d", weights.astype(jnp.float32), gathered)
+
+
 def decode_attention_ref(q, k, v, length, *, window: int = 0):
     """Single-token GQA attention oracle.
 

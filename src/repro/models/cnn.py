@@ -19,15 +19,46 @@ def _conv_init(key, k, cin, cout):
                                                jnp.float32)
 
 
-def _conv(x, w, stride=1, padding="SAME"):
-    return jax.lax.conv_general_dilated(
-        x, w, (stride, stride), padding,
-        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+def _conv(x, w, stride=1, padding="SAME", impl="fast"):
+    """2-D convolution, x: [B, H, W, Cin], w: [k, k, Cin, Cout].
+
+    impl="fast" runs the stride-1 SAME case (every conv in these models) as
+    im2col + einsum rather than ``lax.conv``: the fleet trains per-agent
+    *weights* under ``vmap``, and a batched-kernel conv lowers to grouped
+    convolution, which XLA CPU executes an order of magnitude slower than
+    the equivalent batched matmul. The einsum form is also MXU-friendly on
+    TPU. impl="reference" keeps the plain XLA conv as the numerical oracle.
+    """
+    k = w.shape[0]
+    if impl != "fast" or stride != 1 or padding != "SAME" or k % 2 == 0:
+        return jax.lax.conv_general_dilated(
+            x, w, (stride, stride), padding,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    pad = k // 2
+    B, H, W, cin = x.shape
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    cols = [xp[:, ki:ki + H, kj:kj + W, :]
+            for ki in range(k) for kj in range(k)]
+    patches = jnp.stack(cols, axis=-2)               # [B, H, W, k*k, cin]
+    return jnp.einsum("bhwpc,pcf->bhwf", patches,
+                      w.reshape(k * k, cin, w.shape[-1]))
 
 
-def _maxpool(x):
-    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
-                                 (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+def _maxpool(x, impl="fast"):
+    """2×2/stride-2 max pool (VALID semantics).
+
+    impl="fast" pools via reshape — equivalent to ``reduce_window`` but its
+    gradient is an argmax mask instead of XLA select-and-scatter, which
+    dominates the fleet's local update on CPU. impl="reference" keeps the
+    ``reduce_window`` formulation.
+    """
+    if impl != "fast":
+        return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                     (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    B, H, W, C = x.shape
+    x = x[:, : H // 2 * 2, : W // 2 * 2, :]
+    x = x.reshape(B, H // 2, 2, W // 2, 2, C)
+    return x.max(axis=(2, 4))
 
 
 def init_params(cfg: CNNConfig, key) -> dict:
@@ -62,27 +93,27 @@ def _norm(x, scale, bias, enabled):
     return (x - mu) * jax.lax.rsqrt(var + 1e-5) * scale + bias
 
 
-def forward(params, cfg: CNNConfig, images) -> jax.Array:
+def forward(params, cfg: CNNConfig, images, impl: str = "fast") -> jax.Array:
     """images: [B, H, W, C] -> logits [B, num_classes]."""
     x = images
     for i in range(len(cfg.conv_channels)):
-        x = _conv(x, params["conv"][i])
+        x = _conv(x, params["conv"][i], impl=impl)
         x = _norm(x, params["scale"][i], params["bias"][i], cfg.batch_norm)
         x = jax.nn.relu(x)
-        x = _maxpool(x)
+        x = _maxpool(x, impl=impl)
     x = x.reshape(x.shape[0], -1)
     if cfg.fc_hidden:
         x = jax.nn.relu(x @ params["fc1"] + params["fc1_b"])
     return x @ params["fc2"] + params["fc2_b"]
 
 
-def loss_fn(params, cfg: CNNConfig, images, labels):
-    logits = forward(params, cfg, images)
+def loss_fn(params, cfg: CNNConfig, images, labels, impl: str = "fast"):
+    logits = forward(params, cfg, images, impl=impl)
     logp = jax.nn.log_softmax(logits)
     nll = -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
     return nll
 
 
-def accuracy(params, cfg: CNNConfig, images, labels):
-    logits = forward(params, cfg, images)
+def accuracy(params, cfg: CNNConfig, images, labels, impl: str = "fast"):
+    logits = forward(params, cfg, images, impl=impl)
     return jnp.mean(jnp.argmax(logits, -1) == labels)

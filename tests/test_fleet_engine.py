@@ -1,0 +1,269 @@
+"""Fused fleet-epoch engine: equivalence with the legacy per-epoch loop,
+compile discipline (traced lr / epoch count), and the allocation-light
+gossip gather rewrite."""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import DFLConfig, MobilityConfig
+from repro.core import cache as cache_lib
+from repro.core import gossip
+from repro.core import rounds as rounds_lib
+from repro.fl.experiment import (ExperimentConfig, build_fleet, make_engine,
+                                 make_epoch_fn, run_experiment)
+from repro.mobility.base import partners_from_contacts
+from repro.models import cnn as cnn_lib
+
+FAST = dict(
+    dfl=DFLConfig(num_agents=6, cache_size=3, tau_max=10, local_steps=2,
+                  lr=0.1, batch_size=16, epoch_seconds=30.0),
+    mobility=MobilityConfig(grid_w=4, grid_h=6),
+    epochs=4,
+    eval_every=2,
+    n_train=400,
+    n_test=100,
+    image_hw=12,
+    lr_plateau=False,
+)
+
+MOBILITIES = {
+    "manhattan": MobilityConfig(grid_w=4, grid_h=6),
+    "random_waypoint": MobilityConfig(model="random_waypoint",
+                                      area_w=300.0, area_h=300.0),
+}
+
+
+def _cfg(algorithm="cached", mobility="manhattan", distribution="noniid",
+         **kw):
+    merged = {**FAST, "mobility": MOBILITIES[mobility], **kw}
+    return ExperimentConfig(algorithm=algorithm, distribution=distribution,
+                            **merged)
+
+
+# ---------------------------------------------------------------------------
+# gossip phase-2 gather rewrite: bit-exact vs the concat reference
+# ---------------------------------------------------------------------------
+
+def test_gather_select_matches_concat_bitexact():
+    N, cap = 6, 3
+    params = {"w": jnp.arange(N, dtype=jnp.float32)[:, None]
+              * jnp.ones((N, 5)),
+              "b": jnp.arange(N, dtype=jnp.float32)}
+    c = cache_lib.init_cache({"w": jnp.zeros((5,)), "b": jnp.zeros(())}, cap)
+    cache = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (N,) + x.shape).copy(), c)
+    samples = jnp.ones((N,)) * 3
+    group = jnp.zeros((N,), jnp.int32)
+    key = jax.random.PRNGKey(0)
+    for t in range(5):
+        key, k = jax.random.split(key)
+        met = jax.random.bernoulli(k, 0.4, (N, N))
+        met = met & met.T & ~jnp.eye(N, dtype=bool)
+        partners = partners_from_contacts(met, 2)
+        sel = gossip.exchange(params, cache, partners, t, samples, group,
+                              tau_max=4, policy="lru", gather_mode="select")
+        ref = gossip.exchange(params, cache, partners, t, samples, group,
+                              tau_max=4, policy="lru", gather_mode="concat")
+        for a, b in zip(jax.tree_util.tree_leaves(sel),
+                        jax.tree_util.tree_leaves(ref)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        cache = sel
+
+
+def test_gather_winners_own_model_rows():
+    """Slot C must resolve to the agent's own fresh model, clamped gather
+    must never read out of bounds."""
+    N, C = 3, 2
+    cache_models = {"w": jnp.arange(N * C * 4, dtype=jnp.float32
+                                    ).reshape(N, C, 4)}
+    params = {"w": 100.0 + jnp.arange(N * 4, dtype=jnp.float32
+                                      ).reshape(N, 4)}
+    gather_a = jnp.asarray([[1, 2], [0, 0], [2, 1]], jnp.int32)
+    gather_s = jnp.asarray([[C, 0], [1, C], [C, C]], jnp.int32)
+    out = gossip.gather_winners(cache_models, params, gather_a, gather_s)
+    ref = gossip.gather_winners(cache_models, params, gather_a, gather_s,
+                                mode="concat")
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(ref["w"]))
+    # own-model row check: agent 0 slot 0 pulled params[1]
+    np.testing.assert_array_equal(np.asarray(out["w"][0, 0]),
+                                  np.asarray(params["w"][1]))
+
+
+# ---------------------------------------------------------------------------
+# fused engine vs legacy loop: same seed -> same trajectory
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algorithm", ["cached", "dfl", "cfl"])
+@pytest.mark.parametrize("mobility", ["manhattan", "random_waypoint"])
+def test_fused_matches_legacy_trajectory(algorithm, mobility):
+    cfg = _cfg(algorithm, mobility)
+    fused = run_experiment(cfg, engine="fused", record_cache_stats=True)
+    legacy = run_experiment(cfg, engine="legacy", record_cache_stats=True)
+    assert fused["epoch"] == legacy["epoch"]
+    np.testing.assert_allclose(fused["acc"], legacy["acc"], atol=2e-3)
+    np.testing.assert_allclose(fused["cache_num"], legacy["cache_num"],
+                               atol=1e-5)
+    np.testing.assert_allclose(fused["cache_age"], legacy["cache_age"],
+                               atol=1e-4)
+    assert fused["epoch_traces"] == 1
+    assert legacy["epoch_traces"] == 1
+
+
+def test_fused_grouped_policy_and_random_partners():
+    """Engine covers the group cache policy and the random partner-sample
+    key discipline."""
+    cfg = _cfg("cached", distribution="grouped", partner_sample="random",
+               dfl=dataclasses.replace(FAST["dfl"], policy="group",
+                                       cache_size=6))
+    cfg = dataclasses.replace(cfg, num_groups=3)
+    fused = run_experiment(cfg, engine="fused")
+    legacy = run_experiment(cfg, engine="legacy")
+    np.testing.assert_allclose(fused["acc"], legacy["acc"], atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# compile discipline
+# ---------------------------------------------------------------------------
+
+def test_legacy_lr_change_does_not_retrace():
+    cfg = _cfg("cached")
+    (model_cfg, state, data, counts, _tb, mstate,
+     group_slots, mob_model, mob_cfg) = build_fleet(cfg)
+    loss_fn = lambda p, b: cnn_lib.loss_fn(p, model_cfg, b["images"],
+                                           b["labels"])
+    epoch_fn, counter = make_epoch_fn(cfg, loss_fn=loss_fn,
+                                      group_slots=group_slots)
+    key = jax.random.PRNGKey(3)
+    _, k1, k2 = jax.random.split(key, 3)
+    mstate, met = mob_model.simulate_epoch(mstate, k1, cfg=mob_cfg,
+                                           seconds=cfg.dfl.epoch_seconds)
+    partners = partners_from_contacts(met, cfg.max_partners)
+    state, _ = epoch_fn(state, partners, data, counts, k2, 0.1)
+    assert counter["traces"] == 1
+    state, _ = epoch_fn(state, partners, data, counts, k2, 0.05)
+    state, _ = epoch_fn(state, partners, data, counts, k2, 0.025)
+    assert counter["traces"] == 1          # ReduceLROnPlateau never retraces
+
+
+def test_engine_lr_and_epoch_count_do_not_retrace():
+    cfg = _cfg("cached")
+    (model_cfg, state, data, counts, _tb, mstate,
+     group_slots, mob_model, mob_cfg) = build_fleet(cfg)
+    loss_fn = lambda p, b: cnn_lib.loss_fn(p, model_cfg, b["images"],
+                                           b["labels"])
+    eng = make_engine(cfg, loss_fn=loss_fn, mob_model=mob_model,
+                      mob_cfg=mob_cfg, group_slots=group_slots, chunk=3)
+    key = jax.random.PRNGKey(3)
+    state, mstate, key, losses = eng.run(state, mstate, key, 0.1, data,
+                                         counts, 3)
+    assert eng.traces == 1
+    assert np.isfinite(np.asarray(losses)).all()
+    state, mstate, key, losses = eng.run(state, mstate, key, 0.05, data,
+                                         counts, 2)
+    assert eng.traces == 1                 # lr + epoch count both traced
+    losses = np.asarray(losses)
+    assert np.isfinite(losses[:2]).all() and np.isnan(losses[2])
+
+
+def test_engine_donated_matches_undonated():
+    """donate=True must not change results (in-place cache update)."""
+    cfg = _cfg("cached", epochs=3, eval_every=3)
+    outs = []
+    for donate in (False, True):
+        (model_cfg, state, data, counts, _tb, mstate,
+         group_slots, mob_model, mob_cfg) = build_fleet(cfg)
+        loss_fn = lambda p, b: cnn_lib.loss_fn(p, model_cfg, b["images"],
+                                               b["labels"])
+        eng = make_engine(cfg, loss_fn=loss_fn, mob_model=mob_model,
+                          mob_cfg=mob_cfg, group_slots=group_slots,
+                          chunk=3, donate=donate)
+        with warnings.catch_warnings():
+            # CPU XLA can't alias buffers; donation falls back with a warning
+            warnings.simplefilter("ignore")
+            state, mstate, key, _ = eng.run(state, mstate,
+                                            jax.random.PRNGKey(7), 0.1,
+                                            data, counts, 3)
+        outs.append(state)
+    for a, b in zip(jax.tree_util.tree_leaves(outs[0]),
+                    jax.tree_util.tree_leaves(outs[1])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# on-device eval + fused gather/aggregate kernel
+# ---------------------------------------------------------------------------
+
+def test_fleet_eval_matches_host_stats():
+    cfg = _cfg("cached", epochs=2, eval_every=2)
+    (model_cfg, state, data, counts, test_batch, mstate,
+     group_slots, mob_model, mob_cfg) = build_fleet(cfg)
+    loss_fn = lambda p, b: cnn_lib.loss_fn(p, model_cfg, b["images"],
+                                           b["labels"])
+    acc_fn = lambda p, b: cnn_lib.accuracy(p, model_cfg, b["images"],
+                                           b["labels"])
+    eng = make_engine(cfg, loss_fn=loss_fn, mob_model=mob_model,
+                      mob_cfg=mob_cfg, group_slots=group_slots, chunk=2)
+    state, mstate, key, _ = eng.run(state, mstate, jax.random.PRNGKey(5),
+                                    0.1, data, counts, 2)
+    acc, cache_num, cache_age = rounds_lib.fleet_eval(state, acc_fn,
+                                                      test_batch)
+    ref_acc, _ = rounds_lib.fleet_accuracy(state, acc_fn, test_batch)
+    valid = np.asarray(state.cache.valid)
+    ages = np.asarray(state.t - state.cache.ts)
+    assert float(acc) == pytest.approx(float(ref_acc))
+    assert float(cache_num) == pytest.approx(float(valid.sum(1).mean()))
+    assert float(cache_age) == pytest.approx(
+        float((ages * valid).sum() / max(valid.sum(), 1)), abs=1e-5)
+
+
+def test_gather_cache_aggregate_kernel():
+    from repro.kernels import ops as kops
+    from repro.kernels import ref as kref
+    key = jax.random.PRNGKey(0)
+    for M, D, C in ((7, 256, 3), (13, 517, 5)):     # 517: padding path
+        src = jax.random.normal(key, (M, D), jnp.float32)
+        idx = jax.random.randint(jax.random.PRNGKey(1), (C,), 0, M)
+        w = jax.random.uniform(jax.random.PRNGKey(2), (C,))
+        out = kops.gather_cache_aggregate(src, idx, w)
+        ref = kref.gather_cache_aggregate_ref(src, idx, w)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_aggregate_flat_gathered_matches_two_step():
+    from repro.core.aggregate import aggregate_flat, aggregate_flat_gathered
+    key = jax.random.PRNGKey(0)
+    M, D, C = 11, 300, 4
+    src = jax.random.normal(key, (M, D), jnp.float32)
+    idx = jnp.asarray([3, 9, 0, 7], jnp.int32)
+    params = jax.random.normal(jax.random.PRNGKey(1), (D,))
+    samples = jnp.asarray([2.0, 4.0, 1.0, 3.0])
+    valid = jnp.asarray([1.0, 0.0, 1.0, 1.0])
+    fused = aggregate_flat_gathered(params, src, idx, 5.0, samples, valid)
+    two_step = aggregate_flat(params, src[idx], 5.0, samples, valid)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(two_step),
+                               rtol=1e-5, atol=1e-5)
+    no_kernel = aggregate_flat_gathered(params, src, idx, 5.0, samples,
+                                        valid, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(no_kernel),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# model fast-impl vs reference-impl oracle
+# ---------------------------------------------------------------------------
+
+def test_cnn_fast_impl_matches_reference():
+    from repro.configs.paper_models import PAPER_CONFIGS
+    for name in ("paper-mnist-cnn", "paper-fashion-cnn"):
+        model_cfg = dataclasses.replace(PAPER_CONFIGS[name], image_hw=16)
+        params = cnn_lib.init_params(model_cfg, jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, 16, 1))
+        fast = cnn_lib.forward(params, model_cfg, x, impl="fast")
+        ref = cnn_lib.forward(params, model_cfg, x, impl="reference")
+        np.testing.assert_allclose(np.asarray(fast), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-4)
