@@ -16,7 +16,9 @@ BENCHES = [
                               "models + encounter stats"),
     ("bench_group_cache", "paper Fig. 6 (group-based caching)"),
     ("bench_staleness_decay", "beyond-paper: staleness-decayed aggregation"),
-    ("bench_cache_policies", "paper contribution 3: LRU vs FIFO vs Random"),
+    ("bench_cache_policies", "paper contribution 3: all registered cache "
+                             "policies × mobility models "
+                             "-> BENCH_policies.json"),
     ("bench_fleet_scale", "§Perf: fused fleet engine vs legacy loop, "
                           "N × cache_size sweep -> BENCH_fleet.json"),
     ("bench_kernels", "Pallas kernel micro-benches"),

@@ -140,7 +140,16 @@ class DFLConfig:
     lr: float = 0.1
     batch_size: int = 64
     epoch_seconds: float = 120.0
-    policy: str = "lru"             # lru | group | fifo | random
+    policy: str = "lru"             # any registered cache policy — see
+                                    # repro.policies.registry.available()
+                                    # (lru/group = paper Alg. 2/3; fifo,
+                                    # random, mobility_aware,
+                                    # staleness_weighted, priority, ...)
+    policy_params: Tuple[Tuple[str, float], ...] = ()
+                                    # static (name, value) knobs for score-
+                                    # based policies, e.g.
+                                    # (("mobility_bias", 8.0),) or
+                                    # (("gamma", 0.9),)
     num_groups: int = 0             # >0 enables group-based policy metadata
     aggregate_self: bool = True     # own model always participates
     staleness_decay: float = 1.0    # beyond-paper: α_j ∝ n_j·γ^age (γ=1 = paper)

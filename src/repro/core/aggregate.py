@@ -61,14 +61,18 @@ def aggregate(params, own_samples, cache: ModelCache, *,
 
 def aggregate_flat(flat_params, flat_cache, own_samples, cache_samples,
                    valid, *, use_kernel: bool = True,
-                   include_self: bool = True):
+                   include_self: bool = True, ages=None,
+                   staleness_decay: float = 1.0):
     """Flat-vector aggregation: flat_params [D], flat_cache [C, D].
 
     The pod-scale path; `use_kernel` routes through the Pallas kernel.
+    ``ages``/``staleness_decay`` apply the γ^age weight decay (e.g. the
+    ``staleness_weighted`` policy) inside the kernel path's weights.
     """
     w_self, w_cache = aggregation_weights(own_samples, cache_samples,
                                           valid.astype(jnp.float32),
-                                          include_self)
+                                          include_self, ages=ages,
+                                          staleness_decay=staleness_decay)
     if use_kernel:
         from repro.kernels import ops as kops
         acc = kops.cache_aggregate(flat_cache, w_cache,
@@ -83,12 +87,14 @@ def aggregate_flat(flat_params, flat_cache, own_samples, cache_samples,
 
 def aggregate_flat_gathered(flat_params, src, sel, own_samples,
                             cand_samples, valid, *, use_kernel: bool = True,
-                            include_self: bool = True):
+                            include_self: bool = True, ages=None,
+                            staleness_decay: float = 1.0):
     """Single-pass gather + aggregate over a candidate pool.
 
     flat_params: [D] own model; src: [M, D] candidate pool (cache rows +
     fresh models as produced by the gossip metadata phase); sel: [C] int32
-    winning rows; cand_samples/valid: [C] per-winner weights/mask.
+    winning rows; cand_samples/valid: [C] per-winner weights/mask;
+    ages: optional [C] per-winner staleness for the γ^age weight decay.
 
     Fuses gossip phase 2 with ModelAggregation: the winners are streamed
     from ``src`` directly into the weighted reduction (Pallas kernel when
@@ -97,7 +103,8 @@ def aggregate_flat_gathered(flat_params, src, sel, own_samples,
     """
     w_self, w_cache = aggregation_weights(own_samples, cand_samples,
                                           valid.astype(jnp.float32),
-                                          include_self)
+                                          include_self, ages=ages,
+                                          staleness_decay=staleness_decay)
     w = w_cache * valid.astype(jnp.float32)
     if use_kernel:
         from repro.kernels import ops as kops

@@ -2,12 +2,17 @@
 
 TPU adaptation: instead of PyTorch dicts of ``state_dict``s, the cache is a
 fixed-capacity *stacked pytree* — every leaf of the model gets a leading
-``[C]`` axis — plus flat metadata arrays. All updates (staleness eviction,
-LRU dedup/retention, group-based pruning) are ``jax.lax`` ops over the
-metadata, so an entire fleet's cache maintenance jits into one program and
-never leaves the device.
+``[C]`` axis — plus a :class:`CacheMeta` bundle of flat metadata arrays.
+All updates (staleness eviction, dedup/retention, policy scoring) are
+``jax.lax`` ops over the metadata, so an entire fleet's cache maintenance
+jits into one program and never leaves the device.
 
-Metadata per slot:
+Retention policies live in ``repro.policies`` (registry-driven; see
+``repro.policies.registry.available()``). This module keeps the cache
+containers, staleness eviction, and the single-insert path; the legacy
+``select_*`` helpers are kept as thin shims over the policy engine.
+
+Metadata per slot (see :class:`CacheMeta`):
     ts      int32  epoch at which the cached model finished local training
                    (the paper's τ);  -1 = empty slot
     origin  int32  agent the model was trained on; -1 = empty
@@ -18,7 +23,7 @@ Metadata per slot:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -26,6 +31,47 @@ import jax.numpy as jnp
 from repro.utils.tree import tree_take
 
 NEG = jnp.int32(-1)
+
+
+@dataclasses.dataclass
+class CacheMeta:
+    """The per-entry metadata bundle, as one struct.
+
+    Replaces the ``(origin, ts, samples, group, arrival)`` positional
+    plumbing between the gossip candidate phase, the policy engine and the
+    cache container. Leaves share a common leading shape — ``[M]`` for a
+    candidate set, ``[C]`` for one agent's cache, ``[N, C]`` for a fleet.
+    """
+    ts: jax.Array        # int32
+    origin: jax.Array    # int32
+    samples: jax.Array   # float32
+    group: jax.Array     # int32
+    arrival: jax.Array   # int32
+
+    @property
+    def valid(self) -> jax.Array:
+        return self.origin >= 0
+
+    def take(self, sel, sel_valid) -> "CacheMeta":
+        """Gather entries ``sel``, blanking every field where ``sel_valid``
+        is False (empty slots carry origin == -1 across *all* metadata)."""
+        return CacheMeta(
+            ts=jnp.where(sel_valid, self.ts[sel], NEG),
+            origin=jnp.where(sel_valid, self.origin[sel], NEG),
+            samples=jnp.where(sel_valid, self.samples[sel], 0.0),
+            group=jnp.where(sel_valid, self.group[sel], NEG),
+            arrival=jnp.where(sel_valid, self.arrival[sel], NEG))
+
+    def as_dict(self) -> Dict[str, jax.Array]:
+        return {"ts": self.ts, "origin": self.origin,
+                "samples": self.samples, "group": self.group,
+                "arrival": self.arrival}
+
+
+jax.tree_util.register_dataclass(
+    CacheMeta,
+    data_fields=["ts", "origin", "samples", "group", "arrival"],
+    meta_fields=[])
 
 
 @dataclasses.dataclass
@@ -44,6 +90,12 @@ class ModelCache:
     @property
     def valid(self) -> jax.Array:
         return self.origin >= 0
+
+    @property
+    def meta(self) -> CacheMeta:
+        return CacheMeta(ts=self.ts, origin=self.origin,
+                         samples=self.samples, group=self.group,
+                         arrival=self.arrival)
 
 jax.tree_util.register_dataclass(
     ModelCache,
@@ -73,24 +125,20 @@ def evict_stale(cache: ModelCache, t, tau_max) -> ModelCache:
 
 
 # ---------------------------------------------------------------------------
-# candidate-set selection (metadata phase)
+# legacy candidate-selection API — thin shims over repro.policies
 # ---------------------------------------------------------------------------
 
-def _dedup_mask(origin, ts, pref):
-    """valid[i] = entry i is the best copy of its origin.
-
-    Best = max ts; ties broken by higher ``pref`` then lower index.
-    origin < 0 entries are invalid.
-    """
-    M = origin.shape[0]
-    same = origin[None, :] == origin[:, None]          # [i, j]
-    newer = ts[None, :] > ts[:, None]
-    tie = ts[None, :] == ts[:, None]
-    pref_j = (pref[None, :] > pref[:, None]) | (
-        (pref[None, :] == pref[:, None])
-        & (jnp.arange(M)[None, :] < jnp.arange(M)[:, None]))
-    beaten = same & (newer | (tie & pref_j))
-    return (origin >= 0) & ~jnp.any(beaten, axis=1)
+def _run_policy(policy_name: str, origin, ts, samples, group, arrival,
+                capacity: int, *, rng=None, group_slots=None, pref=None):
+    from repro.policies import base as policy_base
+    from repro.policies import registry as policy_registry
+    meta = CacheMeta(ts=ts, origin=origin, samples=samples, group=group,
+                     arrival=arrival)
+    ctx = policy_base.PolicyContext(t=jnp.max(ts), capacity=capacity,
+                                    rng=rng, group_slots=group_slots)
+    sel, sel_meta = policy_base.retain(
+        meta, policy_registry.get_policy(policy_name), ctx, pref=pref)
+    return sel, sel_meta.as_dict()
 
 
 def select_lru(origin, ts, samples, group, arrival, capacity: int,
@@ -101,20 +149,8 @@ def select_lru(origin, ts, samples, group, arrival, capacity: int,
     Returns (sel_idx [capacity], meta dict) — sel_idx indexes the candidate
     arrays; invalid selections have origin == -1.
     """
-    pref = jnp.zeros_like(ts) if rank_key is None else rank_key
-    valid = _dedup_mask(origin, ts, pref)
-    key = jnp.where(valid, ts, jnp.int32(-2**30))
-    # stable ordering: break ts ties by candidate index (earlier = own cache)
-    order = jnp.argsort(-key, stable=True)
-    sel = order[:capacity]
-    sel_valid = valid[sel]
-    return sel, {
-        "ts": jnp.where(sel_valid, ts[sel], NEG),
-        "origin": jnp.where(sel_valid, origin[sel], NEG),
-        "samples": jnp.where(sel_valid, samples[sel], 0.0),
-        "group": jnp.where(sel_valid, group[sel], NEG),
-        "arrival": jnp.where(sel_valid, arrival[sel], NEG),
-    }
+    return _run_policy("lru", origin, ts, samples, group, arrival, capacity,
+                       pref=rank_key)
 
 
 def select_group(origin, ts, samples, group, arrival, capacity: int,
@@ -123,84 +159,63 @@ def select_group(origin, ts, samples, group, arrival, capacity: int,
 
     group_slots: [num_groups] int32 with sum == capacity.
     """
-    num_groups = group_slots.shape[0]
-    valid = _dedup_mask(origin, ts, jnp.zeros_like(ts))
-    M = origin.shape[0]
-    # rank of each entry within its group by ts desc (valid entries only)
-    same_g = (group[None, :] == group[:, None])
-    better = same_g & valid[None, :] & (
-        (ts[None, :] > ts[:, None])
-        | ((ts[None, :] == ts[:, None])
-           & (jnp.arange(M)[None, :] < jnp.arange(M)[:, None])))
-    rank = jnp.sum(better, axis=1)
-    slots = jnp.where((group >= 0) & (group < num_groups),
-                      group_slots[jnp.clip(group, 0, num_groups - 1)], 0)
-    keep = valid & (rank < slots)
-    key = jnp.where(keep, ts, jnp.int32(-2**30))
-    order = jnp.argsort(-key, stable=True)
-    sel = order[:capacity]
-    sel_valid = keep[sel]
-    return sel, {
-        "ts": jnp.where(sel_valid, ts[sel], NEG),
-        "origin": jnp.where(sel_valid, origin[sel], NEG),
-        "samples": jnp.where(sel_valid, samples[sel], 0.0),
-        "group": jnp.where(sel_valid, group[sel], NEG),
-        "arrival": jnp.where(sel_valid, arrival[sel], NEG),
-    }
-
-
-def _retain(retain_key, valid, origin, ts, samples, group, arrival,
-            capacity: int):
-    key = jnp.where(valid, retain_key, jnp.int32(-2**30))
-    order = jnp.argsort(-key, stable=True)
-    sel = order[:capacity]
-    sel_valid = valid[sel]
-    return sel, {
-        "ts": jnp.where(sel_valid, ts[sel], NEG),
-        "origin": jnp.where(sel_valid, origin[sel], NEG),
-        "samples": jnp.where(sel_valid, samples[sel], 0.0),
-        "group": jnp.where(sel_valid, group[sel], NEG),
-        "arrival": jnp.where(sel_valid, arrival[sel], NEG),
-    }
+    return _run_policy("group", origin, ts, samples, group, arrival,
+                       capacity, group_slots=group_slots)
 
 
 def select_fifo(origin, ts, samples, group, arrival, capacity: int):
     """FIFO variant: dedup by origin (freshest copy), retain the most
     recently *received* entries. Non-paper baseline for the policy study."""
-    valid = _dedup_mask(origin, ts, jnp.zeros_like(ts))
-    return _retain(arrival, valid, origin, ts, samples, group, arrival,
-                   capacity)
+    return _run_policy("fifo", origin, ts, samples, group, arrival, capacity)
 
 
 def select_random(origin, ts, samples, group, arrival, capacity: int, key):
     """Random retention after origin-dedup. Non-paper baseline."""
-    valid = _dedup_mask(origin, ts, jnp.zeros_like(ts))
-    rnd = jax.random.randint(key, origin.shape, 0, 2**30)
-    return _retain(rnd, valid, origin, ts, samples, group, arrival, capacity)
+    return _run_policy("random", origin, ts, samples, group, arrival,
+                       capacity, rng=key)
 
 
 def apply_selection(cache: ModelCache, cand_models, sel, meta) -> ModelCache:
-    """Gather selected candidate models into a fresh cache."""
+    """Gather selected candidate models into a fresh cache.
+
+    ``meta`` is a :class:`CacheMeta` (or the legacy field dict)."""
     models = tree_take(cand_models, sel, axis=0)
+    if isinstance(meta, CacheMeta):
+        meta = meta.as_dict()
     return dataclasses.replace(cache, models=models, **meta)
 
 
 def insert(cache: ModelCache, params, t, origin, samples, group,
-           tau_max) -> ModelCache:
-    """Insert/refresh a single model (Alg. 2 line 6) then LRU-retain.
+           tau_max, policy="lru", rng: Optional[jax.Array] = None,
+           group_slots: Optional[jax.Array] = None,
+           policy_params: Optional[Dict[str, float]] = None,
+           encounters: Optional[jax.Array] = None) -> ModelCache:
+    """Insert/refresh a single model (Alg. 2 line 6) then retain under the
+    configured ``policy`` (name or :class:`repro.policies.CachePolicy`).
 
-    Used by the pod-scale deployment where exchanges arrive one at a time.
+    Used by the pod-scale deployment where exchanges arrive one at a time;
+    honors the same registry as the fleet path so both agree.
     """
+    from repro.policies import base as policy_base
+    from repro.policies import registry as policy_registry
+    pol = policy_registry.resolve(policy)
     cache = evict_stale(cache, t, tau_max)
     C = cache.capacity
     cand_models = jax.tree_util.tree_map(
         lambda c, x: jnp.concatenate([c, x[None].astype(c.dtype)], axis=0),
         cache.models, params)
-    origin_c = jnp.concatenate([cache.origin, jnp.asarray([origin], jnp.int32)])
-    ts_c = jnp.concatenate([cache.ts, jnp.asarray([t], jnp.int32)])
-    samples_c = jnp.concatenate([cache.samples,
-                                 jnp.asarray([samples], jnp.float32)])
-    group_c = jnp.concatenate([cache.group, jnp.asarray([group], jnp.int32)])
-    arrival_c = jnp.concatenate([cache.arrival, jnp.asarray([t], jnp.int32)])
-    sel, meta = select_lru(origin_c, ts_c, samples_c, group_c, arrival_c, C)
-    return apply_selection(cache, cand_models, sel, meta)
+    meta = CacheMeta(
+        ts=jnp.concatenate([cache.ts, jnp.asarray([t], jnp.int32)]),
+        origin=jnp.concatenate([cache.origin,
+                                jnp.asarray([origin], jnp.int32)]),
+        samples=jnp.concatenate([cache.samples,
+                                 jnp.asarray([samples], jnp.float32)]),
+        group=jnp.concatenate([cache.group, jnp.asarray([group], jnp.int32)]),
+        arrival=jnp.concatenate([cache.arrival,
+                                 jnp.asarray([t], jnp.int32)]))
+    ctx = policy_base.PolicyContext(
+        t=jnp.asarray(t, jnp.int32), capacity=C, rng=rng,
+        group_slots=group_slots, encounters=encounters,
+        params=dict(policy_params or {}))
+    sel, sel_meta = policy_base.retain(meta, pol, ctx)
+    return apply_selection(cache, cand_models, sel, sel_meta)

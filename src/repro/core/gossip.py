@@ -16,14 +16,15 @@ the select-based gather keeps phase 2 free of full-cache temporaries.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Callable, Optional
+from typing import Dict, Optional, Union
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import cache as cache_lib
-from repro.core.cache import ModelCache, NEG
+from repro.core.cache import CacheMeta, ModelCache, NEG
+from repro.policies import base as policy_base
+from repro.policies import registry as policy_registry
+from repro.policies.base import CachePolicy
 
 
 def _candidates(cache: ModelCache, t, partners, own_ts, own_samples,
@@ -124,48 +125,53 @@ def gather_winners(cache_models, params, gather_a, gather_s, *,
 
 
 def exchange(params, cache: ModelCache, partners, t, own_samples, own_group,
-             *, tau_max: int, policy: str = "lru",
+             *, tau_max: int, policy: Union[str, CachePolicy] = "lru",
              group_slots: Optional[jax.Array] = None,
              rng: Optional[jax.Array] = None,
+             encounters: Optional[jax.Array] = None,
+             policy_params: Optional[Dict[str, float]] = None,
              gather_mode: str = "select") -> ModelCache:
     """One epoch of DTN-like cache exchange for the whole fleet.
 
     params: pytree [N, ...] (post-local-update models x̃_i(t));
-    cache: leaves [N, C, ...]; partners: [N, D] int32 (-1 padded).
-    Agents with no partners still run staleness eviction + retention.
+    cache: leaves [N, C, ...]; partners: [N, D] int32 (-1 padded);
+    encounters: optional [N, N] cumulative per-pair encounter counts for
+    mobility-aware policies. ``policy`` is a registered policy name (or a
+    CachePolicy); the choice is static per trace, policy randomness stays
+    the traced ``rng`` key. Agents with no partners still run staleness
+    eviction + retention.
     """
+    pol = policy_registry.resolve(policy)
     N, C = cache.ts.shape
     own_ts = jnp.full((N,), t, jnp.int32)
     ts, origin, samples, group, arrival, src_a, src_s = _candidates(
         cache, t, partners, own_ts, own_samples, own_group, tau_max)
 
-    if policy == "lru":
-        sel_fn = functools.partial(cache_lib.select_lru, capacity=C)
-        sel, meta = jax.vmap(sel_fn)(origin, ts, samples, group, arrival)
-    elif policy == "group":
-        if group_slots is None:
-            raise ValueError("group policy requires group_slots")
-        sel_fn = lambda o, t_, s, g, a, gs: cache_lib.select_group(
-            o, t_, s, g, a, capacity=C, group_slots=gs)
-        sel, meta = jax.vmap(sel_fn, in_axes=(0, 0, 0, 0, 0, None))(
-            origin, ts, samples, group, arrival, group_slots)
-    elif policy == "fifo":
-        sel_fn = functools.partial(cache_lib.select_fifo, capacity=C)
-        sel, meta = jax.vmap(sel_fn)(origin, ts, samples, group, arrival)
-    elif policy == "random":
-        if rng is None:
-            raise ValueError("random policy requires rng")
-        keys = jax.random.split(rng, N)
-        sel_fn = lambda o, t_, s, g, a, k: cache_lib.select_random(
-            o, t_, s, g, a, C, k)
-        sel, meta = jax.vmap(sel_fn)(origin, ts, samples, group, arrival,
-                                     keys)
-    else:
-        raise ValueError(f"unknown cache policy {policy!r}")
+    if pol.needs_rng and rng is None:
+        raise ValueError(f"{pol.name} policy requires rng")
+    keys = jax.random.split(rng, N) if pol.needs_rng else None
+    pparams = dict(policy_params or {})
+    t_arr = jnp.asarray(t, jnp.int32)
+
+    def one_agent(origin_i, ts_i, samples_i, group_i, arrival_i, key_i,
+                  enc_i):
+        meta = CacheMeta(ts=ts_i, origin=origin_i, samples=samples_i,
+                         group=group_i, arrival=arrival_i)
+        ctx = policy_base.PolicyContext(
+            t=t_arr, capacity=C, rng=key_i, group_slots=group_slots,
+            encounters=enc_i, params=pparams)
+        return policy_base.retain(meta, pol, ctx)
+
+    sel, meta = jax.vmap(
+        one_agent,
+        in_axes=(0, 0, 0, 0, 0,
+                 0 if keys is not None else None,
+                 0 if encounters is not None else None))(
+        origin, ts, samples, group, arrival, keys, encounters)
 
     # phase 2: gather winning model weights only
     gather_a = jnp.take_along_axis(src_a, sel, axis=1)  # [N, C]
     gather_s = jnp.take_along_axis(src_s, sel, axis=1)
     models = gather_winners(cache.models, params, gather_a, gather_s,
                             mode=gather_mode)
-    return dataclasses.replace(cache, models=models, **meta)
+    return dataclasses.replace(cache, models=models, **meta.as_dict())

@@ -25,9 +25,12 @@ class FleetState:
     samples: jax.Array     # [N] float32 — n_i
     group: jax.Array       # [N] int32 — distribution group of each agent
     t: jax.Array           # [] int32 — global epoch
+    encounters: Any = None # [N, N] float32 — cumulative per-pair exchange
+                           # counts (mobility-aware cache policies)
 
 jax.tree_util.register_dataclass(
-    FleetState, data_fields=["params", "cache", "samples", "group", "t"],
+    FleetState,
+    data_fields=["params", "cache", "samples", "group", "t", "encounters"],
     meta_fields=[])
 
 
@@ -45,7 +48,19 @@ def init_fleet(template_params, num_agents: int, cache_size: int,
     return FleetState(params=params, cache=cache,
                       samples=jnp.asarray(samples, jnp.float32),
                       group=jnp.asarray(group, jnp.int32),
-                      t=jnp.zeros((), jnp.int32))
+                      t=jnp.zeros((), jnp.int32),
+                      encounters=jnp.zeros((num_agents, num_agents),
+                                           jnp.float32))
+
+
+def count_encounters(encounters, partners):
+    """Accumulate this epoch's realized exchange partners into the [N, N]
+    per-pair encounter counts (no-op when encounters is None)."""
+    if encounters is None:
+        return None
+    N = encounters.shape[0]
+    hit = (partners[..., None] == jnp.arange(N)) & (partners >= 0)[..., None]
+    return encounters + jnp.sum(hit, axis=1).astype(encounters.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -55,14 +70,16 @@ def init_fleet(template_params, num_agents: int, cache_size: int,
 def cached_dfl_epoch(state: FleetState, partners, data, counts, key, *,
                      loss_fn: Callable, local_steps: int, batch_size: int,
                      lr, rho: float = 0.0, tau_max: int = 10,
-                     policy: str = "lru",
+                     policy="lru",
                      group_slots: Optional[jax.Array] = None,
                      staleness_decay: float = 1.0,
+                     policy_params: Optional[dict] = None,
                      gather_mode: str = "select"
                      ) -> Tuple[FleetState, jax.Array]:
     """One global epoch of Algorithm 1 for the whole fleet.
 
-    partners: [N, D] contact lists for this epoch (-1 padded).
+    partners: [N, D] contact lists for this epoch (-1 padded). ``policy``
+    is a registered cache-policy name or CachePolicy (static per trace).
     """
     N = state.samples.shape[0]
     key, k_local, k_policy = jax.random.split(key, 3)
@@ -73,18 +90,22 @@ def cached_dfl_epoch(state: FleetState, partners, data, counts, key, *,
         state.params, data, counts, local_keys, loss_fn=loss_fn,
         steps=local_steps, batch_size=batch_size, lr=lr, rho=rho)
 
-    # 2) CacheUpdate: DTN-like exchange with encountered agents
+    # 2) CacheUpdate: DTN-like exchange with encountered agents; the
+    # realized partner contacts feed the per-pair encounter counts that
+    # mobility-aware policies score against
+    encounters = count_encounters(state.encounters, partners)
     cache = gossip.exchange(
         tilde, state.cache, partners, state.t, state.samples, state.group,
         tau_max=tau_max, policy=policy, group_slots=group_slots,
-        rng=k_policy, gather_mode=gather_mode)
+        rng=k_policy, encounters=encounters, policy_params=policy_params,
+        gather_mode=gather_mode)
 
     # 3) ModelAggregation over all cached models (+ own)
     new_params = aggregate(tilde, state.samples, cache, t=state.t,
                            staleness_decay=staleness_decay)
 
     return dataclasses.replace(state, params=new_params, cache=cache,
-                               t=state.t + 1), losses
+                               t=state.t + 1, encounters=encounters), losses
 
 
 # ---------------------------------------------------------------------------
@@ -146,9 +167,10 @@ def cfl_epoch(state: FleetState, data, counts, key, *, loss_fn: Callable,
 
 def make_epoch_step(algorithm: str, *, loss_fn: Callable, local_steps: int,
                     batch_size: int, rho: float = 0.0, tau_max: int = 10,
-                    policy: str = "lru",
+                    policy="lru",
                     group_slots: Optional[jax.Array] = None,
                     staleness_decay: float = 1.0,
+                    policy_params: Optional[dict] = None,
                     gather_mode: str = "select") -> Callable:
     """Bind an algorithm's hyperparameters into a uniform per-epoch step
 
@@ -156,16 +178,26 @@ def make_epoch_step(algorithm: str, *, loss_fn: Callable, local_steps: int,
 
     (cfl ignores ``partners``). The single source of the algorithm dispatch
     for the legacy jitted loop, the fused engine, and the benchmarks — so
-    a new hyperparameter is threaded in exactly one place.
+    a new hyperparameter is threaded in exactly one place. The cache
+    policy is resolved through the registry once here, so the choice is
+    static per trace; policies that impose an aggregation staleness decay
+    (e.g. ``staleness_weighted``) have their γ resolved here too.
     """
     common = dict(loss_fn=loss_fn, local_steps=local_steps,
                   batch_size=batch_size, rho=rho)
     if algorithm == "cached":
+        from repro.policies import base as policy_base
+        from repro.policies import registry as policy_registry
+        pol = policy_registry.resolve(policy)
+        staleness_decay = policy_base.effective_staleness_decay(
+            pol, staleness_decay, policy_params)
+
         def step(state, partners, data, counts, key, lr):
             return cached_dfl_epoch(
                 state, partners, data, counts, key, lr=lr, tau_max=tau_max,
-                policy=policy, group_slots=group_slots,
-                staleness_decay=staleness_decay, gather_mode=gather_mode,
+                policy=pol, group_slots=group_slots,
+                staleness_decay=staleness_decay,
+                policy_params=policy_params, gather_mode=gather_mode,
                 **common)
     elif algorithm == "dfl":
         def step(state, partners, data, counts, key, lr):
@@ -226,9 +258,10 @@ def make_fleet_engine(*, algorithm: str, mob_model, mob_cfg,
                       partners_fn: Optional[Callable] = None,
                       loss_fn: Callable, local_steps: int, batch_size: int,
                       lr_default: float = 0.1, rho: float = 0.0,
-                      tau_max: int = 10, policy: str = "lru",
+                      tau_max: int = 10, policy="lru",
                       group_slots: Optional[jax.Array] = None,
                       staleness_decay: float = 1.0,
+                      policy_params: Optional[dict] = None,
                       gather_mode: str = "select",
                       chunk: int = 1,
                       donate: Optional[bool] = None) -> FleetEngine:
@@ -251,7 +284,7 @@ def make_fleet_engine(*, algorithm: str, mob_model, mob_cfg,
         algorithm, loss_fn=loss_fn, local_steps=local_steps,
         batch_size=batch_size, rho=rho, tau_max=tau_max, policy=policy,
         group_slots=group_slots, staleness_decay=staleness_decay,
-        gather_mode=gather_mode)
+        policy_params=policy_params, gather_mode=gather_mode)
 
     def epoch_step(state, mstate, key, lr, data, counts):
         if partner_sample == "lowest-id":

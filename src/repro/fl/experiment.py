@@ -23,9 +23,11 @@ from repro.core import rounds as rounds_lib
 from repro.data.synthetic import make_image_dataset
 from repro.fl import partition as part_lib
 from repro.mobility import registry as mob_registry
+from repro.mobility import stats as mob_stats
 from repro.mobility.base import make_bands, partners_from_contacts
 from repro.models import cnn as cnn_lib
 from repro.optim.schedules import ReduceLROnPlateau
+from repro.policies import registry as policy_registry
 
 
 @dataclasses.dataclass
@@ -67,9 +69,45 @@ def _area_labels(num_groups: int, overlap: int, num_classes: int = 10):
     return out
 
 
+def resolve_policy_setup(cfg: ExperimentConfig):
+    """Resolve + validate the cache policy once at config resolution.
+
+    Returns ``(policy, policy_params)``. Raises ValueError naming the
+    offending config fields for inconsistent setups (instead of failing
+    mid-trace inside ``gossip.exchange``), e.g. a group policy without a
+    grouped distribution or with fewer cache slots than groups.
+    """
+    pol = policy_registry.resolve(cfg.dfl.policy)
+    params = dict(cfg.dfl.policy_params)
+    unknown = sorted(set(params) - set(pol.knobs) - {"gamma"})
+    if unknown:
+        raise ValueError(
+            f"DFLConfig.policy_params has unknown knob(s) {unknown} for "
+            f"policy {pol.name!r}; accepted: "
+            f"{sorted(set(pol.knobs) | {'gamma'})}")
+    if cfg.algorithm == "cached" and pol.needs_group_slots:
+        if cfg.distribution != "grouped":
+            raise ValueError(
+                f"DFLConfig.policy={pol.name!r} needs per-group cache "
+                f"slots, which require ExperimentConfig.distribution="
+                f"'grouped' (got {cfg.distribution!r})")
+        if cfg.num_groups <= 0:
+            raise ValueError(
+                f"DFLConfig.policy={pol.name!r} requires "
+                f"ExperimentConfig.num_groups > 0 "
+                f"(got {cfg.num_groups})")
+        if cfg.dfl.cache_size < cfg.num_groups:
+            raise ValueError(
+                f"DFLConfig.cache_size={cfg.dfl.cache_size} < "
+                f"ExperimentConfig.num_groups={cfg.num_groups}: the "
+                f"{pol.name!r} policy needs at least one slot per group")
+    return pol, params
+
+
 def build_fleet(cfg: ExperimentConfig):
     """Returns (model_cfg, state, data, counts, test_batch, mobility_state,
     group_slots, mob_model, mob_cfg)."""
+    policy, policy_params = resolve_policy_setup(cfg)  # fail fast if bad
     model_cfg: CNNConfig = PAPER_CONFIGS[cfg.model]
     if cfg.image_hw:
         model_cfg = dataclasses.replace(model_cfg, image_hw=cfg.image_hw)
@@ -119,6 +157,21 @@ def build_fleet(cfg: ExperimentConfig):
                                   counts.astype(np.float32), group=group)
     mstate = mob_model.init(jax.random.PRNGKey(cfg.seed + 1), N, mob_cfg,
                             band=band)
+    wants_encounters = (policy.needs_encounters
+                        or policy_params.get("w_encounter", 0.0) != 0.0)
+    if cfg.algorithm == "cached" and wants_encounters:
+        # warm-start the per-pair encounter counts from the mobility-stats
+        # subsystem: one epoch's contact roll-out on a throwaway copy of
+        # the mobility state, so the policy has a rate prior before any
+        # exchange happens
+        n_steps = min(200, max(1, int(cfg.dfl.epoch_seconds
+                                      / mob_cfg.step_seconds)))
+        _, seq = mob_stats.collect_contacts(
+            mob_model, mstate, jax.random.PRNGKey(cfg.seed + 3), mob_cfg,
+            n_steps)
+        est = mob_stats.encounter_stats(seq, mob_cfg.step_seconds)
+        state = dataclasses.replace(
+            state, encounters=est["encounter_counts"].astype(jnp.float32))
     return (model_cfg, state, data, jnp.asarray(counts), test_batch, mstate,
             group_slots, mob_model, mob_cfg)
 
@@ -139,7 +192,7 @@ def make_epoch_fn(cfg: ExperimentConfig, *, loss_fn: Callable,
         batch_size=cfg.dfl.batch_size, rho=cfg.dfl.rho,
         tau_max=cfg.dfl.tau_max, policy=cfg.dfl.policy,
         group_slots=group_slots, staleness_decay=cfg.dfl.staleness_decay,
-        gather_mode=gather_mode)
+        policy_params=dict(cfg.dfl.policy_params), gather_mode=gather_mode)
 
     def fn(state, partners, data, counts, key, lr):
         counter["traces"] += 1
@@ -159,7 +212,7 @@ def make_engine(cfg: ExperimentConfig, *, loss_fn: Callable, mob_model,
         local_steps=cfg.dfl.local_steps, batch_size=cfg.dfl.batch_size,
         rho=cfg.dfl.rho, tau_max=cfg.dfl.tau_max, policy=cfg.dfl.policy,
         group_slots=group_slots, staleness_decay=cfg.dfl.staleness_decay,
-        gather_mode=gather_mode,
+        policy_params=dict(cfg.dfl.policy_params), gather_mode=gather_mode,
         chunk=cfg.eval_every if chunk is None else chunk, donate=donate)
 
 

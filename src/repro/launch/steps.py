@@ -68,45 +68,56 @@ def local_sgd_step(params, batch, cfg: ModelConfig, *, lr: float,
 def make_train_step(cfg: ModelConfig, *, lr: float = 0.1,
                     scan_layers: bool = True, remat: bool = True,
                     multi_pod: bool = False, tau_max: int = 10,
+                    policy: str = "lru",
                     own_samples: float = 1.0, microbatches: int = 1,
                     kv_chunk: int = 512):
     """Build the Cached-DFL round step lowered for the train shape.
 
     Single-pod signature:  (params, cache, batch, t) -> (params, cache, loss)
     Multi-pod: identical but every input has a leading agent axis [A] and
-    the step performs the cross-pod model exchange.
+    the step performs the cross-pod model exchange under the configured
+    cache ``policy`` (same registry as the fleet path, including the
+    policy's aggregation staleness decay).
     """
+    from repro.policies import base as policy_base
+    from repro.policies import registry as policy_registry
+    pol = policy_registry.resolve(policy)
+    decay = policy_base.effective_staleness_decay(pol)
 
-    def single(params, cache: cache_lib.ModelCache, batch):
+    def single(params, cache: cache_lib.ModelCache, batch, t):
         tilde, loss = local_sgd_step(params, batch, cfg, lr=lr,
                                      scan_layers=scan_layers, remat=remat,
                                      microbatches=microbatches,
                                      kv_chunk=kv_chunk)
-        new_params = aggregate_models(tilde, own_samples, cache)
+        new_params = aggregate_models(tilde, own_samples, cache, t=t,
+                                      staleness_decay=decay)
         return tilde, new_params, loss
 
     if not multi_pod:
         def step(params, cache, batch, t):
-            del t
-            _, new_params, loss = single(params, cache, batch)
+            _, new_params, loss = single(params, cache, batch, t)
             return new_params, cache, loss
         return step
 
     def step(params, cache, batch, t):
         A = jax.tree_util.tree_leaves(params)[0].shape[0]
-        tilde, _, loss = jax.vmap(single)(params, cache, batch)
+        tilde, _, loss = jax.vmap(single, in_axes=(0, 0, 0, None))(
+            params, cache, batch, t)
         # DTN model hand-off between pods: neighbor exchange over "pod"
         partner = jax.tree_util.tree_map(
             lambda x: jnp.roll(x, 1, axis=0), tilde)
         partner_ids = jnp.roll(jnp.arange(A, dtype=jnp.int32), 1)
-        insert = functools.partial(cache_lib.insert, tau_max=tau_max)
+        insert = functools.partial(cache_lib.insert, tau_max=tau_max,
+                                   policy=pol)
         cache = jax.vmap(insert)(
             cache, partner,
             jnp.full((A,), t, jnp.int32), partner_ids,
             jnp.full((A,), own_samples, jnp.float32),
             jnp.zeros((A,), jnp.int32))
         new_params = jax.vmap(
-            lambda p, c: aggregate_models(p, own_samples, c))(tilde, cache)
+            lambda p, c: aggregate_models(p, own_samples, c, t=t,
+                                          staleness_decay=decay))(
+            tilde, cache)
         return new_params, cache, jnp.mean(loss)
 
     return step

@@ -35,7 +35,8 @@ def run_fleet(args) -> dict:
         dfl=DFLConfig(num_agents=args.agents, cache_size=args.cache_size,
                       tau_max=args.tau_max, local_steps=args.local_steps,
                       lr=args.lr, batch_size=args.batch_size,
-                      epoch_seconds=args.epoch_seconds, policy=args.policy),
+                      epoch_seconds=args.epoch_seconds, policy=args.policy,
+                      policy_params=tuple(args.policy_param)),
         mobility=MobilityConfig(speed=args.speed, grid_w=args.grid_w,
                                 grid_h=args.grid_h),
         epochs=args.epochs,
@@ -70,7 +71,7 @@ def run_pod(args) -> dict:
         cfg, models.init_params(cfg, key), args.cache_size, agents=agents)
     step = jax.jit(steps_lib.make_train_step(
         cfg, lr=args.lr, multi_pod=True, tau_max=args.tau_max,
-        scan_layers=True))
+        policy=args.policy, scan_layers=True))
 
     def make_batch(k):
         idx = jax.random.randint(k, (agents, args.batch_size), 0,
@@ -110,8 +111,25 @@ def main() -> None:
                     choices=["iid", "noniid", "dirichlet", "grouped"])
     ap.add_argument("--algorithm", default="cached",
                     choices=["cached", "dfl", "cfl"])
+    from repro.policies import registry as policy_registry
+
+    def policy_param(arg: str):
+        name, sep, value = arg.partition("=")
+        if not sep or not name:
+            raise argparse.ArgumentTypeError(
+                f"expected NAME=VALUE, got {arg!r}")
+        try:
+            return name, float(value)
+        except ValueError:
+            raise argparse.ArgumentTypeError(
+                f"value for {name!r} must be a number, got {value!r}")
+
     ap.add_argument("--policy", default="lru",
-                    choices=["lru", "group", "fifo", "random"])
+                    choices=policy_registry.available())
+    ap.add_argument("--policy-param", action="append", default=[],
+                    type=policy_param, metavar="NAME=VALUE",
+                    help="score knob for the chosen policy, repeatable "
+                         "(e.g. --policy-param mobility_bias=8)")
     ap.add_argument("--agents", type=int, default=20)
     ap.add_argument("--cache-size", type=int, default=10)
     ap.add_argument("--tau-max", type=int, default=10)

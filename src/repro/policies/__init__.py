@@ -1,0 +1,13 @@
+"""Pluggable cache-retention policies (paper §2.2–§3, Algorithms 2 & 3).
+
+Registry-driven, mirroring ``repro.mobility``: select by name via
+``DFLConfig.policy``; add a policy by registering a ~10-line priority
+function (see ``repro.policies.base``).
+"""
+from repro.policies.base import (  # noqa: F401
+    CachePolicy, PolicyContext, dedup_mask, effective_staleness_decay,
+    retain,
+)
+from repro.policies.registry import (  # noqa: F401
+    available, get_policy, register, resolve,
+)

@@ -1,0 +1,161 @@
+"""Cache-policy subsystem protocol + the shared dedup/retain engine.
+
+A cache-retention policy (paper §2.2–§3, Algorithms 2 & 3) decides which
+candidate models survive into an agent's fixed-capacity cache. Every
+policy is a :class:`CachePolicy` whose core is one jit-able **priority
+function** over a :class:`repro.core.cache.CacheMeta` struct:
+
+    priority(meta, ctx, valid) -> (key, keep)
+
+``key`` is a per-candidate sort score (higher = retained first; int32 or
+float32), ``keep`` an extra boolean mask (all-True for most policies).
+The shared :func:`retain` engine does everything else — origin dedup
+keeping the freshest copy, masking, stable descending sort, truncation to
+capacity, and blanking of empty slots — so a new policy is ~10 lines and
+is automatically covered by the conformance suite
+(``tests/test_cache_policies.py``).
+
+Policies register themselves by name (``repro.policies.registry``); the
+choice is static per trace — the fleet engine compiles one executable per
+(algorithm, policy, shape) — while policy randomness stays a traced PRNG
+key in :class:`PolicyContext`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING, Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+if TYPE_CHECKING:  # avoid a repro.core import cycle (core.gossip imports us)
+    from repro.core.cache import CacheMeta
+
+INT_MIN = jnp.int32(-2 ** 30)
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyContext:
+    """Per-agent, per-epoch context handed to a policy's priority function.
+
+    The engine vmaps over agents, so array fields are the *current agent's*
+    view: ``rng`` a per-agent PRNG key, ``encounters`` the agent's
+    cumulative per-origin encounter counts ``[N]`` (realized cache-exchange
+    contacts, optionally warm-started from
+    ``mobility.stats.encounter_stats``). ``params`` is the static
+    name → float knob mapping from ``DFLConfig.policy_params``.
+    """
+    t: Any                                     # [] int32 current epoch
+    capacity: int
+    rng: Optional[jax.Array] = None            # per-agent PRNG key
+    group_slots: Optional[jax.Array] = None    # [num_groups] int32
+    encounters: Optional[jax.Array] = None     # [N] float32 counts
+    params: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def param(self, name: str, default: float) -> float:
+        return float(self.params.get(name, default))
+
+    def encounter_rate(self, origin: jax.Array) -> jax.Array:
+        """Per-candidate encounter rate of this agent with each origin
+        (encounters per elapsed epoch; 0 for empty candidates or when no
+        encounter state is threaded)."""
+        if self.encounters is None:
+            return jnp.zeros(origin.shape, jnp.float32)
+        n = self.encounters.shape[0]
+        rate = self.encounters / jnp.maximum(
+            jnp.asarray(self.t, jnp.float32), 1.0)
+        return jnp.where(origin >= 0, rate[jnp.clip(origin, 0, n - 1)], 0.0)
+
+
+PriorityFn = Callable[["CacheMeta", PolicyContext, jax.Array],
+                      Tuple[jax.Array, jax.Array]]
+
+
+@dataclasses.dataclass(frozen=True)
+class CachePolicy:
+    """A named cache-retention policy (see module docstring).
+
+    ``deterministic`` policies must be candidate-permutation invariant (the
+    retained *origin set* does not depend on candidate order) — the
+    conformance suite enforces this. ``staleness_decay`` is the
+    aggregation-weight decay γ the policy imposes by default (γ=1 = paper
+    weighting; see ``repro.core.aggregate``); resolved via
+    :func:`effective_staleness_decay`.
+    """
+    name: str
+    priority: PriorityFn
+    deterministic: bool = True
+    needs_rng: bool = False
+    needs_group_slots: bool = False
+    needs_encounters: bool = False
+    paper: bool = True              # appears in the source paper
+    staleness_decay: float = 1.0    # default aggregation decay γ
+    knobs: Tuple[str, ...] = ()     # accepted policy_params names ("gamma"
+                                    # is accepted by every policy)
+
+
+def dedup_mask(origin, ts, pref=None):
+    """valid[i] = entry i is the best copy of its origin.
+
+    Best = max ts; ties broken by higher ``pref`` then lower index.
+    origin < 0 entries are invalid.
+    """
+    M = origin.shape[0]
+    if pref is None:
+        pref = jnp.zeros_like(ts)
+    same = origin[None, :] == origin[:, None]          # [i, j]
+    newer = ts[None, :] > ts[:, None]
+    tie = ts[None, :] == ts[:, None]
+    pref_j = (pref[None, :] > pref[:, None]) | (
+        (pref[None, :] == pref[:, None])
+        & (jnp.arange(M)[None, :] < jnp.arange(M)[:, None]))
+    beaten = same & (newer | (tie & pref_j))
+    return (origin >= 0) & ~jnp.any(beaten, axis=1)
+
+
+def validate_context(policy: CachePolicy, ctx: PolicyContext) -> None:
+    if policy.needs_rng and ctx.rng is None:
+        raise ValueError(f"cache policy {policy.name!r} requires a PRNG key")
+    if policy.needs_group_slots and ctx.group_slots is None:
+        raise ValueError(
+            f"cache policy {policy.name!r} requires group_slots")
+    if policy.needs_encounters and ctx.encounters is None:
+        raise ValueError(
+            f"cache policy {policy.name!r} requires encounter counts "
+            "(thread FleetState.encounters through the exchange)")
+
+
+def retain(meta: "CacheMeta", policy: CachePolicy, ctx: PolicyContext,
+           pref=None) -> Tuple[jax.Array, "CacheMeta"]:
+    """Run one agent's retention: dedup by origin, score, keep top-capacity.
+
+    Returns ``(sel, meta_sel)`` where ``sel`` [capacity] indexes the
+    candidate arrays (stable ordering: score ties break by candidate index,
+    earlier = own cache) and ``meta_sel`` is the retained metadata with
+    empty slots fully blanked (origin == -1 across every field).
+    """
+    validate_context(policy, ctx)
+    valid = dedup_mask(meta.origin, meta.ts, pref=pref)
+    key, keep = policy.priority(meta, ctx, valid)
+    valid = valid & keep
+    floor = (INT_MIN if jnp.issubdtype(key.dtype, jnp.integer)
+             else -jnp.inf)
+    key = jnp.where(valid, key, floor)
+    order = jnp.argsort(-key, stable=True)
+    sel = order[:ctx.capacity]
+    return sel, meta.take(sel, valid[sel])
+
+
+def effective_staleness_decay(policy: CachePolicy, configured: float = 1.0,
+                              params: Optional[Dict[str, float]] = None
+                              ) -> float:
+    """Resolve the aggregation-weight decay γ for a run.
+
+    An explicit ``DFLConfig.staleness_decay`` ≠ 1 wins; otherwise the
+    policy-params key ``"gamma"``; otherwise the policy's own default.
+    """
+    if configured != 1.0:
+        return float(configured)
+    if params and "gamma" in params:
+        return float(params["gamma"])
+    return float(policy.staleness_decay)

@@ -1,0 +1,107 @@
+"""Built-in cache policies.
+
+``lru`` and ``group`` are the paper's Algorithms 2 & 3; ``fifo`` and
+``random`` are the policy-study baselines. The rest are beyond-paper
+extensions after distribution/mobility-aware caching (arXiv:2505.18866,
+arXiv:2512.24694):
+
+``mobility_aware``     LRU biased by per-pair encounter rates — models from
+                       frequently-met origins are evicted first (they are
+                       cheap to re-obtain at the next contact), models from
+                       rarely-met origins are protected. Knob:
+                       ``mobility_bias`` (epochs of freshness one
+                       encounter/epoch is worth; default 8).
+``staleness_weighted`` LRU retention + aggregation weights decayed by the
+                       entry's age, α_j ∝ n_j·γ^(t-τ). Knob: ``gamma``
+                       (default 0.9); see ``aggregate.aggregation_weights``.
+``priority``           generic configurable score mix over the metadata
+                       struct. Knobs: ``w_ts`` (default 1), ``w_arrival``,
+                       ``w_samples``, ``w_encounter`` (all default 0).
+
+Every priority function is ~10 lines over one ``CacheMeta`` struct; the
+shared engine in ``repro.policies.base`` does dedup/sort/truncate.
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING
+
+import jax
+import jax.numpy as jnp
+
+from repro.policies.base import CachePolicy, PolicyContext
+from repro.policies.registry import register
+
+if TYPE_CHECKING:  # avoid a repro.core import cycle (core.gossip imports us)
+    from repro.core.cache import CacheMeta
+
+
+def _lru(meta: CacheMeta, ctx: PolicyContext, valid):
+    """Alg. 2: retain the freshest-trained copy of each origin."""
+    return meta.ts, valid
+
+
+def _fifo(meta: CacheMeta, ctx: PolicyContext, valid):
+    """Retain the most recently *received* entries (vs freshest-trained)."""
+    return meta.arrival, valid
+
+
+def _random(meta: CacheMeta, ctx: PolicyContext, valid):
+    """Uniform-random retention after origin-dedup."""
+    return jax.random.randint(ctx.rng, meta.origin.shape, 0, 2 ** 30), valid
+
+
+def _group(meta: CacheMeta, ctx: PolicyContext, valid):
+    """Alg. 3: per-group LRU with r_g slots (``ctx.group_slots``)."""
+    group_slots = ctx.group_slots
+    num_groups = group_slots.shape[0]
+    M = meta.origin.shape[0]
+    # rank of each entry within its group by ts desc (valid entries only)
+    same_g = meta.group[None, :] == meta.group[:, None]
+    better = same_g & valid[None, :] & (
+        (meta.ts[None, :] > meta.ts[:, None])
+        | ((meta.ts[None, :] == meta.ts[:, None])
+           & (jnp.arange(M)[None, :] < jnp.arange(M)[:, None])))
+    rank = jnp.sum(better, axis=1)
+    slots = jnp.where((meta.group >= 0) & (meta.group < num_groups),
+                      group_slots[jnp.clip(meta.group, 0, num_groups - 1)], 0)
+    return meta.ts, rank < slots
+
+
+def _mobility_aware(meta: CacheMeta, ctx: PolicyContext, valid):
+    """Freshness minus an encounter-rate penalty: evict what you will meet
+    again soon, protect models from rarely-encountered origins."""
+    bias = ctx.param("mobility_bias", 8.0)
+    rate = ctx.encounter_rate(meta.origin)
+    return meta.ts.astype(jnp.float32) - bias * rate, valid
+
+
+def _staleness_weighted(meta: CacheMeta, ctx: PolicyContext, valid):
+    """LRU retention; the policy's effect is the γ^age aggregation decay
+    (``CachePolicy.staleness_decay``, resolved by the epoch step)."""
+    return meta.ts, valid
+
+
+def _priority(meta: CacheMeta, ctx: PolicyContext, valid):
+    """Configurable linear score over the metadata struct."""
+    score = (ctx.param("w_ts", 1.0) * meta.ts.astype(jnp.float32)
+             + ctx.param("w_arrival", 0.0) * meta.arrival.astype(jnp.float32)
+             + ctx.param("w_samples", 0.0) * meta.samples
+             - ctx.param("w_encounter", 0.0)
+             * ctx.encounter_rate(meta.origin))
+    return score, valid
+
+
+LRU = register(CachePolicy("lru", _lru))
+FIFO = register(CachePolicy("fifo", _fifo, paper=False))
+RANDOM = register(CachePolicy("random", _random, deterministic=False,
+                              needs_rng=True, paper=False))
+GROUP = register(CachePolicy("group", _group, needs_group_slots=True))
+MOBILITY_AWARE = register(CachePolicy(
+    "mobility_aware", _mobility_aware, needs_encounters=True, paper=False,
+    knobs=("mobility_bias",)))
+STALENESS_WEIGHTED = register(CachePolicy(
+    "staleness_weighted", _staleness_weighted, paper=False,
+    staleness_decay=0.9))
+PRIORITY = register(CachePolicy(
+    "priority", _priority, paper=False,
+    knobs=("w_ts", "w_arrival", "w_samples", "w_encounter")))

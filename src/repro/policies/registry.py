@@ -1,0 +1,45 @@
+"""Registry of cache policies, keyed by name.
+
+``get_policy("lru")`` etc. — the gossip exchange, the fleet engine,
+benchmarks and tools select the retention policy by ``DFLConfig.policy``
+instead of hardcoding a dispatch. Third-party policies register
+themselves by calling :func:`register` at import time (mirrors
+``repro.mobility.registry``).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Union
+
+from repro.policies.base import CachePolicy
+
+_REGISTRY: Dict[str, CachePolicy] = {}
+
+
+def register(policy: CachePolicy) -> CachePolicy:
+    _REGISTRY[policy.name] = policy
+    return policy
+
+
+def _ensure_builtins() -> None:
+    # import for registration side effects; cheap after the first call
+    from repro.policies import builtin  # noqa: F401
+
+
+def get_policy(name: str) -> CachePolicy:
+    _ensure_builtins()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown cache policy {name!r}; "
+                       f"registered: {available()}")
+    return _REGISTRY[name]
+
+
+def resolve(policy: Union[str, CachePolicy]) -> CachePolicy:
+    """Accept either a policy name or an already-built CachePolicy."""
+    if isinstance(policy, CachePolicy):
+        return policy
+    return get_policy(policy)
+
+
+def available() -> List[str]:
+    _ensure_builtins()
+    return sorted(_REGISTRY)

@@ -1,0 +1,141 @@
+"""Verbatim pre-refactor cache-policy code (PR 2 state of ``core/cache.py``
++ ``core/gossip.py``), kept as the bit-exactness oracle for the ported
+lru/fifo/random/group policies in the registry-driven subsystem.
+
+Not a test module — imported by ``test_cache_policies.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gossip
+from repro.core.cache import NEG
+
+# --- pre-refactor core/cache.py selection functions (verbatim) -------------
+
+
+def _dedup_mask(origin, ts, pref):
+    M = origin.shape[0]
+    same = origin[None, :] == origin[:, None]          # [i, j]
+    newer = ts[None, :] > ts[:, None]
+    tie = ts[None, :] == ts[:, None]
+    pref_j = (pref[None, :] > pref[:, None]) | (
+        (pref[None, :] == pref[:, None])
+        & (jnp.arange(M)[None, :] < jnp.arange(M)[:, None]))
+    beaten = same & (newer | (tie & pref_j))
+    return (origin >= 0) & ~jnp.any(beaten, axis=1)
+
+
+def select_lru(origin, ts, samples, group, arrival, capacity, rank_key=None):
+    pref = jnp.zeros_like(ts) if rank_key is None else rank_key
+    valid = _dedup_mask(origin, ts, pref)
+    key = jnp.where(valid, ts, jnp.int32(-2**30))
+    order = jnp.argsort(-key, stable=True)
+    sel = order[:capacity]
+    sel_valid = valid[sel]
+    return sel, {
+        "ts": jnp.where(sel_valid, ts[sel], NEG),
+        "origin": jnp.where(sel_valid, origin[sel], NEG),
+        "samples": jnp.where(sel_valid, samples[sel], 0.0),
+        "group": jnp.where(sel_valid, group[sel], NEG),
+        "arrival": jnp.where(sel_valid, arrival[sel], NEG),
+    }
+
+
+def select_group(origin, ts, samples, group, arrival, capacity, group_slots):
+    num_groups = group_slots.shape[0]
+    valid = _dedup_mask(origin, ts, jnp.zeros_like(ts))
+    M = origin.shape[0]
+    same_g = (group[None, :] == group[:, None])
+    better = same_g & valid[None, :] & (
+        (ts[None, :] > ts[:, None])
+        | ((ts[None, :] == ts[:, None])
+           & (jnp.arange(M)[None, :] < jnp.arange(M)[:, None])))
+    rank = jnp.sum(better, axis=1)
+    slots = jnp.where((group >= 0) & (group < num_groups),
+                      group_slots[jnp.clip(group, 0, num_groups - 1)], 0)
+    keep = valid & (rank < slots)
+    key = jnp.where(keep, ts, jnp.int32(-2**30))
+    order = jnp.argsort(-key, stable=True)
+    sel = order[:capacity]
+    sel_valid = keep[sel]
+    return sel, {
+        "ts": jnp.where(sel_valid, ts[sel], NEG),
+        "origin": jnp.where(sel_valid, origin[sel], NEG),
+        "samples": jnp.where(sel_valid, samples[sel], 0.0),
+        "group": jnp.where(sel_valid, group[sel], NEG),
+        "arrival": jnp.where(sel_valid, arrival[sel], NEG),
+    }
+
+
+def _retain(retain_key, valid, origin, ts, samples, group, arrival,
+            capacity):
+    key = jnp.where(valid, retain_key, jnp.int32(-2**30))
+    order = jnp.argsort(-key, stable=True)
+    sel = order[:capacity]
+    sel_valid = valid[sel]
+    return sel, {
+        "ts": jnp.where(sel_valid, ts[sel], NEG),
+        "origin": jnp.where(sel_valid, origin[sel], NEG),
+        "samples": jnp.where(sel_valid, samples[sel], 0.0),
+        "group": jnp.where(sel_valid, group[sel], NEG),
+        "arrival": jnp.where(sel_valid, arrival[sel], NEG),
+    }
+
+
+def select_fifo(origin, ts, samples, group, arrival, capacity):
+    valid = _dedup_mask(origin, ts, jnp.zeros_like(ts))
+    return _retain(arrival, valid, origin, ts, samples, group, arrival,
+                   capacity)
+
+
+def select_random(origin, ts, samples, group, arrival, capacity, key):
+    valid = _dedup_mask(origin, ts, jnp.zeros_like(ts))
+    rnd = jax.random.randint(key, origin.shape, 0, 2**30)
+    return _retain(rnd, valid, origin, ts, samples, group, arrival, capacity)
+
+
+# --- pre-refactor gossip.exchange policy dispatch (verbatim) ---------------
+
+
+def legacy_exchange(params, cache, partners, t, own_samples, own_group, *,
+                    tau_max, policy="lru", group_slots=None, rng=None,
+                    gather_mode="select"):
+    N, C = cache.ts.shape
+    own_ts = jnp.full((N,), t, jnp.int32)
+    ts, origin, samples, group, arrival, src_a, src_s = gossip._candidates(
+        cache, t, partners, own_ts, own_samples, own_group, tau_max)
+
+    if policy == "lru":
+        sel_fn = functools.partial(select_lru, capacity=C)
+        sel, meta = jax.vmap(sel_fn)(origin, ts, samples, group, arrival)
+    elif policy == "group":
+        if group_slots is None:
+            raise ValueError("group policy requires group_slots")
+        sel_fn = lambda o, t_, s, g, a, gs: select_group(
+            o, t_, s, g, a, capacity=C, group_slots=gs)
+        sel, meta = jax.vmap(sel_fn, in_axes=(0, 0, 0, 0, 0, None))(
+            origin, ts, samples, group, arrival, group_slots)
+    elif policy == "fifo":
+        sel_fn = functools.partial(select_fifo, capacity=C)
+        sel, meta = jax.vmap(sel_fn)(origin, ts, samples, group, arrival)
+    elif policy == "random":
+        if rng is None:
+            raise ValueError("random policy requires rng")
+        keys = jax.random.split(rng, N)
+        sel_fn = lambda o, t_, s, g, a, k: select_random(
+            o, t_, s, g, a, C, k)
+        sel, meta = jax.vmap(sel_fn)(origin, ts, samples, group, arrival,
+                                     keys)
+    else:
+        raise ValueError(f"unknown cache policy {policy!r}")
+
+    gather_a = jnp.take_along_axis(src_a, sel, axis=1)
+    gather_s = jnp.take_along_axis(src_s, sel, axis=1)
+    models = gossip.gather_winners(cache.models, params, gather_a, gather_s,
+                                   mode=gather_mode)
+    return dataclasses.replace(cache, models=models, **meta)

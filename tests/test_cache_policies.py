@@ -1,0 +1,452 @@
+"""Registry-driven cache-policy subsystem.
+
+Three layers of coverage:
+  * bit-exactness — the ported lru/fifo/random/group policies reproduce the
+    pre-refactor selection code (kept verbatim in
+    ``legacy_policy_reference.py``) bit-for-bit through the fleet exchange;
+  * conformance — invariants every registered policy must satisfy
+    (capacity, origin dedup keeps the freshest copy, blanked empty slots,
+    candidate-permutation invariance for deterministic policies);
+  * the new policies' semantics (mobility_aware, staleness_weighted,
+    priority) and the policy-aware single-insert path.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cache as cache_lib
+from repro.core import gossip
+from repro.core import rounds as rounds_lib
+from repro.core.cache import CacheMeta
+from repro.policies import base as policy_base
+from repro.policies import registry as policy_registry
+
+from legacy_policy_reference import legacy_exchange
+
+PORTED = ("lru", "fifo", "random", "group")
+
+
+def fleet_params(N):
+    return {"w": jnp.arange(N, dtype=jnp.float32)[:, None]
+            * jnp.ones((N, 4))}
+
+
+def empty_fleet_cache(N, cap):
+    c = cache_lib.init_cache({"w": jnp.zeros((4,))}, cap)
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (N,) + x.shape).copy(), c)
+
+
+def random_partners(key, N, max_partners=2):
+    from repro.mobility.base import partners_from_contacts
+    met = jax.random.bernoulli(key, 0.4, (N, N))
+    met = met & met.T & ~jnp.eye(N, dtype=bool)
+    return partners_from_contacts(met, max_partners)
+
+
+def exchange_kwargs(pol, N, cap):
+    kw = {}
+    if pol.needs_group_slots:
+        kw["group_slots"] = jnp.asarray([cap - cap // 2, cap // 2],
+                                        jnp.int32)
+    if pol.needs_rng:
+        kw["rng"] = jax.random.PRNGKey(11)
+    if pol.needs_encounters:
+        kw["encounters"] = jnp.ones((N, N), jnp.float32)
+    return kw
+
+
+# ---------------------------------------------------------------------------
+# bit-exactness vs the pre-refactor dispatch
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", PORTED)
+def test_ported_policy_bitexact_vs_prerefactor(policy):
+    """Metadata AND model trajectories must match the pre-refactor code
+    bit-for-bit over multi-epoch random contact sequences."""
+    N, cap = 6, 3
+    params = fleet_params(N)
+    samples = jnp.ones((N,)) * 2.0
+    group = jnp.asarray([0, 0, 0, 1, 1, 1], jnp.int32)
+    group_slots = jnp.asarray([2, 1], jnp.int32)
+    new_cache = empty_fleet_cache(N, cap)
+    old_cache = empty_fleet_cache(N, cap)
+    key = jax.random.PRNGKey(42)
+    for t in range(6):
+        key, kc, kr = jax.random.split(key, 3)
+        partners = random_partners(kc, N)
+        kw = dict(tau_max=4, policy=policy, group_slots=group_slots,
+                  rng=kr)
+        new_cache = gossip.exchange(params, new_cache, partners, t, samples,
+                                    group, **kw)
+        old_cache = legacy_exchange(params, old_cache, partners, t, samples,
+                                    group, **kw)
+        for a, b in zip(jax.tree_util.tree_leaves(new_cache),
+                        jax.tree_util.tree_leaves(old_cache)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_select_shims_match_prerefactor():
+    """The legacy ``cache.select_*`` API shims stay bit-exact too."""
+    import legacy_policy_reference as legacy
+    rng = np.random.default_rng(0)
+    M, cap = 9, 4
+    origin = jnp.asarray(rng.integers(-1, 6, M), jnp.int32)
+    ts = jnp.asarray(rng.integers(0, 10, M), jnp.int32)
+    samples = jnp.asarray(rng.random(M), jnp.float32)
+    group = jnp.asarray(rng.integers(0, 2, M), jnp.int32)
+    arrival = jnp.asarray(rng.integers(0, 10, M), jnp.int32)
+    slots = jnp.asarray([2, 2], jnp.int32)
+    key = jax.random.PRNGKey(5)
+    pairs = [
+        (cache_lib.select_lru(origin, ts, samples, group, arrival, cap),
+         legacy.select_lru(origin, ts, samples, group, arrival, cap)),
+        (cache_lib.select_fifo(origin, ts, samples, group, arrival, cap),
+         legacy.select_fifo(origin, ts, samples, group, arrival, cap)),
+        (cache_lib.select_random(origin, ts, samples, group, arrival, cap,
+                                 key),
+         legacy.select_random(origin, ts, samples, group, arrival, cap,
+                              key)),
+        (cache_lib.select_group(origin, ts, samples, group, arrival, cap,
+                                slots),
+         legacy.select_group(origin, ts, samples, group, arrival, cap,
+                             slots)),
+    ]
+    for (sel_new, meta_new), (sel_old, meta_old) in pairs:
+        np.testing.assert_array_equal(np.asarray(sel_new),
+                                      np.asarray(sel_old))
+        for k in meta_old:
+            np.testing.assert_array_equal(np.asarray(meta_new[k]),
+                                          np.asarray(meta_old[k]))
+
+
+# ---------------------------------------------------------------------------
+# conformance suite: invariants shared by every registered policy
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", policy_registry.available())
+def test_policy_conformance_through_exchange(name):
+    """Capacity respected, ≤1 entry per origin, empty slots blanked across
+    ALL metadata fields — after arbitrary contact sequences."""
+    pol = policy_registry.get_policy(name)
+    N, cap = 6, 3
+    params = fleet_params(N)
+    samples = jnp.ones((N,))
+    group = jnp.asarray([0, 0, 0, 1, 1, 1], jnp.int32)
+    cache = empty_fleet_cache(N, cap)
+    kw = exchange_kwargs(pol, N, cap)
+    key = jax.random.PRNGKey(3)
+    for t in range(4):
+        key, kc = jax.random.split(key)
+        partners = random_partners(kc, N)
+        cache = gossip.exchange(params, cache, partners, t, samples, group,
+                                tau_max=3, policy=pol, **kw)
+        valid = np.asarray(cache.valid)
+        origin = np.asarray(cache.origin)
+        assert valid.sum(axis=1).max() <= cap
+        for i in range(N):
+            kept = origin[i][valid[i]]
+            assert len(set(kept.tolist())) == len(kept)      # origin dedup
+            assert ((t - np.asarray(cache.ts)[i][valid[i]]) < 3).all()
+        # empty slots: origin == -1 across every metadata field
+        empty = ~valid
+        assert (np.asarray(cache.ts)[empty] == -1).all()
+        assert (np.asarray(cache.origin)[empty] == -1).all()
+        assert (np.asarray(cache.samples)[empty] == 0.0).all()
+        assert (np.asarray(cache.group)[empty] == -1).all()
+        assert (np.asarray(cache.arrival)[empty] == -1).all()
+
+
+def _random_meta(rng, M):
+    return CacheMeta(
+        ts=jnp.asarray(rng.integers(0, 8, M), jnp.int32),
+        origin=jnp.asarray(rng.integers(-1, 5, M), jnp.int32),
+        samples=jnp.asarray(rng.random(M), jnp.float32),
+        group=jnp.asarray(rng.integers(0, 2, M), jnp.int32),
+        arrival=jnp.asarray(rng.integers(0, 8, M), jnp.int32))
+
+
+def _ctx(pol, M, cap=3, params=None):
+    return policy_base.PolicyContext(
+        t=jnp.asarray(8, jnp.int32), capacity=cap,
+        rng=jax.random.PRNGKey(0) if pol.needs_rng else None,
+        group_slots=jnp.asarray([2, 1], jnp.int32),
+        encounters=jnp.asarray([0.13, 1.41, 2.72, 3.14, 0.57], jnp.float32),
+        params=params or {})
+
+
+@pytest.mark.parametrize("name", policy_registry.available())
+def test_policy_dedup_keeps_freshest(name):
+    """Duplicate origins: only the max-ts copy may survive retention."""
+    pol = policy_registry.get_policy(name)
+    meta = CacheMeta(
+        ts=jnp.asarray([2, 6, 4, 1], jnp.int32),
+        origin=jnp.asarray([3, 3, 3, 1], jnp.int32),
+        samples=jnp.ones((4,), jnp.float32),
+        group=jnp.zeros((4,), jnp.int32),
+        arrival=jnp.asarray([5, 0, 3, 1], jnp.int32))
+    _, out = policy_base.retain(meta, pol, _ctx(pol, 4, cap=4))
+    out_origin = np.asarray(out.origin)
+    out_ts = np.asarray(out.ts)
+    kept3 = out_ts[out_origin == 3]
+    assert len(kept3) <= 1
+    if len(kept3):
+        assert kept3[0] == 6                  # the freshest copy of origin 3
+
+
+@pytest.mark.parametrize(
+    "name", [n for n in policy_registry.available()
+             if policy_registry.get_policy(n).deterministic])
+def test_deterministic_policy_permutation_invariant(name):
+    """Deterministic policies retain the same origin set regardless of
+    candidate ordering (distinct sort keys — ties legitimately break by
+    candidate index, which is order-dependent by design)."""
+    pol = policy_registry.get_policy(name)
+    rng = np.random.default_rng(7)
+    for trial in range(5):
+        meta = _random_meta(rng, 10)
+        # tie-free: distinct ts and arrival per candidate
+        meta = dataclasses.replace(
+            meta,
+            ts=jnp.asarray(rng.permutation(10), jnp.int32),
+            arrival=jnp.asarray(rng.permutation(10), jnp.int32))
+        perm = rng.permutation(10)
+        meta_p = CacheMeta(ts=meta.ts[perm], origin=meta.origin[perm],
+                           samples=meta.samples[perm],
+                           group=meta.group[perm],
+                           arrival=meta.arrival[perm])
+        _, a = policy_base.retain(meta, pol, _ctx(pol, 10))
+        _, b = policy_base.retain(meta_p, pol, _ctx(pol, 10))
+        oa = sorted(np.asarray(a.origin)[np.asarray(a.origin) >= 0].tolist())
+        ob = sorted(np.asarray(b.origin)[np.asarray(b.origin) >= 0].tolist())
+        assert oa == ob, (trial, oa, ob)
+
+
+# ---------------------------------------------------------------------------
+# new policies: semantics
+# ---------------------------------------------------------------------------
+
+def test_mobility_aware_evicts_frequently_met_origins():
+    """Equal freshness: the origin this agent meets all the time is evicted
+    before the rarely-met one."""
+    pol = policy_registry.get_policy("mobility_aware")
+    meta = CacheMeta(ts=jnp.asarray([5, 5], jnp.int32),
+                     origin=jnp.asarray([0, 1], jnp.int32),
+                     samples=jnp.ones((2,), jnp.float32),
+                     group=jnp.zeros((2,), jnp.int32),
+                     arrival=jnp.asarray([5, 5], jnp.int32))
+    enc = jnp.asarray([9.0, 0.0], jnp.float32)   # meets origin 0 constantly
+    ctx = policy_base.PolicyContext(t=jnp.asarray(3, jnp.int32), capacity=1,
+                                    encounters=enc)
+    _, out = policy_base.retain(meta, pol, ctx)
+    assert int(out.origin[0]) == 1               # rare origin protected
+
+
+def test_mobility_aware_requires_encounters():
+    pol = policy_registry.get_policy("mobility_aware")
+    meta = _random_meta(np.random.default_rng(0), 4)
+    ctx = policy_base.PolicyContext(t=jnp.asarray(1, jnp.int32), capacity=2)
+    with pytest.raises(ValueError, match="encounter"):
+        policy_base.retain(meta, pol, ctx)
+
+
+def test_priority_policy_reduces_to_fifo():
+    """w_ts=0, w_arrival=1 must reproduce FIFO's retained set."""
+    fifo = policy_registry.get_policy("fifo")
+    prio = policy_registry.get_policy("priority")
+    rng = np.random.default_rng(1)
+    meta = _random_meta(rng, 8)
+    # distinct arrivals so the int/float sort keys induce the same order
+    meta = dataclasses.replace(
+        meta, arrival=jnp.asarray(rng.permutation(8), jnp.int32))
+    _, a = policy_base.retain(meta, fifo, _ctx(fifo, 8))
+    _, b = policy_base.retain(
+        meta, prio, _ctx(prio, 8, params={"w_ts": 0.0, "w_arrival": 1.0}))
+    np.testing.assert_array_equal(np.asarray(a.origin), np.asarray(b.origin))
+
+
+def test_staleness_weighted_decay_resolution():
+    pol = policy_registry.get_policy("staleness_weighted")
+    lru = policy_registry.get_policy("lru")
+    assert policy_base.effective_staleness_decay(pol) == pytest.approx(0.9)
+    assert policy_base.effective_staleness_decay(pol, 0.5) == pytest.approx(0.5)
+    assert policy_base.effective_staleness_decay(
+        pol, 1.0, {"gamma": 0.7}) == pytest.approx(0.7)
+    assert policy_base.effective_staleness_decay(lru) == pytest.approx(1.0)
+
+
+def test_aggregate_flat_paths_apply_staleness_decay():
+    """The flat/kernel aggregation paths honor the γ^age weight decay."""
+    from repro.core.aggregate import (aggregate_flat,
+                                      aggregate_flat_gathered,
+                                      aggregation_weights)
+    key = jax.random.PRNGKey(0)
+    C, D = 4, 64
+    cache = jax.random.normal(key, (C, D), jnp.float32)
+    params = jax.random.normal(jax.random.PRNGKey(1), (D,))
+    samples = jnp.asarray([1.0, 2.0, 3.0, 4.0])
+    valid = jnp.asarray([1.0, 1.0, 0.0, 1.0])
+    ages = jnp.asarray([0, 3, 1, 5], jnp.int32)
+    out = aggregate_flat(params, cache, 2.0, samples, valid,
+                         use_kernel=False, ages=ages, staleness_decay=0.8)
+    w_self, w_cache = aggregation_weights(2.0, samples, valid, True,
+                                          ages=ages, staleness_decay=0.8)
+    ref = w_self * params + jnp.sum(w_cache[:, None] * valid[:, None]
+                                    * cache, axis=0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+    fused = aggregate_flat_gathered(
+        params, cache, jnp.arange(C, dtype=jnp.int32), 2.0, samples, valid,
+        use_kernel=False, ages=ages, staleness_decay=0.8)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(out),
+                               rtol=1e-5, atol=1e-5)
+    # γ=1 recovers the undecayed paper weighting
+    plain = aggregate_flat(params, cache, 2.0, samples, valid,
+                           use_kernel=False)
+    assert not np.allclose(np.asarray(out), np.asarray(plain))
+
+
+# ---------------------------------------------------------------------------
+# policy-aware single-insert path (pod-scale)
+# ---------------------------------------------------------------------------
+
+def _cache_with(ts, origin, arrival, cap):
+    c = cache_lib.init_cache({"w": jnp.zeros((4,))}, cap)
+    n = len(ts)
+    return dataclasses.replace(
+        c,
+        ts=c.ts.at[:n].set(jnp.asarray(ts, jnp.int32)),
+        origin=c.origin.at[:n].set(jnp.asarray(origin, jnp.int32)),
+        samples=c.samples.at[:n].set(1.0),
+        group=c.group.at[:n].set(0),
+        arrival=c.arrival.at[:n].set(jnp.asarray(arrival, jnp.int32)))
+
+
+def test_insert_honors_configured_policy():
+    """Regression (pre-refactor ``insert`` hardcoded select_lru): with
+    policy="fifo" the single-insert path must retain by arrival, matching
+    the fleet path's fifo semantics."""
+    # origin 1: fresh model received long ago; origin 2: stale model
+    # received recently — lru and fifo must disagree
+    base = _cache_with(ts=[9, 1], origin=[1, 2], arrival=[0, 5], cap=2)
+    new_model = {"w": jnp.full((4,), 7.0)}
+    lru = cache_lib.insert(base, new_model, t=6, origin=3, samples=1.0,
+                           group=0, tau_max=100)
+    fifo = cache_lib.insert(base, new_model, t=6, origin=3, samples=1.0,
+                            group=0, tau_max=100, policy="fifo")
+    lru_kept = sorted(np.asarray(lru.origin)[np.asarray(lru.valid)].tolist())
+    fifo_kept = sorted(
+        np.asarray(fifo.origin)[np.asarray(fifo.valid)].tolist())
+    assert lru_kept == [1, 3]     # freshest-trained: ts 9 and 6
+    assert fifo_kept == [2, 3]    # most recently received: arrival 5 and 6
+    # the retained models' weights follow the metadata
+    idx3 = int(np.argwhere(np.asarray(fifo.origin) == 3)[0, 0])
+    assert float(fifo.models["w"][idx3, 0]) == 7.0
+
+
+def test_insert_random_policy_requires_rng():
+    base = _cache_with(ts=[1], origin=[1], arrival=[1], cap=2)
+    with pytest.raises(ValueError, match="PRNG"):
+        cache_lib.insert(base, {"w": jnp.zeros((4,))}, t=2, origin=2,
+                         samples=1.0, group=0, tau_max=10, policy="random")
+    out = cache_lib.insert(base, {"w": jnp.zeros((4,))}, t=2, origin=2,
+                           samples=1.0, group=0, tau_max=10,
+                           policy="random", rng=jax.random.PRNGKey(0))
+    assert int(jnp.sum(out.valid)) == 2
+
+
+# ---------------------------------------------------------------------------
+# config-resolution validation (fl/experiment)
+# ---------------------------------------------------------------------------
+
+def test_group_policy_config_validation_names_fields():
+    from repro.configs.base import DFLConfig
+    from repro.fl.experiment import ExperimentConfig, resolve_policy_setup
+    bad_dist = ExperimentConfig(
+        algorithm="cached", distribution="noniid",
+        dfl=DFLConfig(policy="group"))
+    with pytest.raises(ValueError, match=r"distribution='grouped'"):
+        resolve_policy_setup(bad_dist)
+    bad_slots = ExperimentConfig(
+        algorithm="cached", distribution="grouped", num_groups=5,
+        dfl=DFLConfig(policy="group", cache_size=3))
+    with pytest.raises(ValueError,
+                       match=r"DFLConfig\.cache_size=3.*num_groups=5"):
+        resolve_policy_setup(bad_slots)
+    with pytest.raises(KeyError, match="registered"):
+        resolve_policy_setup(ExperimentConfig(
+            dfl=DFLConfig(policy="nonesuch")))
+    ok = ExperimentConfig(algorithm="cached", distribution="grouped",
+                          num_groups=3, dfl=DFLConfig(policy="group",
+                                                      cache_size=6))
+    pol, params = resolve_policy_setup(ok)
+    assert pol.name == "group" and params == {}
+    # knob typos are rejected at config resolution, not silently ignored
+    typo = ExperimentConfig(
+        algorithm="cached",
+        dfl=DFLConfig(policy="mobility_aware",
+                      policy_params=(("mobility_biass", 8.0),)))
+    with pytest.raises(ValueError, match=r"mobility_biass"):
+        resolve_policy_setup(typo)
+    # "gamma" is accepted by every policy (aggregation decay)
+    pol, params = resolve_policy_setup(ExperimentConfig(
+        dfl=DFLConfig(policy="lru", policy_params=(("gamma", 0.95),))))
+    assert params == {"gamma": 0.95}
+
+
+# ---------------------------------------------------------------------------
+# new policies under the fused engine: one trace per (algorithm, policy)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy,params", [
+    ("mobility_aware", ()),
+    ("staleness_weighted", (("gamma", 0.85),)),
+    ("priority", (("w_ts", 1.0), ("w_samples", 0.1))),
+])
+def test_new_policies_run_fused_single_trace(policy, params):
+    from repro.configs.base import DFLConfig, MobilityConfig
+    from repro.fl.experiment import ExperimentConfig, run_experiment
+    cfg = ExperimentConfig(
+        algorithm="cached", distribution="noniid",
+        dfl=DFLConfig(num_agents=6, cache_size=3, local_steps=2,
+                      batch_size=16, epoch_seconds=20.0, policy=policy,
+                      policy_params=params),
+        mobility=MobilityConfig(grid_w=4, grid_h=6),
+        epochs=2, eval_every=2, n_train=300, n_test=60, image_hw=8,
+        lr_plateau=False)
+    hist = run_experiment(cfg, engine="fused")
+    assert hist["epoch_traces"] == 1
+    assert np.isfinite(hist["acc"]).all()
+
+
+def test_encounter_counts_accumulate_through_engine():
+    """FleetState.encounters is threaded through the fused engine and grows
+    with realized exchanges."""
+    from repro.configs.base import DFLConfig, MobilityConfig
+    from repro.fl.experiment import (ExperimentConfig, build_fleet,
+                                     make_engine)
+    from repro.models import cnn as cnn_lib
+    cfg = ExperimentConfig(
+        algorithm="cached", distribution="noniid",
+        dfl=DFLConfig(num_agents=6, cache_size=3, local_steps=2,
+                      batch_size=16, epoch_seconds=30.0,
+                      policy="mobility_aware"),
+        mobility=MobilityConfig(grid_w=4, grid_h=6),
+        epochs=2, eval_every=2, n_train=300, n_test=60, image_hw=8,
+        lr_plateau=False)
+    (model_cfg, state, data, counts, _tb, mstate,
+     group_slots, mob_model, mob_cfg) = build_fleet(cfg)
+    warm = np.asarray(state.encounters)
+    assert warm.shape == (6, 6) and (warm >= 0).all()
+    loss_fn = lambda p, b: cnn_lib.loss_fn(p, model_cfg, b["images"],
+                                           b["labels"])
+    eng = make_engine(cfg, loss_fn=loss_fn, mob_model=mob_model,
+                      mob_cfg=mob_cfg, group_slots=group_slots, chunk=2)
+    state, mstate, _, _ = eng.run(state, mstate, jax.random.PRNGKey(0),
+                                  0.1, data, counts, 2)
+    after = np.asarray(state.encounters)
+    assert after.sum() >= warm.sum()
+    assert int(state.t) == 2

@@ -1,8 +1,9 @@
-"""Scenario smoke gate: every registered mobility model × {cached, dfl}.
+"""Scenario smoke gate: every registered mobility model × {cached, dfl},
+plus every registered cache policy × {manhattan, trace}.
 
 Runs 2 tiny epochs of the full experiment loop per combination and fails
 (non-zero exit) on NaN accuracy, shape errors, or exceptions — so a
-mobility/scenario regression is caught in seconds without the full
+mobility/scenario/policy regression is caught in seconds without the full
 benchmark suite.
 
     PYTHONPATH=src python tools/check_scenarios.py
@@ -24,9 +25,11 @@ from repro.configs.base import DFLConfig, MobilityConfig  # noqa: E402
 from repro.fl.experiment import ExperimentConfig, run_experiment  # noqa: E402
 from repro.mobility import registry  # noqa: E402
 from repro.mobility import trace as trace_lib  # noqa: E402
+from repro.policies import registry as policy_registry  # noqa: E402
 
 N_AGENTS = 6
 ALGORITHMS = ("cached", "dfl")
+POLICY_MOBILITIES = ("manhattan", "trace")
 
 
 def tiny_mobility(name: str, trace_path: str) -> MobilityConfig:
@@ -44,14 +47,7 @@ def make_trace(path: str) -> None:
     trace_lib.save_trace(path, seq | seq.transpose(0, 2, 1))
 
 
-def check(name: str, algorithm: str, trace_path: str) -> str | None:
-    cfg = ExperimentConfig(
-        algorithm=algorithm, distribution="noniid",
-        dfl=DFLConfig(num_agents=N_AGENTS, cache_size=3, local_steps=2,
-                      batch_size=16, epoch_seconds=10.0),
-        mobility=tiny_mobility(name, trace_path),
-        epochs=2, n_train=300, n_test=60, image_hw=8,
-        lr_plateau=False, partner_sample="random")
+def _run(cfg: ExperimentConfig) -> str | None:
     hist = run_experiment(cfg)
     if len(hist["acc"]) != cfg.epochs:
         return f"expected {cfg.epochs} eval points, got {len(hist['acc'])}"
@@ -61,11 +57,37 @@ def check(name: str, algorithm: str, trace_path: str) -> str | None:
     return None
 
 
+def check(name: str, algorithm: str, trace_path: str) -> str | None:
+    cfg = ExperimentConfig(
+        algorithm=algorithm, distribution="noniid",
+        dfl=DFLConfig(num_agents=N_AGENTS, cache_size=3, local_steps=2,
+                      batch_size=16, epoch_seconds=10.0),
+        mobility=tiny_mobility(name, trace_path),
+        epochs=2, n_train=300, n_test=60, image_hw=8,
+        lr_plateau=False, partner_sample="random")
+    return _run(cfg)
+
+
+def check_policy(policy: str, mob_name: str, trace_path: str) -> str | None:
+    """Smoke one registered cache policy through the cached algorithm."""
+    grouped = policy_registry.get_policy(policy).needs_group_slots
+    cfg = ExperimentConfig(
+        algorithm="cached",
+        distribution="grouped" if grouped else "noniid",
+        num_groups=3,
+        dfl=DFLConfig(num_agents=N_AGENTS, cache_size=3, local_steps=2,
+                      batch_size=16, epoch_seconds=10.0, policy=policy),
+        mobility=tiny_mobility(mob_name, trace_path),
+        epochs=2, n_train=300, n_test=60, image_hw=8,
+        lr_plateau=False, partner_sample="random")
+    return _run(cfg)
+
+
 def main() -> int:
     tmp = tempfile.mkdtemp(prefix="check_scenarios_")
     trace_path = os.path.join(tmp, "trace.npz")
     make_trace(trace_path)
-    failures = 0
+    failures = total = 0
     for name in registry.available():
         for algorithm in ALGORITHMS:
             t0 = time.time()
@@ -76,10 +98,23 @@ def main() -> int:
                 err = f"{type(e).__name__}: {e}"
             status = "PASS" if err is None else f"FAIL ({err})"
             failures += err is not None
+            total += 1
             print(f"{name:>16} × {algorithm:<6} {status} "
                   f"[{time.time() - t0:.1f}s]")
-    print(f"{failures} failure(s) across "
-          f"{len(registry.available()) * len(ALGORITHMS)} scenarios")
+    for policy in policy_registry.available():
+        for mob_name in POLICY_MOBILITIES:
+            t0 = time.time()
+            try:
+                err = check_policy(policy, mob_name, trace_path)
+            except Exception as e:  # noqa: BLE001
+                traceback.print_exc()
+                err = f"{type(e).__name__}: {e}"
+            status = "PASS" if err is None else f"FAIL ({err})"
+            failures += err is not None
+            total += 1
+            print(f"{policy:>18} × {mob_name:<9} {status} "
+                  f"[{time.time() - t0:.1f}s]")
+    print(f"{failures} failure(s) across {total} scenarios")
     return 1 if failures else 0
 
 
