@@ -84,9 +84,9 @@ def bench_legacy(cfg: ExperimentConfig, gather_mode: str,
 
     def one_epoch(state, mstate, key):
         key, k1, k2 = jax.random.split(key, 3)
-        mstate, met = sim(mstate, k1)
+        mstate, met, dur = sim(mstate, k1)
         partners = partners_from_contacts(met, cfg.max_partners)
-        state, _ = epoch_fn(state, partners, data, counts, k2, lr)
+        state, _ = epoch_fn(state, partners, dur, data, counts, k2, lr)
         return state, mstate, key
 
     state, mstate, key = one_epoch(state, mstate, key)      # compile

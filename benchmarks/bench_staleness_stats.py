@@ -34,7 +34,7 @@ def cache_stats(tau_max: int, epoch_seconds: float, epochs: int = 15,
     sim = jax.jit(lambda s, k: mob.simulate_epoch(s, k, mcfg, epoch_seconds))
     for t in range(epochs):
         key, k = jax.random.split(key)
-        mstate, met = sim(mstate, k)
+        mstate, met, _dur = sim(mstate, k)
         partners = mob.partners_from_contacts(met, 8)
         cache = gossip.exchange(fleet_params, cache, partners, t, samples,
                                 group, tau_max=tau_max, policy="lru")

@@ -19,6 +19,9 @@ BENCHES = [
     ("bench_cache_policies", "paper contribution 3: all registered cache "
                              "policies × mobility models "
                              "-> BENCH_policies.json"),
+    ("bench_transfer_budget", "beyond-paper: contact-duration-limited "
+                              "transfers, accuracy-vs-budget frontier "
+                              "-> BENCH_budget.json"),
     ("bench_fleet_scale", "§Perf: fused fleet engine vs legacy loop, "
                           "N × cache_size sweep -> BENCH_fleet.json"),
     ("bench_kernels", "Pallas kernel micro-benches"),

@@ -51,7 +51,7 @@ test = {"images": jnp.asarray(ex), "labels": jnp.asarray(ey)}
 key = jax.random.PRNGKey(2)
 for ep in range(EPOCHS):
     key, k1, k2 = jax.random.split(key, 3)
-    mstate, met = simulate(mstate, k1)
+    mstate, met, _dur = simulate(mstate, k1)
     partners = mob.partners_from_contacts(met, 4)
     state, _ = epoch(state, partners, data, jnp.asarray(counts), k2)
     acc, _ = rounds.fleet_accuracy(state, acc_fn, test)

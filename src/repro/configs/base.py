@@ -8,6 +8,7 @@ Every assigned architecture gets one file in this package exporting CONFIG
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Optional, Tuple
 
 
@@ -153,6 +154,29 @@ class DFLConfig:
     num_groups: int = 0             # >0 enables group-based policy metadata
     aggregate_self: bool = True     # own model always participates
     staleness_decay: float = 1.0    # beyond-paper: α_j ∝ n_j·γ^age (γ=1 = paper)
+    # contact-duration-limited transfers: cap how many cache entries one
+    # contact can move (a bandwidth budget on gossip.exchange)
+    transfer_budget: float = float("inf")
+                                    # entries per link per epoch; inf (or
+                                    # any negative value) = unlimited,
+                                    # 0 = metadata-only contacts
+    link_entries_per_step: float = 0.0
+                                    # entries per simulation step of
+                                    # measured contact duration; 0 = the
+                                    # link speed does not constrain
+
+    @property
+    def resolved_transfer_budget(self) -> Optional[float]:
+        """The flat per-link cap, or None when unlimited (inf/negative) —
+        so an 'unlimited' sentinel never reaches the exchange as a cap."""
+        tb = self.transfer_budget
+        return tb if (math.isfinite(tb) and tb >= 0) else None
+
+    @property
+    def transfer_budget_enabled(self) -> bool:
+        """True when either budget knob actually limits the exchange."""
+        return (self.link_entries_per_step > 0
+                or self.resolved_transfer_budget is not None)
 
 
 @dataclasses.dataclass(frozen=True)

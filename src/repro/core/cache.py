@@ -129,12 +129,21 @@ def evict_stale(cache: ModelCache, t, tau_max) -> ModelCache:
 # ---------------------------------------------------------------------------
 
 def _run_policy(policy_name: str, origin, ts, samples, group, arrival,
-                capacity: int, *, rng=None, group_slots=None, pref=None):
+                capacity: int, *, t=None, rng=None, group_slots=None,
+                pref=None):
     from repro.policies import base as policy_base
     from repro.policies import registry as policy_registry
     meta = CacheMeta(ts=ts, origin=origin, samples=samples, group=group,
                      arrival=arrival)
-    ctx = policy_base.PolicyContext(t=jnp.max(ts), capacity=capacity,
+    if t is None:
+        # fallback when the caller has no epoch clock: the freshest
+        # candidate timestamp, floored at 0 so an all-empty candidate set
+        # (max ts == -1) never yields a negative epoch. Age-based scoring
+        # (mobility_aware rates, staleness decay) needs the real epoch —
+        # pass ``t`` explicitly.
+        t = jnp.maximum(jnp.max(ts), 0)
+    ctx = policy_base.PolicyContext(t=jnp.asarray(t, jnp.int32),
+                                    capacity=capacity,
                                     rng=rng, group_slots=group_slots)
     sel, sel_meta = policy_base.retain(
         meta, policy_registry.get_policy(policy_name), ctx, pref=pref)
@@ -142,37 +151,41 @@ def _run_policy(policy_name: str, origin, ts, samples, group, arrival,
 
 
 def select_lru(origin, ts, samples, group, arrival, capacity: int,
-               rank_key: Optional[jax.Array] = None):
+               rank_key: Optional[jax.Array] = None, *, t=None):
     """LRU retention (Alg. 2 lines 6-18): dedup by origin keeping freshest,
     sort by ts descending, retain first `capacity`.
 
     Returns (sel_idx [capacity], meta dict) — sel_idx indexes the candidate
-    arrays; invalid selections have origin == -1.
+    arrays; invalid selections have origin == -1. ``t`` is the current
+    epoch for the policy context (defaults to the freshest candidate ts).
     """
     return _run_policy("lru", origin, ts, samples, group, arrival, capacity,
-                       pref=rank_key)
+                       pref=rank_key, t=t)
 
 
 def select_group(origin, ts, samples, group, arrival, capacity: int,
-                 group_slots: jax.Array):
+                 group_slots: jax.Array, *, t=None):
     """Group-Based retention (Alg. 3): per-group LRU with r_g slots.
 
     group_slots: [num_groups] int32 with sum == capacity.
     """
     return _run_policy("group", origin, ts, samples, group, arrival,
-                       capacity, group_slots=group_slots)
+                       capacity, group_slots=group_slots, t=t)
 
 
-def select_fifo(origin, ts, samples, group, arrival, capacity: int):
+def select_fifo(origin, ts, samples, group, arrival, capacity: int, *,
+                t=None):
     """FIFO variant: dedup by origin (freshest copy), retain the most
     recently *received* entries. Non-paper baseline for the policy study."""
-    return _run_policy("fifo", origin, ts, samples, group, arrival, capacity)
+    return _run_policy("fifo", origin, ts, samples, group, arrival, capacity,
+                       t=t)
 
 
-def select_random(origin, ts, samples, group, arrival, capacity: int, key):
+def select_random(origin, ts, samples, group, arrival, capacity: int, key, *,
+                  t=None):
     """Random retention after origin-dedup. Non-paper baseline."""
     return _run_policy("random", origin, ts, samples, group, arrival,
-                       capacity, rng=key)
+                       capacity, rng=key, t=t)
 
 
 def apply_selection(cache: ModelCache, cand_models, sel, meta) -> ModelCache:
@@ -189,30 +202,37 @@ def insert(cache: ModelCache, params, t, origin, samples, group,
            tau_max, policy="lru", rng: Optional[jax.Array] = None,
            group_slots: Optional[jax.Array] = None,
            policy_params: Optional[Dict[str, float]] = None,
-           encounters: Optional[jax.Array] = None) -> ModelCache:
+           encounters: Optional[jax.Array] = None,
+           transfer_budget: Optional[float] = None) -> ModelCache:
     """Insert/refresh a single model (Alg. 2 line 6) then retain under the
     configured ``policy`` (name or :class:`repro.policies.CachePolicy`).
 
     Used by the pod-scale deployment where exchanges arrive one at a time;
     honors the same registry as the fleet path so both agree.
+    ``transfer_budget`` mirrors the fleet exchange's per-link entry cap: a
+    single insert moves one model, so a (static) budget below one whole
+    entry masks the arriving candidate — the cache still ages and evicts.
     """
     from repro.policies import base as policy_base
     from repro.policies import registry as policy_registry
     pol = policy_registry.resolve(policy)
     cache = evict_stale(cache, t, tau_max)
     C = cache.capacity
+    admitted = transfer_budget is None or transfer_budget >= 1.0
     cand_models = jax.tree_util.tree_map(
         lambda c, x: jnp.concatenate([c, x[None].astype(c.dtype)], axis=0),
         cache.models, params)
     meta = CacheMeta(
-        ts=jnp.concatenate([cache.ts, jnp.asarray([t], jnp.int32)]),
-        origin=jnp.concatenate([cache.origin,
-                                jnp.asarray([origin], jnp.int32)]),
-        samples=jnp.concatenate([cache.samples,
-                                 jnp.asarray([samples], jnp.float32)]),
-        group=jnp.concatenate([cache.group, jnp.asarray([group], jnp.int32)]),
-        arrival=jnp.concatenate([cache.arrival,
-                                 jnp.asarray([t], jnp.int32)]))
+        ts=jnp.concatenate([cache.ts, jnp.asarray(
+            [t if admitted else -1], jnp.int32)]),
+        origin=jnp.concatenate([cache.origin, jnp.asarray(
+            [origin if admitted else -1], jnp.int32)]),
+        samples=jnp.concatenate([cache.samples, jnp.asarray(
+            [samples if admitted else 0.0], jnp.float32)]),
+        group=jnp.concatenate([cache.group, jnp.asarray(
+            [group if admitted else -1], jnp.int32)]),
+        arrival=jnp.concatenate([cache.arrival, jnp.asarray(
+            [t if admitted else -1], jnp.int32)]))
     ctx = policy_base.PolicyContext(
         t=jnp.asarray(t, jnp.int32), capacity=C, rng=rng,
         group_slots=group_slots, encounters=encounters,

@@ -12,6 +12,17 @@ The whole fleet's exchange for one epoch is a single vectorized program:
 This two-phase split is the TPU adaptation of Algorithm 2: selecting by
 metadata first avoids materializing N·D·(C+1) candidate model copies, and
 the select-based gather keeps phase 2 free of full-cache temporaries.
+
+Transfer budget (contact-duration-limited transfers): real vehicular
+contacts are short, so one contact can only move a bounded number of
+models. ``exchange`` accepts a per-epoch budget — a flat per-link entry
+cap (``transfer_budget``) and/or a duration-derived cap
+(``durations[i, j] steps × link_entries_per_step``, using the per-pair
+contact durations ``simulate_epoch`` measures). Non-own candidates beyond
+a link's cap are masked *before* policy retention, ordered by the
+configured policy's own priority function — so every registered policy
+composes with the budget without extra code. An unlimited budget is
+bit-exact with the unbudgeted exchange.
 """
 from __future__ import annotations
 
@@ -27,6 +38,20 @@ from repro.policies import registry as policy_registry
 from repro.policies.base import CachePolicy
 
 
+def valid_partner_mask(partners: jax.Array) -> jax.Array:
+    """[N, D] bool — real partner slots, first occurrence per id only.
+
+    A partner id repeated within one row (possible with hand-built partner
+    lists or degenerate samplers) is masked after its first occurrence —
+    duplicates would inject the same candidates twice, charge a transfer
+    budget twice for one physical link, and inflate encounter counts.
+    """
+    D = partners.shape[1]
+    dup = jnp.any((partners[:, :, None] == partners[:, None, :])
+                  & jnp.tril(jnp.ones((D, D), bool), -1)[None], axis=2)
+    return (partners >= 0) & ~dup
+
+
 def _candidates(cache: ModelCache, t, partners, own_ts, own_samples,
                 own_group, tau_max):
     """Build candidate metadata [N, M] and source coordinates.
@@ -34,10 +59,11 @@ def _candidates(cache: ModelCache, t, partners, own_ts, own_samples,
     M = C + D*(1 + C): own cache, then per partner (own model, cache).
     Source coordinate (agent, slot): slot C refers to the agent's own model
     in the stacked gather array; slots 0..C-1 are its cache entries.
+    Duplicate partner ids are masked (:func:`valid_partner_mask`).
     """
     N, C = cache.ts.shape
     D = partners.shape[1]
-    pvalid = partners >= 0
+    pvalid = valid_partner_mask(partners)
     pidx = jnp.clip(partners, 0, N - 1)
 
     # --- own cache entries ---
@@ -85,6 +111,110 @@ def _candidates(cache: ModelCache, t, partners, own_ts, own_samples,
     return ts, origin, samples, group, arrival, src_a, src_s
 
 
+def _candidate_links(num_cache: int, num_partners: int) -> jax.Array:
+    """[M] link id per candidate: -1 = own cache (free), else the partner
+    slot d whose radio link carries the entry. Layout mirrors
+    :func:`_candidates`: own cache, partner models, partner caches."""
+    return jnp.concatenate([
+        jnp.full((num_cache,), -1, jnp.int32),
+        jnp.arange(num_partners, dtype=jnp.int32),
+        jnp.repeat(jnp.arange(num_partners, dtype=jnp.int32), num_cache)])
+
+
+def link_caps(partners, durations, transfer_budget,
+              link_entries_per_step: float) -> jax.Array:
+    """[N, D] float32 — whole-entry admission cap per (agent, partner slot).
+
+    The cap is the measured contact time converted to entries
+    (``durations × link_entries_per_step``), clamped by the flat
+    ``transfer_budget`` when one is set; either limit alone also works.
+    Fractional capacity is floored — a contact either moves a whole model
+    or it doesn't.
+    """
+    N, D = partners.shape
+    cap = jnp.full((N, D), jnp.inf, jnp.float32)
+    if link_entries_per_step > 0:
+        if durations is None:
+            raise ValueError(
+                "link_entries_per_step > 0 needs the per-pair contact "
+                "durations returned by simulate_epoch")
+        pidx = jnp.clip(partners, 0, N - 1)
+        dur = jnp.take_along_axis(durations, pidx, axis=1)
+        cap = dur.astype(jnp.float32) * link_entries_per_step
+    if transfer_budget is not None:
+        tb = jnp.asarray(transfer_budget, jnp.float32)
+        # negative = the 'unlimited' sentinel (DFLConfig docs); honor it
+        # here too so per-call traced budgets that bypass the config
+        # normalization can't silently turn into a cap of -1 (no exchange)
+        cap = jnp.minimum(cap, jnp.where(tb < 0, jnp.inf, tb))
+    return jnp.floor(cap)
+
+
+def _admit_within_budget(meta: CacheMeta, pol: CachePolicy,
+                         ctx: "policy_base.PolicyContext", link: jax.Array,
+                         cap: jax.Array) -> CacheMeta:
+    """Mask one agent's candidates down to each link's entry cap.
+
+    The configured policy's own priority function orders which entries
+    make the cut on a saturated link (higher key first, earlier candidate
+    on ties — the same stable order the retention engine uses), so every
+    registered policy composes with the budget for free. Own-cache
+    candidates (link == -1) ride free: they are already local.
+
+    Budget is only spent on entries retention could actually keep: a copy
+    that fails the policy's keep mask (e.g. a group with zero slots), is
+    not the freshest copy *on its own link*, or loses to a copy already
+    in the receiver's own cache is never transmitted — it neither charges
+    the link nor survives. Copies of one origin offered on *different*
+    links each charge their own link (no cross-link coordination for
+    dedup: a saturated link cutting the freshest copy must not also
+    forfeit a staler copy riding an idle link); retention keeps the
+    freshest of whatever arrived. All other link traffic beyond the cap
+    is masked, so budget 0 moves nothing even for rank-relative keep
+    masks.
+
+    Known one-shot approximation: the keep gate is evaluated against the
+    pre-admission candidate view, so a *rank-relative* keep (the group
+    policy's slot rank) may still reject an entry whose outranking
+    same-group competitor is itself cut by another link's cap. Resolving
+    that exactly needs an admission/keep fixpoint; the greedy pass trades
+    that corner (the entry arrives at a later contact) for a single
+    vectorized step.
+    """
+    # keep mask against the same global-dedup view retention uses
+    valid = policy_base.dedup_mask(meta.origin, meta.ts)
+    key, keep = pol.priority(meta, ctx, valid)
+    key = key.astype(jnp.float32)
+    M = link.shape[0]
+    idx = jnp.arange(M)
+    charged = link >= 0
+    # origin dedup at transmission time, restricted to copies on the same
+    # link or in the receiver's own cache (own copies can't be
+    # budget-masked, so deduping against them never forfeits the origin);
+    # shares retention's tie-break via beats_matrix
+    beats = policy_base.beats_matrix(meta.origin, meta.ts)
+    link_best = meta.valid & ~jnp.any(
+        beats & (link[None, :] == link[:, None]), axis=1)
+    unbeaten_by_own = ~jnp.any(beats & (link[None, :] < 0), axis=1)
+    # the keep gate only applies where it matches retention's dedup view
+    # (globally-valid entries); a globally-beaten but link-best copy rides
+    # ungated — whether it is kept is retention's call
+    contender = charged & link_best & unbeaten_by_own & (keep | ~valid)
+    ahead = ((link[None, :] == link[:, None]) & contender[None, :]
+             & ((key[None, :] > key[:, None])
+                | ((key[None, :] == key[:, None])
+                   & (idx[None, :] < idx[:, None]))))
+    rank = jnp.sum(ahead, axis=1)
+    cap_c = cap[jnp.clip(link, 0, cap.shape[0] - 1)]
+    admitted = ~charged | (contender & (rank < cap_c))
+    return CacheMeta(
+        ts=jnp.where(admitted, meta.ts, NEG),
+        origin=jnp.where(admitted, meta.origin, NEG),
+        samples=jnp.where(admitted, meta.samples, 0.0),
+        group=jnp.where(admitted, meta.group, NEG),
+        arrival=jnp.where(admitted, meta.arrival, NEG))
+
+
 def gather_winners(cache_models, params, gather_a, gather_s, *,
                    mode: str = "select"):
     """Phase-2 weight fetch: winners[i, c] = model at (gather_a, gather_s).
@@ -130,7 +260,10 @@ def exchange(params, cache: ModelCache, partners, t, own_samples, own_group,
              rng: Optional[jax.Array] = None,
              encounters: Optional[jax.Array] = None,
              policy_params: Optional[Dict[str, float]] = None,
-             gather_mode: str = "select") -> ModelCache:
+             gather_mode: str = "select",
+             durations: Optional[jax.Array] = None,
+             transfer_budget=None,
+             link_entries_per_step: float = 0.0) -> ModelCache:
     """One epoch of DTN-like cache exchange for the whole fleet.
 
     params: pytree [N, ...] (post-local-update models x̃_i(t));
@@ -140,9 +273,19 @@ def exchange(params, cache: ModelCache, partners, t, own_samples, own_group,
     CachePolicy); the choice is static per trace, policy randomness stays
     the traced ``rng`` key. Agents with no partners still run staleness
     eviction + retention.
+
+    Transfer budget: when ``transfer_budget`` is set (entries per link per
+    epoch; may be a traced scalar — sweeping it never retraces) and/or
+    ``link_entries_per_step > 0`` (converts the measured per-pair contact
+    ``durations`` [N, N] from ``simulate_epoch`` into link capacity), each
+    partner link admits at most its cap of non-own candidates, ordered by
+    the policy's priority (see :func:`_admit_within_budget`). Budget 0
+    degenerates to no exchange (caches only age/evict); an unlimited
+    budget is bit-exact with the unbudgeted path.
     """
     pol = policy_registry.resolve(policy)
     N, C = cache.ts.shape
+    D = partners.shape[1]
     own_ts = jnp.full((N,), t, jnp.int32)
     ts, origin, samples, group, arrival, src_a, src_s = _candidates(
         cache, t, partners, own_ts, own_samples, own_group, tau_max)
@@ -153,21 +296,32 @@ def exchange(params, cache: ModelCache, partners, t, own_samples, own_group,
     pparams = dict(policy_params or {})
     t_arr = jnp.asarray(t, jnp.int32)
 
+    budgeted = transfer_budget is not None or link_entries_per_step > 0
+    if budgeted:
+        link = _candidate_links(C, D)
+        caps = link_caps(partners, durations, transfer_budget,
+                         link_entries_per_step)
+    else:
+        link = caps = None
+
     def one_agent(origin_i, ts_i, samples_i, group_i, arrival_i, key_i,
-                  enc_i):
+                  enc_i, cap_i):
         meta = CacheMeta(ts=ts_i, origin=origin_i, samples=samples_i,
                          group=group_i, arrival=arrival_i)
         ctx = policy_base.PolicyContext(
             t=t_arr, capacity=C, rng=key_i, group_slots=group_slots,
             encounters=enc_i, params=pparams)
+        if budgeted:
+            meta = _admit_within_budget(meta, pol, ctx, link, cap_i)
         return policy_base.retain(meta, pol, ctx)
 
     sel, meta = jax.vmap(
         one_agent,
         in_axes=(0, 0, 0, 0, 0,
                  0 if keys is not None else None,
-                 0 if encounters is not None else None))(
-        origin, ts, samples, group, arrival, keys, encounters)
+                 0 if encounters is not None else None,
+                 0 if caps is not None else None))(
+        origin, ts, samples, group, arrival, keys, encounters, caps)
 
     # phase 2: gather winning model weights only
     gather_a = jnp.take_along_axis(src_a, sel, axis=1)  # [N, C]

@@ -55,11 +55,16 @@ def init_fleet(template_params, num_agents: int, cache_size: int,
 
 def count_encounters(encounters, partners):
     """Accumulate this epoch's realized exchange partners into the [N, N]
-    per-pair encounter counts (no-op when encounters is None)."""
+    per-pair encounter counts (no-op when encounters is None).
+
+    Duplicate partner ids are masked with the same rule the exchange uses
+    (``gossip.valid_partner_mask``), so the counts match the realized
+    contacts one-for-one."""
     if encounters is None:
         return None
     N = encounters.shape[0]
-    hit = (partners[..., None] == jnp.arange(N)) & (partners >= 0)[..., None]
+    pvalid = gossip.valid_partner_mask(partners)
+    hit = (partners[..., None] == jnp.arange(N)) & pvalid[..., None]
     return encounters + jnp.sum(hit, axis=1).astype(encounters.dtype)
 
 
@@ -74,12 +79,18 @@ def cached_dfl_epoch(state: FleetState, partners, data, counts, key, *,
                      group_slots: Optional[jax.Array] = None,
                      staleness_decay: float = 1.0,
                      policy_params: Optional[dict] = None,
-                     gather_mode: str = "select"
+                     gather_mode: str = "select",
+                     durations: Optional[jax.Array] = None,
+                     transfer_budget=None,
+                     link_entries_per_step: float = 0.0
                      ) -> Tuple[FleetState, jax.Array]:
     """One global epoch of Algorithm 1 for the whole fleet.
 
     partners: [N, D] contact lists for this epoch (-1 padded). ``policy``
     is a registered cache-policy name or CachePolicy (static per trace).
+    ``durations`` [N, N] (steps in contact, from ``simulate_epoch``) plus
+    ``transfer_budget`` / ``link_entries_per_step`` bound how many entries
+    each contact can move (see ``gossip.exchange``).
     """
     N = state.samples.shape[0]
     key, k_local, k_policy = jax.random.split(key, 3)
@@ -98,7 +109,9 @@ def cached_dfl_epoch(state: FleetState, partners, data, counts, key, *,
         tilde, state.cache, partners, state.t, state.samples, state.group,
         tau_max=tau_max, policy=policy, group_slots=group_slots,
         rng=k_policy, encounters=encounters, policy_params=policy_params,
-        gather_mode=gather_mode)
+        gather_mode=gather_mode, durations=durations,
+        transfer_budget=transfer_budget,
+        link_entries_per_step=link_entries_per_step)
 
     # 3) ModelAggregation over all cached models (+ own)
     new_params = aggregate(tilde, state.samples, cache, t=state.t,
@@ -171,17 +184,26 @@ def make_epoch_step(algorithm: str, *, loss_fn: Callable, local_steps: int,
                     group_slots: Optional[jax.Array] = None,
                     staleness_decay: float = 1.0,
                     policy_params: Optional[dict] = None,
-                    gather_mode: str = "select") -> Callable:
+                    gather_mode: str = "select",
+                    transfer_budget=None,
+                    link_entries_per_step: float = 0.0) -> Callable:
     """Bind an algorithm's hyperparameters into a uniform per-epoch step
 
-        step(state, partners, data, counts, key, lr) -> (state, losses)
+        step(state, partners, durations, data, counts, key, lr,
+             transfer_budget=None) -> (state, losses)
 
-    (cfl ignores ``partners``). The single source of the algorithm dispatch
-    for the legacy jitted loop, the fused engine, and the benchmarks — so
-    a new hyperparameter is threaded in exactly one place. The cache
-    policy is resolved through the registry once here, so the choice is
-    static per trace; policies that impose an aggregation staleness decay
-    (e.g. ``staleness_weighted``) have their γ resolved here too.
+    (cfl ignores ``partners``/``durations``; dfl uses partners only). The
+    single source of the algorithm dispatch for the legacy jitted loop,
+    the fused engine, and the benchmarks — so a new hyperparameter is
+    threaded in exactly one place. The cache policy is resolved through
+    the registry once here, so the choice is static per trace; policies
+    that impose an aggregation staleness decay (e.g.
+    ``staleness_weighted``) have their γ resolved here too.
+
+    Transfer budget: ``link_entries_per_step`` and the *default*
+    ``transfer_budget`` are bound statically; a per-call
+    ``transfer_budget`` (e.g. a traced scalar, so budget sweeps don't
+    retrace) overrides the default.
     """
     common = dict(loss_fn=loss_fn, local_steps=local_steps,
                   batch_size=batch_size, rho=rho)
@@ -191,20 +213,28 @@ def make_epoch_step(algorithm: str, *, loss_fn: Callable, local_steps: int,
         pol = policy_registry.resolve(policy)
         staleness_decay = policy_base.effective_staleness_decay(
             pol, staleness_decay, policy_params)
+        default_budget = transfer_budget
 
-        def step(state, partners, data, counts, key, lr):
+        def step(state, partners, durations, data, counts, key, lr,
+                 transfer_budget=None):
+            tb = (default_budget if transfer_budget is None
+                  else transfer_budget)
             return cached_dfl_epoch(
                 state, partners, data, counts, key, lr=lr, tau_max=tau_max,
                 policy=pol, group_slots=group_slots,
                 staleness_decay=staleness_decay,
                 policy_params=policy_params, gather_mode=gather_mode,
+                durations=durations, transfer_budget=tb,
+                link_entries_per_step=link_entries_per_step,
                 **common)
     elif algorithm == "dfl":
-        def step(state, partners, data, counts, key, lr):
+        def step(state, partners, durations, data, counts, key, lr,
+                 transfer_budget=None):
             return dfl_epoch(state, partners, data, counts, key, lr=lr,
                              **common)
     elif algorithm == "cfl":
-        def step(state, partners, data, counts, key, lr):
+        def step(state, partners, durations, data, counts, key, lr,
+                 transfer_budget=None):
             return cfl_epoch(state, data, counts, key, lr=lr, **common)
     else:
         raise ValueError(f"unknown algorithm {algorithm!r}")
@@ -220,14 +250,16 @@ class FleetEngine:
     chains mobility → partner selection → a full FL epoch for up to
     ``chunk`` epochs per call.
 
-    ``run(state, mstate, key, lr, data, counts, num_epochs)`` returns
-    ``(state, mstate, key, losses)`` where ``losses`` is the per-epoch mean
-    training loss ``[chunk]`` (NaN past ``num_epochs``). ``lr`` and
-    ``num_epochs`` are *traced* scalars: changing either between calls never
-    retraces — the epoch loop is a ``lax.fori_loop`` with a traced bound, so
-    any total epoch budget runs through one compiled executable and partial
-    chunks pay for exactly the epochs they run. ``traces`` counts actual
-    retraces (one per (algorithm, shape) by construction).
+    ``run(state, mstate, key, lr, data, counts, num_epochs[,
+    transfer_budget])`` returns ``(state, mstate, key, losses)`` where
+    ``losses`` is the per-epoch mean training loss ``[chunk]`` (NaN past
+    ``num_epochs``). ``lr``, ``num_epochs`` and ``transfer_budget`` are
+    *traced* scalars: changing any of them between calls never retraces —
+    the epoch loop is a ``lax.fori_loop`` with a traced bound, so any
+    total epoch budget runs through one compiled executable, partial
+    chunks pay for exactly the epochs they run, and a bandwidth-budget
+    sweep reuses one executable. ``traces`` counts actual retraces (one
+    per (algorithm, shape) by construction).
 
     With ``donate=True`` the fleet and mobility state buffers are donated to
     XLA, so the ``[N, C, ...]`` cache is updated in place between calls
@@ -263,6 +295,8 @@ def make_fleet_engine(*, algorithm: str, mob_model, mob_cfg,
                       staleness_decay: float = 1.0,
                       policy_params: Optional[dict] = None,
                       gather_mode: str = "select",
+                      transfer_budget=None,
+                      link_entries_per_step: float = 0.0,
                       chunk: int = 1,
                       donate: Optional[bool] = None) -> FleetEngine:
     """Build the fused epoch engine for one (algorithm, scenario) pair.
@@ -271,6 +305,13 @@ def make_fleet_engine(*, algorithm: str, mob_model, mob_cfg,
     (``split(key, 3)`` for deterministic partner sampling, ``split(key, 4)``
     for random sampling), so a fused run reproduces the legacy trajectory
     from the same seed.
+
+    The per-pair contact durations ride the same scanned mobility state the
+    union contacts do — no extra host round-trip — and feed the per-link
+    transfer budget (``transfer_budget`` entries/link/epoch, optionally
+    passed per ``run`` call as a traced scalar so budget sweeps never
+    retrace; ``link_entries_per_step`` converts measured duration to link
+    capacity and is static).
     """
     from repro.mobility.base import partners_from_contacts
 
@@ -284,28 +325,32 @@ def make_fleet_engine(*, algorithm: str, mob_model, mob_cfg,
         algorithm, loss_fn=loss_fn, local_steps=local_steps,
         batch_size=batch_size, rho=rho, tau_max=tau_max, policy=policy,
         group_slots=group_slots, staleness_decay=staleness_decay,
-        policy_params=policy_params, gather_mode=gather_mode)
+        policy_params=policy_params, gather_mode=gather_mode,
+        transfer_budget=transfer_budget,
+        link_entries_per_step=link_entries_per_step)
 
-    def epoch_step(state, mstate, key, lr, data, counts):
+    def epoch_step(state, mstate, key, lr, data, counts, tb):
         if partner_sample == "lowest-id":
             key, k1, k2 = jax.random.split(key, 3)
             k3 = None
         else:
             key, k1, k2, k3 = jax.random.split(key, 4)
-        mstate, met = mob_model.simulate_epoch(mstate, k1, cfg=mob_cfg,
-                                               seconds=epoch_seconds)
+        mstate, met, dur = mob_model.simulate_epoch(mstate, k1, cfg=mob_cfg,
+                                                    seconds=epoch_seconds)
         partners = partners_fn(met, max_partners, sample=partner_sample,
                                key=k3)
-        state, losses = step(state, partners, data, counts, k2, lr)
+        state, losses = step(state, partners, dur, data, counts, k2, lr,
+                             transfer_budget=tb)
         return state, mstate, key, losses
 
-    def run_epochs(state, mstate, key, lr, data, counts, num_epochs):
+    def run_epochs(state, mstate, key, lr, data, counts, num_epochs,
+                   transfer_budget=None):
         losses0 = jnp.full((chunk,), jnp.nan, jnp.float32)
 
         def body(i, carry):
             state, mstate, key, losses = carry
             state, mstate, key, ep_losses = epoch_step(
-                state, mstate, key, lr, data, counts)
+                state, mstate, key, lr, data, counts, transfer_budget)
             losses = jax.lax.dynamic_update_index_in_dim(
                 losses, jnp.mean(ep_losses), i, 0)
             return state, mstate, key, losses

@@ -79,6 +79,12 @@ def resolve_policy_setup(cfg: ExperimentConfig):
     """
     pol = policy_registry.resolve(cfg.dfl.policy)
     params = dict(cfg.dfl.policy_params)
+    if cfg.algorithm != "cached" and cfg.dfl.transfer_budget_enabled:
+        raise ValueError(
+            "DFLConfig.transfer_budget / link_entries_per_step bound the "
+            "cached algorithm's cache exchange and have no effect on "
+            f"algorithm={cfg.algorithm!r} — unset them (or use "
+            "algorithm='cached') rather than sweeping a no-op knob")
     unknown = sorted(set(params) - set(pol.knobs) - {"gamma"})
     if unknown:
         raise ValueError(
@@ -182,9 +188,11 @@ def make_epoch_fn(cfg: ExperimentConfig, *, loss_fn: Callable,
 
     ``lr`` is threaded as a *traced* call argument (historically it was
     closed over as a static Python float, so every ReduceLROnPlateau step
-    recompiled the whole epoch). Returns ``(epoch_fn, counter)`` where
-    ``counter["traces"]`` counts actual retraces — exactly 1 per
-    (algorithm, shape) regardless of LR changes.
+    recompiled the whole epoch). ``durations`` is the per-pair
+    contact-duration matrix from ``simulate_epoch`` feeding the transfer
+    budget. Returns ``(epoch_fn, counter)`` where ``counter["traces"]``
+    counts actual retraces — exactly 1 per (algorithm, shape) regardless
+    of LR changes.
     """
     counter = {"traces": 0}
     step = rounds_lib.make_epoch_step(
@@ -192,11 +200,13 @@ def make_epoch_fn(cfg: ExperimentConfig, *, loss_fn: Callable,
         batch_size=cfg.dfl.batch_size, rho=cfg.dfl.rho,
         tau_max=cfg.dfl.tau_max, policy=cfg.dfl.policy,
         group_slots=group_slots, staleness_decay=cfg.dfl.staleness_decay,
-        policy_params=dict(cfg.dfl.policy_params), gather_mode=gather_mode)
+        policy_params=dict(cfg.dfl.policy_params), gather_mode=gather_mode,
+        transfer_budget=cfg.dfl.resolved_transfer_budget,
+        link_entries_per_step=cfg.dfl.link_entries_per_step)
 
-    def fn(state, partners, data, counts, key, lr):
+    def fn(state, partners, durations, data, counts, key, lr):
         counter["traces"] += 1
-        return step(state, partners, data, counts, key, lr)
+        return step(state, partners, durations, data, counts, key, lr)
 
     return jax.jit(fn), counter
 
@@ -213,6 +223,8 @@ def make_engine(cfg: ExperimentConfig, *, loss_fn: Callable, mob_model,
         rho=cfg.dfl.rho, tau_max=cfg.dfl.tau_max, policy=cfg.dfl.policy,
         group_slots=group_slots, staleness_decay=cfg.dfl.staleness_decay,
         policy_params=dict(cfg.dfl.policy_params), gather_mode=gather_mode,
+        transfer_budget=cfg.dfl.resolved_transfer_budget,
+        link_entries_per_step=cfg.dfl.link_entries_per_step,
         chunk=cfg.eval_every if chunk is None else chunk, donate=donate)
 
 
@@ -268,14 +280,24 @@ def run_experiment(cfg: ExperimentConfig, *, verbose: bool = False,
                   f"({time.time() - t0:.1f}s)")
         return False
 
+    # budget sweeps pass the (traced) cap per engine call — never retraces;
+    # None = no flat cap (a duration-derived cap may still apply via
+    # link_entries_per_step, bound statically above)
+    budget = (jnp.float32(cfg.dfl.resolved_transfer_budget)
+              if cfg.dfl.resolved_transfer_budget is not None else None)
+
     if engine == "fused":
         eng = make_engine(cfg, loss_fn=loss_fn, mob_model=mob_model,
                           mob_cfg=mob_cfg, group_slots=group_slots)
         ep = 0
         while ep < cfg.epochs and not stop:
             n = min(eng.chunk, cfg.epochs - ep)
-            state, mstate, key, _ = eng.run(state, mstate, key, lr, data,
-                                            counts, n)
+            if budget is None:
+                state, mstate, key, _ = eng.run(state, mstate, key, lr,
+                                                data, counts, n)
+            else:
+                state, mstate, key, _ = eng.run(state, mstate, key, lr,
+                                                data, counts, n, budget)
             ep += n
             if ep % cfg.eval_every == 0:
                 stop = evaluate(ep - 1)
@@ -293,10 +315,10 @@ def run_experiment(cfg: ExperimentConfig, *, verbose: bool = False,
                 k3 = None
             else:
                 key, k1, k2, k3 = jax.random.split(key, 4)
-            mstate, met = sim(mstate, k1)
+            mstate, met, dur = sim(mstate, k1)
             partners = partners_from_contacts(
                 met, cfg.max_partners, sample=cfg.partner_sample, key=k3)
-            state, _ = epoch_fn(state, partners, data, counts, k2, lr)
+            state, _ = epoch_fn(state, partners, dur, data, counts, k2, lr)
             if (ep + 1) % cfg.eval_every == 0:
                 if evaluate(ep):
                     break

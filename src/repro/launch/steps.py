@@ -70,14 +70,18 @@ def make_train_step(cfg: ModelConfig, *, lr: float = 0.1,
                     multi_pod: bool = False, tau_max: int = 10,
                     policy: str = "lru",
                     own_samples: float = 1.0, microbatches: int = 1,
-                    kv_chunk: int = 512):
+                    kv_chunk: int = 512,
+                    transfer_budget: Optional[float] = None):
     """Build the Cached-DFL round step lowered for the train shape.
 
     Single-pod signature:  (params, cache, batch, t) -> (params, cache, loss)
     Multi-pod: identical but every input has a leading agent axis [A] and
     the step performs the cross-pod model exchange under the configured
     cache ``policy`` (same registry as the fleet path, including the
-    policy's aggregation staleness decay).
+    policy's aggregation staleness decay). ``transfer_budget`` mirrors the
+    fleet path's per-link entry cap: each round's exchange moves one model
+    per link, so a budget below 1 suppresses the insert (the cache still
+    ages/evicts) — the pod analogue of a contact too short to transfer.
     """
     from repro.policies import base as policy_base
     from repro.policies import registry as policy_registry
@@ -108,7 +112,8 @@ def make_train_step(cfg: ModelConfig, *, lr: float = 0.1,
             lambda x: jnp.roll(x, 1, axis=0), tilde)
         partner_ids = jnp.roll(jnp.arange(A, dtype=jnp.int32), 1)
         insert = functools.partial(cache_lib.insert, tau_max=tau_max,
-                                   policy=pol)
+                                   policy=pol,
+                                   transfer_budget=transfer_budget)
         cache = jax.vmap(insert)(
             cache, partner,
             jnp.full((A,), t, jnp.int32), partner_ids,

@@ -36,7 +36,9 @@ def run_fleet(args) -> dict:
                       tau_max=args.tau_max, local_steps=args.local_steps,
                       lr=args.lr, batch_size=args.batch_size,
                       epoch_seconds=args.epoch_seconds, policy=args.policy,
-                      policy_params=tuple(args.policy_param)),
+                      policy_params=tuple(args.policy_param),
+                      transfer_budget=args.transfer_budget,
+                      link_entries_per_step=args.link_entries_per_step),
         mobility=MobilityConfig(speed=args.speed, grid_w=args.grid_w,
                                 grid_h=args.grid_h),
         epochs=args.epochs,
@@ -69,9 +71,12 @@ def run_pod(args) -> dict:
         jax.random.split(key, agents))
     cache = steps_lib.init_pod_cache(
         cfg, models.init_params(cfg, key), args.cache_size, agents=agents)
+    # same unlimited-sentinel normalization as the fleet path
+    budget = DFLConfig(
+        transfer_budget=args.transfer_budget).resolved_transfer_budget
     step = jax.jit(steps_lib.make_train_step(
         cfg, lr=args.lr, multi_pod=True, tau_max=args.tau_max,
-        policy=args.policy, scan_layers=True))
+        policy=args.policy, scan_layers=True, transfer_budget=budget))
 
     def make_batch(k):
         idx = jax.random.randint(k, (agents, args.batch_size), 0,
@@ -130,6 +135,14 @@ def main() -> None:
                     type=policy_param, metavar="NAME=VALUE",
                     help="score knob for the chosen policy, repeatable "
                          "(e.g. --policy-param mobility_bias=8)")
+    ap.add_argument("--transfer-budget", type=float, default=float("inf"),
+                    help="max cache entries one contact can move per link "
+                         "per epoch (inf = unlimited, 0 = metadata only; "
+                         "cached algorithm / pod exchange only)")
+    ap.add_argument("--link-entries-per-step", type=float, default=0.0,
+                    help="entries admitted per simulation step of measured "
+                         "contact duration (0 = link speed unconstrained; "
+                         "fleet mode, cached algorithm only)")
     ap.add_argument("--agents", type=int, default=20)
     ap.add_argument("--cache-size", type=int, default=10)
     ap.add_argument("--tau-max", type=int, default=10)

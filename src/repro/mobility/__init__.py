@@ -2,8 +2,9 @@
 
 Models are selected by name via :mod:`repro.mobility.registry`
 (``MobilityConfig.model``); all satisfy the :class:`~repro.mobility.base.
-MobilityModel` protocol and feed the same ``simulate_epoch → union
-contact matrix → partners_from_contacts`` contract the fleet loop uses.
+MobilityModel` protocol and feed the same ``simulate_epoch → (union
+contact matrix, per-pair contact durations) → partners_from_contacts``
+contract the fleet loop uses; the durations drive the transfer budget.
 """
 from repro.mobility.base import (  # noqa: F401
     MobilityModel, contacts_from_positions, make_bands,

@@ -7,10 +7,16 @@ functions over an opaque pytree state:
     step(state, key, cfg)                   -> state      (advance step_seconds)
     positions(state, cfg)                   -> [N, 2] f32 (meters)
     contacts_now(state, cfg)                -> [N, N] bool (symmetric, diag F)
-    simulate_epoch(state, key, cfg, seconds)-> (state, [N, N] bool union)
+    simulate_epoch(state, key, cfg, seconds)-> (state, [N, N] bool union,
+                                                [N, N] int32 durations)
+
+``durations[i, j]`` counts the simulation steps pair (i, j) spent in
+contact during the epoch — the measured contact time that a
+bandwidth-limited link can actually use (``gossip.exchange`` converts it
+into a per-link transfer budget via ``DFLConfig.link_entries_per_step``).
 
 The fleet loop in ``fl/experiment.py`` only consumes the
-``simulate_epoch -> union contact matrix -> partners_from_contacts``
+``simulate_epoch -> (union contacts, durations) -> partners_from_contacts``
 contract, so any registered model slots in unchanged. Models with
 community structure honour ``band`` ([N] int32, -1 = unrestricted) so the
 grouped data partition / group-cache case study works for all of them.
@@ -102,22 +108,31 @@ def advance_toward(pos: jax.Array, dest: jax.Array, travel: jax.Array
 
 def generic_simulate_epoch(step_fn: Callable, contacts_fn: Callable
                            ) -> Callable:
-    """Build a simulate_epoch from step + contacts_now (one lax.scan)."""
+    """Build a simulate_epoch from step + contacts_now (one lax.scan).
+
+    Returns ``(state, union, durations)`` — the union contact matrix plus
+    the per-pair steps-in-contact count the transfer budget is derived
+    from. Both accumulate inside the same scan, so measuring durations
+    costs no extra simulation pass.
+    """
 
     def simulate_epoch(state, key, cfg: MobilityConfig, seconds: float):
         n_steps = max(1, int(seconds / cfg.step_seconds))
         keys = jax.random.split(key, n_steps)
 
         def body(carry, k):
-            st, met = carry
+            st, met, dur = carry
             st = step_fn(st, k, cfg)
-            met = met | contacts_fn(st, cfg)
-            return (st, met), None
+            now = contacts_fn(st, cfg)
+            met = met | now
+            dur = dur + now.astype(jnp.int32)
+            return (st, met, dur), None
 
-        met0 = jnp.zeros(
-            jax.eval_shape(lambda s: contacts_fn(s, cfg), state).shape, bool)
-        (state, met), _ = jax.lax.scan(body, (state, met0), keys)
-        return state, met
+        shape = jax.eval_shape(lambda s: contacts_fn(s, cfg), state).shape
+        met0 = jnp.zeros(shape, bool)
+        dur0 = jnp.zeros(shape, jnp.int32)
+        (state, met, dur), _ = jax.lax.scan(body, (state, met0, dur0), keys)
+        return state, met, dur
 
     return simulate_epoch
 

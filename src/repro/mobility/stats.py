@@ -41,10 +41,22 @@ def encounter_stats(seq: jax.Array, step_seconds: float = 1.0
                     ) -> Dict[str, jax.Array]:
     """Summary statistics of a contact sequence [T, N, N] bool.
 
+    ``mean_contact_duration`` averages over *completed* contacts only
+    (those that ended with a falling edge inside the window). Contacts
+    still in progress at the final frame are right-censored — their true
+    length is unknown — so they are excluded from the mean and reported
+    separately instead of skewing it (the old behaviour put their steps
+    in the numerator without a matching completed encounter in the
+    denominator). This matters now that measured durations drive the
+    transfer budget.
+
     Returns (all device arrays):
       meeting_rate           — encounters per agent per second
       contact_fraction       — mean fraction of time a pair is in contact
-      mean_contact_duration  — seconds, averaged over encounters
+      mean_contact_duration  — seconds, averaged over completed contacts
+      completed_contacts     — # contacts that ended inside the window
+      censored_contacts      — # contacts still in progress at frame T-1
+      censored_contact_steps — total steps belonging to censored contacts
       mean_inter_contact     — seconds, averaged over interior gaps
       encounter_counts       — [N, N] per-pair encounter counts
       inter_contact_hist     — [T+1] gap-length histogram (steps)
@@ -63,24 +75,30 @@ def encounter_stats(seq: jax.Array, step_seconds: float = 1.0
 
     meeting_rate = total_enc / (N * T * step_seconds)
     contact_fraction = contact_steps.sum() / (T * jnp.maximum(off.sum(), 1))
-    mean_contact_duration = (contact_steps.sum() * step_seconds
-                             / jnp.maximum(total_enc, 1))
 
-    # inter-contact gaps: scan time carrying each pair's last falling edge
+    # one scan over time carrying, per pair: the last falling edge (for
+    # inter-contact gaps) and the current contact run length (for
+    # censoring-aware durations — a run is credited only when it ends)
     def body(carry, x):
-        last_end, hist = carry
-        s_t, e_t, t = x
+        last_end, hist, run, dur_sum, n_done = carry
+        seq_t, s_t, e_t, t = x
         valid = s_t & (last_end >= 0)
         gap = jnp.clip(t - last_end, 0, T)
         hist = hist.at[gap].add(valid.astype(jnp.int32))
         last_end = jnp.where(e_t, t, last_end)
-        return (last_end, hist), None
+        dur_sum = dur_sum + jnp.sum(jnp.where(e_t, run, 0))
+        n_done = n_done + jnp.sum(e_t.astype(jnp.int32))
+        run = jnp.where(seq_t, run + 1, 0)
+        return (last_end, hist, run, dur_sum, n_done), None
 
     last0 = jnp.full((N, N), -1, jnp.int32)
     hist0 = jnp.zeros((T + 1,), jnp.int32)
-    (_, hist), _ = jax.lax.scan(
-        body, (last0, hist0),
-        (starts, ends, jnp.arange(T, dtype=jnp.int32)))
+    run0 = jnp.zeros((N, N), jnp.int32)
+    (_, hist, run, dur_sum, n_done), _ = jax.lax.scan(
+        body, (last0, hist0, run0, jnp.int32(0), jnp.int32(0)),
+        (seq, starts, ends, jnp.arange(T, dtype=jnp.int32)))
+    mean_contact_duration = (dur_sum * step_seconds
+                             / jnp.maximum(n_done, 1))
     n_gaps = hist.sum()
     mean_inter_contact = (jnp.sum(hist * jnp.arange(T + 1)) * step_seconds
                           / jnp.maximum(n_gaps, 1))
@@ -89,6 +107,9 @@ def encounter_stats(seq: jax.Array, step_seconds: float = 1.0
         "meeting_rate": meeting_rate,
         "contact_fraction": contact_fraction,
         "mean_contact_duration": mean_contact_duration,
+        "completed_contacts": n_done,
+        "censored_contacts": jnp.sum((run > 0).astype(jnp.int32)),
+        "censored_contact_steps": jnp.sum(run),
         "mean_inter_contact": mean_inter_contact,
         "encounter_counts": encounter_counts,
         "inter_contact_hist": hist,
@@ -101,4 +122,5 @@ def summarize(stats: Dict[str, jax.Array]) -> str:
     return (f"meet_rate={float(stats['meeting_rate']):.4f}/s "
             f"contact_frac={float(stats['contact_fraction']):.4f} "
             f"dur={float(stats['mean_contact_duration']):.1f}s "
+            f"(censored={int(stats['censored_contacts'])}) "
             f"ict={float(stats['mean_inter_contact']):.1f}s")

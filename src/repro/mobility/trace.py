@@ -131,20 +131,25 @@ def contacts_now(state: TraceState, cfg: MobilityConfig) -> jax.Array:
 
 def simulate_epoch(state: TraceState, key, cfg: MobilityConfig,
                    seconds: float):
-    """Union the next ``frames`` schedule entries (read frame, then advance)."""
+    """Union + per-pair duration over the next ``frames`` schedule entries
+    (read frame, then advance)."""
     frames = cfg.trace_frames_per_epoch or max(
         1, int(seconds / cfg.step_seconds))
 
     def body(carry, _):
-        st, met = carry
-        met = met | contacts_now(st, cfg)
+        st, met, dur = carry
+        now = contacts_now(st, cfg)
+        met = met | now
+        dur = dur + now.astype(jnp.int32)
         st = step(st, None, cfg)
-        return (st, met), None
+        return (st, met, dur), None
 
     n = state.contacts.shape[1]
     met0 = jnp.zeros((n, n), bool)
-    (state, met), _ = jax.lax.scan(body, (state, met0), None, length=frames)
-    return state, met
+    dur0 = jnp.zeros((n, n), jnp.int32)
+    (state, met, dur), _ = jax.lax.scan(body, (state, met0, dur0), None,
+                                        length=frames)
+    return state, met, dur
 
 
 MODEL = register(MobilityModel(

@@ -94,11 +94,12 @@ class CachePolicy:
                                     # is accepted by every policy)
 
 
-def dedup_mask(origin, ts, pref=None):
-    """valid[i] = entry i is the best copy of its origin.
-
-    Best = max ts; ties broken by higher ``pref`` then lower index.
-    origin < 0 entries are invalid.
+def beats_matrix(origin, ts, pref=None):
+    """[i, j] = candidate j holds the same origin as i and wins the
+    freshest-copy ordering: newer ts, ties broken by higher ``pref`` then
+    lower index. The single source of the dedup tie-break — retention
+    (:func:`dedup_mask`) and the transfer-budget admission share it, so
+    the two stages can never disagree about which copy is "the" copy.
     """
     M = origin.shape[0]
     if pref is None:
@@ -109,8 +110,16 @@ def dedup_mask(origin, ts, pref=None):
     pref_j = (pref[None, :] > pref[:, None]) | (
         (pref[None, :] == pref[:, None])
         & (jnp.arange(M)[None, :] < jnp.arange(M)[:, None]))
-    beaten = same & (newer | (tie & pref_j))
-    return (origin >= 0) & ~jnp.any(beaten, axis=1)
+    return same & (newer | (tie & pref_j))
+
+
+def dedup_mask(origin, ts, pref=None):
+    """valid[i] = entry i is the best copy of its origin.
+
+    Best = max ts; ties broken by higher ``pref`` then lower index.
+    origin < 0 entries are invalid.
+    """
+    return (origin >= 0) & ~jnp.any(beats_matrix(origin, ts, pref), axis=1)
 
 
 def validate_context(policy: CachePolicy, ctx: PolicyContext) -> None:

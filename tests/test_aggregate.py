@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import cache as C
@@ -33,6 +34,7 @@ def test_aggregate_empty_cache_is_identity():
                                rtol=1e-6)
 
 
+@pytest.mark.slow
 @settings(max_examples=20, deadline=None)
 @given(C_=st.integers(1, 8), D=st.integers(1, 300), seed=st.integers(0, 99))
 def test_flat_kernel_matches_tree(C_, D, seed):

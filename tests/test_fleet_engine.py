@@ -97,6 +97,7 @@ def test_gather_winners_own_model_rows():
 # fused engine vs legacy loop: same seed -> same trajectory
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 @pytest.mark.parametrize("algorithm", ["cached", "dfl", "cfl"])
 @pytest.mark.parametrize("mobility", ["manhattan", "random_waypoint"])
 def test_fused_matches_legacy_trajectory(algorithm, mobility):
@@ -113,6 +114,7 @@ def test_fused_matches_legacy_trajectory(algorithm, mobility):
     assert legacy["epoch_traces"] == 1
 
 
+@pytest.mark.slow
 def test_fused_grouped_policy_and_random_partners():
     """Engine covers the group cache policy and the random partner-sample
     key discipline."""
@@ -139,13 +141,13 @@ def test_legacy_lr_change_does_not_retrace():
                                       group_slots=group_slots)
     key = jax.random.PRNGKey(3)
     _, k1, k2 = jax.random.split(key, 3)
-    mstate, met = mob_model.simulate_epoch(mstate, k1, cfg=mob_cfg,
-                                           seconds=cfg.dfl.epoch_seconds)
+    mstate, met, dur = mob_model.simulate_epoch(mstate, k1, cfg=mob_cfg,
+                                                seconds=cfg.dfl.epoch_seconds)
     partners = partners_from_contacts(met, cfg.max_partners)
-    state, _ = epoch_fn(state, partners, data, counts, k2, 0.1)
+    state, _ = epoch_fn(state, partners, dur, data, counts, k2, 0.1)
     assert counter["traces"] == 1
-    state, _ = epoch_fn(state, partners, data, counts, k2, 0.05)
-    state, _ = epoch_fn(state, partners, data, counts, k2, 0.025)
+    state, _ = epoch_fn(state, partners, dur, data, counts, k2, 0.05)
+    state, _ = epoch_fn(state, partners, dur, data, counts, k2, 0.025)
     assert counter["traces"] == 1          # ReduceLROnPlateau never retraces
 
 

@@ -5,6 +5,8 @@ import dataclasses
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # full experiment trajectories (minutes)
+
 from repro.configs.base import DFLConfig, MobilityConfig
 from repro.fl.experiment import ExperimentConfig, run_experiment
 

@@ -60,12 +60,20 @@ def test_band_restriction():
 
 def test_simulate_epoch_contact_union():
     state = mob.init_mobility(jax.random.PRNGKey(5), 16, CFG)
-    state2, met = mob.simulate_epoch(state, jax.random.PRNGKey(6), CFG, 30.0)
+    state2, met, dur = mob.simulate_epoch(state, jax.random.PRNGKey(6), CFG,
+                                          30.0)
     met = np.asarray(met)
+    dur = np.asarray(dur)
     assert (met == met.T).all()
+    # durations: symmetric step counts, bounded by the epoch length, and
+    # positive exactly where the union matrix saw a contact
+    assert (dur == dur.T).all()
+    assert dur.min() >= 0 and dur.max() <= 30
+    assert ((dur > 0) == met).all()
     # higher speed should produce at least as many contacts on average
     fast = MobilityConfig(grid_w=6, grid_h=9, speed=3 * CFG.speed)
-    _, met_fast = mob.simulate_epoch(state, jax.random.PRNGKey(6), fast, 30.0)
+    _, met_fast, _ = mob.simulate_epoch(state, jax.random.PRNGKey(6), fast,
+                                        30.0)
     assert np.asarray(met_fast).sum() >= met.sum() * 0.5  # stochastic slack
 
 

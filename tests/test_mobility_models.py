@@ -47,11 +47,16 @@ def test_epoch_contract(name, trace_path):
     model = registry.get_model(name)
     state = model.init(jax.random.PRNGKey(0), N, cfg)
     sim = jax.jit(lambda s, k: model.simulate_epoch(s, k, cfg, 30.0))
-    state2, met = sim(state, jax.random.PRNGKey(1))
+    state2, met, dur = sim(state, jax.random.PRNGKey(1))
     met = np.asarray(met)
     assert met.shape == (N, N) and met.dtype == bool
     assert (met == met.T).all()
     assert not met.diagonal().any()
+    dur = np.asarray(dur)
+    assert dur.shape == (N, N) and dur.dtype == np.int32
+    assert (dur == dur.T).all() and not dur.diagonal().any()
+    assert ((dur > 0) == met).all()          # in contact somewhere <=> dur>0
+    assert dur.max() <= 30                   # bounded by steps in the epoch
     pos = np.asarray(model.positions(state2, cfg))
     assert pos.shape == (N, 2) and np.isfinite(pos).all()
 
@@ -63,9 +68,11 @@ def test_epoch_deterministic(name, trace_path):
     out = []
     for _ in range(2):
         state = model.init(jax.random.PRNGKey(4), N, cfg)
-        _, met = model.simulate_epoch(state, jax.random.PRNGKey(5), cfg, 20.0)
-        out.append(np.asarray(met))
-    assert (out[0] == out[1]).all()
+        _, met, dur = model.simulate_epoch(state, jax.random.PRNGKey(5), cfg,
+                                           20.0)
+        out.append((np.asarray(met), np.asarray(dur)))
+    assert (out[0][0] == out[1][0]).all()
+    assert (out[0][1] == out[1][1]).all()
 
 
 @pytest.mark.parametrize("name", all_models())
@@ -121,10 +128,13 @@ def test_trace_replay_matches_schedule(trace_path):
                          trace_frames_per_epoch=10)
     model = registry.get_model("trace")
     state = model.init(jax.random.PRNGKey(0), N, cfg)
-    _, met1 = model.simulate_epoch(state, None, cfg, 0.0)
-    expect = seq[:10].any(0)
-    expect = (expect | expect.T) & ~np.eye(N, dtype=bool)
+    _, met1, dur1 = model.simulate_epoch(state, None, cfg, 0.0)
+    sym = seq[:10] | seq[:10].transpose(0, 2, 1)
+    sym = sym & ~np.eye(N, dtype=bool)[None]
+    expect = sym.any(0)
     assert (np.asarray(met1) == expect).all()
+    # duration = frames-in-contact, straight off the schedule
+    assert (np.asarray(dur1) == sym.sum(0)).all()
 
 
 def test_trace_edge_list_rejects_bad_indices():

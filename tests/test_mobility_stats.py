@@ -24,8 +24,37 @@ def test_single_pair_counts_and_durations():
     assert counts.sum() == 4            # both triangles
     # meeting rate: 4 encounter-endpoints / (3 agents * 6 steps * 2 s)
     assert np.isclose(float(s["meeting_rate"]), 4 / (3 * 6 * 2.0))
-    # mean duration: 3 contact steps * 2 pairs * 2 s / 4 encounters = 3 s
-    assert np.isclose(float(s["mean_contact_duration"]), 3.0)
+    # mean duration over COMPLETED contacts only: the t=1..2 contact ended
+    # (2 steps * 2 s); the t=5 contact is right-censored and excluded
+    assert np.isclose(float(s["mean_contact_duration"]), 4.0)
+    assert int(s["completed_contacts"]) == 2       # one per triangle
+    assert int(s["censored_contacts"]) == 2
+    assert int(s["censored_contact_steps"]) == 2
+
+
+def test_right_censored_contact_excluded_from_duration():
+    """Regression: a contact spanning the window edge must not skew the
+    mean (the old code put its steps in the numerator while the
+    denominator only counted started encounters)."""
+    # single contact starting at t=2 and still active at the last frame
+    seq = pair_trace([0, 0, 1, 1, 1])
+    s = stats.encounter_stats(seq)
+    assert float(s["mean_contact_duration"]) == 0.0   # nothing completed
+    assert int(s["completed_contacts"]) == 0
+    assert int(s["censored_contacts"]) == 2           # both triangles
+    assert int(s["censored_contact_steps"]) == 6      # 3 steps x 2
+    # the encounter itself still counts (rising edge in-window)
+    assert int(np.asarray(s["encounter_counts"])[0, 1]) == 1
+
+
+def test_completed_and_censored_mix():
+    # one completed 2-step contact, then a censored 2-step contact
+    seq = pair_trace([1, 1, 0, 0, 1, 1])
+    s = stats.encounter_stats(seq, step_seconds=1.0)
+    assert np.isclose(float(s["mean_contact_duration"]), 2.0)
+    assert int(s["completed_contacts"]) == 2          # both triangles
+    assert int(s["censored_contacts"]) == 2
+    assert int(s["censored_contact_steps"]) == 4
 
 
 def test_inter_contact_gap():

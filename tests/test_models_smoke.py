@@ -86,6 +86,7 @@ def test_dfl_round_on_arch(arch, key):
         assert bool(jnp.all(jnp.isfinite(leaf)))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["internlm2-1.8b", "mixtral-8x7b",
                                   "mamba2-780m", "hymba-1.5b"])
 def test_loss_decreases_on_tiny_data(arch, key):

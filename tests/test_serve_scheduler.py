@@ -33,6 +33,7 @@ def greedy_reference(params, cfg, prompt, n_tokens):
     return out
 
 
+@pytest.mark.slow
 def test_wave_matches_single_request(setup):
     cfg, params = setup
     rng = np.random.default_rng(0)

@@ -20,6 +20,7 @@ from repro.optim.sgd import sgd_init, sgd_update
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
+@pytest.mark.slow
 def test_pod_multi_agent_round(key):
     """Multi-agent Cached-DFL round (the multi-pod step) on CPU."""
     cfg = R.get_smoke_config("internlm2-1.8b")

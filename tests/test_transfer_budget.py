@@ -1,0 +1,414 @@
+"""Contact-duration-limited transfers: the per-link bandwidth budget on
+``gossip.exchange`` plus the correctness fixes it depends on
+(duplicate-partner dedup, explicit policy-context epoch)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import DFLConfig, MobilityConfig
+from repro.core import cache as cache_lib
+from repro.core import gossip
+from repro.fl.experiment import (ExperimentConfig, build_fleet, make_engine,
+                                 run_experiment)
+from repro.models import cnn as cnn_lib
+from repro.policies import registry as policy_registry
+from repro.policies.base import CachePolicy
+
+
+def fleet_params(N):
+    return {"w": jnp.arange(N, dtype=jnp.float32)[:, None]
+            * jnp.ones((N, 4))}
+
+
+def empty_fleet_cache(N, cap):
+    c = cache_lib.init_cache({"w": jnp.zeros((4,))}, cap)
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (N,) + x.shape).copy(), c)
+
+
+def populated_fleet(N, cap, epochs=3, tau_max=100, seed=0):
+    """Run a few unbudgeted exchanges so caches hold non-trivial state."""
+    params = fleet_params(N)
+    cache = empty_fleet_cache(N, cap)
+    samples = jnp.ones((N,)) * 2.0
+    group = jnp.arange(N, dtype=jnp.int32) % 2
+    key = jax.random.PRNGKey(seed)
+    from repro.mobility.base import partners_from_contacts
+    for t in range(epochs):
+        key, k = jax.random.split(key)
+        met = jax.random.bernoulli(k, 0.5, (N, N))
+        met = met & met.T & ~jnp.eye(N, dtype=bool)
+        partners = partners_from_contacts(met, 2)
+        cache = gossip.exchange(params, cache, partners, t, samples, group,
+                                tau_max=tau_max, policy="lru")
+    return params, cache, samples, group
+
+
+def assert_caches_equal(a, b):
+    for x, y in zip(jax.tree_util.tree_leaves(a),
+                    jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# budget semantics on a single exchange
+# ---------------------------------------------------------------------------
+
+def test_budget_zero_is_no_exchange():
+    """budget=0: caches only age/evict, exactly as if nobody met anyone."""
+    N, cap = 5, 3
+    params, cache, samples, group = populated_fleet(N, cap)
+    partners = jnp.asarray([[1, 2], [0, -1], [0, 3], [2, 4], [3, -1]],
+                           jnp.int32)
+    none = jnp.full_like(partners, -1)
+    out = gossip.exchange(params, cache, partners, 5, samples, group,
+                          tau_max=100, policy="lru", transfer_budget=0.0)
+    ref = gossip.exchange(params, cache, none, 5, samples, group,
+                          tau_max=100, policy="lru")
+    assert_caches_equal(out, ref)
+
+
+def test_budget_unlimited_bitexact_all_policies():
+    """budget=inf must be bit-exact with the unbudgeted exchange for every
+    registered policy (the admission mask degenerates to all-True)."""
+    N, cap = 6, 3
+    params, cache, samples, _ = populated_fleet(N, cap)
+    group = jnp.arange(N, dtype=jnp.int32) % 3
+    partners = jnp.asarray([[1, 2], [0, 3], [0, 5], [1, -1], [5, -1],
+                            [2, 4]], jnp.int32)
+    durations = jax.random.randint(jax.random.PRNGKey(9), (N, N), 0, 30)
+    durations = (durations + durations.T).astype(jnp.int32)
+    for name in policy_registry.available():
+        pol = policy_registry.get_policy(name)
+        kw = dict(tau_max=100, policy=name,
+                  group_slots=jnp.asarray([1, 1, 1], jnp.int32),
+                  rng=jax.random.PRNGKey(1),
+                  encounters=jnp.ones((N, N), jnp.float32),
+                  policy_params={"w_encounter": 0.5} if name == "priority"
+                  else None)
+        ref = gossip.exchange(params, cache, partners, 5, samples, group,
+                              **kw)
+        out = gossip.exchange(params, cache, partners, 5, samples, group,
+                              transfer_budget=float("inf"),
+                              durations=durations,
+                              link_entries_per_step=1e6, **kw)
+        assert_caches_equal(out, ref)
+
+
+def test_admission_respects_policy_priority():
+    """On a saturated link the policy's own priority picks the entries:
+    under lru the partner's fresh model (ts=t) and freshest cache rows."""
+    N, cap = 3, 3
+    params = fleet_params(N)
+    cache = empty_fleet_cache(N, cap)
+    # partner 1 holds copies of origin 2 (ts=4) and nothing else; give it a
+    # second, staler entry from origin 0 (ts=1)
+    cache = dataclasses.replace(
+        cache,
+        ts=cache.ts.at[1, 0].set(4).at[1, 1].set(1),
+        origin=cache.origin.at[1, 0].set(2).at[1, 1].set(0),
+        samples=cache.samples.at[1, 0].set(1.0).at[1, 1].set(1.0),
+        group=cache.group.at[1, 0].set(0).at[1, 1].set(0),
+        arrival=cache.arrival.at[1, 0].set(4).at[1, 1].set(1))
+    partners = jnp.asarray([[1], [-1], [-1]], jnp.int32)
+    samples = jnp.ones((N,))
+    group = jnp.zeros((N,), jnp.int32)
+    out = gossip.exchange(params, cache, partners, 5, samples, group,
+                          tau_max=100, policy="lru", transfer_budget=2.0)
+    origins = set(np.asarray(out.origin[0]).tolist()) - {-1}
+    # cap 2 admits the fresh model of agent 1 (ts=5) and origin 2 (ts=4);
+    # origin 0 (ts=1) is cut
+    assert origins == {1, 2}
+    out3 = gossip.exchange(params, cache, partners, 5, samples, group,
+                           tau_max=100, policy="lru", transfer_budget=3.0)
+    assert set(np.asarray(out3.origin[0]).tolist()) - {-1} == {0, 1, 2}
+
+
+def test_duration_derived_cap():
+    """link_entries_per_step converts measured contact steps into the cap."""
+    N, cap = 3, 3
+    params = fleet_params(N)
+    cache = empty_fleet_cache(N, cap)
+    cache = dataclasses.replace(
+        cache,
+        ts=cache.ts.at[1, 0].set(4),
+        origin=cache.origin.at[1, 0].set(2),
+        samples=cache.samples.at[1, 0].set(1.0),
+        group=cache.group.at[1, 0].set(0),
+        arrival=cache.arrival.at[1, 0].set(4))
+    partners = jnp.asarray([[1], [-1], [-1]], jnp.int32)
+    samples = jnp.ones((N,))
+    group = jnp.zeros((N,), jnp.int32)
+    durations = jnp.zeros((N, N), jnp.int32).at[0, 1].set(10).at[1, 0].set(10)
+    # 10 steps * 0.1 entries/step -> cap 1: only the fresh model crosses
+    out = gossip.exchange(params, cache, partners, 5, samples, group,
+                          tau_max=100, policy="lru", durations=durations,
+                          link_entries_per_step=0.1)
+    assert set(np.asarray(out.origin[0]).tolist()) - {-1} == {1}
+    # 10 steps * 0.2 entries/step -> cap 2: the cached copy rides along
+    out = gossip.exchange(params, cache, partners, 5, samples, group,
+                          tau_max=100, policy="lru", durations=durations,
+                          link_entries_per_step=0.2)
+    assert set(np.asarray(out.origin[0]).tolist()) - {-1} == {1, 2}
+    # a pair with zero measured contact time moves nothing
+    out = gossip.exchange(params, cache, partners, 5, samples, group,
+                          tau_max=100, policy="lru",
+                          durations=jnp.zeros((N, N), jnp.int32),
+                          link_entries_per_step=0.2)
+    assert int(jnp.sum(out.valid[0])) == 0
+
+
+def test_budget_not_wasted_on_unretainable_entries():
+    """Regression: entries the policy's keep mask rejects (here a group
+    with zero slots) must not consume the link budget — the admissible
+    entry still crosses."""
+    N, cap = 3, 2
+    params = fleet_params(N)
+    cache = empty_fleet_cache(N, cap)
+    # partner 1 (group 1, zero slots) carries a cached group-0 model
+    cache = dataclasses.replace(
+        cache,
+        ts=cache.ts.at[1, 0].set(1),
+        origin=cache.origin.at[1, 0].set(2),
+        samples=cache.samples.at[1, 0].set(1.0),
+        group=cache.group.at[1, 0].set(0),
+        arrival=cache.arrival.at[1, 0].set(1))
+    partners = jnp.asarray([[1], [-1], [-1]], jnp.int32)
+    samples = jnp.ones((N,))
+    group = jnp.asarray([0, 1, 0], jnp.int32)
+    group_slots = jnp.asarray([2, 0], jnp.int32)
+    out = gossip.exchange(params, cache, partners, 5, samples, group,
+                          tau_max=100, policy="group",
+                          group_slots=group_slots, transfer_budget=1.0)
+    # partner's own fresh model is group-1 (keep=False, zero slots): it
+    # must not burn the single budget slot; the group-0 entry gets it
+    assert set(np.asarray(out.origin[0]).tolist()) - {-1} == {2}
+
+
+def test_budget_on_non_cached_algorithm_rejected():
+    """A budget knob on dfl/cfl would silently be a no-op — fail fast at
+    config resolution instead, naming the fields."""
+    from repro.fl.experiment import resolve_policy_setup
+    for algo in ("dfl", "cfl"):
+        cfg = ExperimentConfig(
+            algorithm=algo, dfl=DFLConfig(transfer_budget=2.0))
+        with pytest.raises(ValueError, match="transfer_budget"):
+            resolve_policy_setup(cfg)
+    # disabled knobs stay fine on every algorithm
+    resolve_policy_setup(ExperimentConfig(algorithm="dfl"))
+
+
+def test_negative_budget_means_unlimited():
+    """Regression: a negative transfer_budget is the 'unlimited' sentinel;
+    combined with a duration cap it must not flatten caps to -1."""
+    dfl = DFLConfig(transfer_budget=-1.0, link_entries_per_step=0.5)
+    assert dfl.resolved_transfer_budget is None
+    assert dfl.transfer_budget_enabled          # duration cap still active
+    assert DFLConfig(transfer_budget=-1.0).resolved_transfer_budget is None
+    assert not DFLConfig(transfer_budget=-1.0).transfer_budget_enabled
+    assert DFLConfig(transfer_budget=3.0).resolved_transfer_budget == 3.0
+    assert DFLConfig().resolved_transfer_budget is None  # default inf
+
+
+def test_stale_copy_on_idle_link_survives_saturated_link():
+    """Regression: when the freshest copy of an origin is cut by its own
+    link's cap, a staler copy riding another link with idle budget must
+    still arrive (per-link dedup, no cross-link forfeit)."""
+    N, cap = 4, 3
+    params = fleet_params(N)
+    cache = empty_fleet_cache(N, cap)
+    # partner 1 carries origin 3 @ ts=4, partner 2 carries origin 3 @ ts=2
+    cache = dataclasses.replace(
+        cache,
+        ts=cache.ts.at[1, 0].set(4).at[2, 0].set(2),
+        origin=cache.origin.at[1, 0].set(3).at[2, 0].set(3),
+        samples=cache.samples.at[1, 0].set(1.0).at[2, 0].set(1.0),
+        group=cache.group.at[1, 0].set(0).at[2, 0].set(0),
+        arrival=cache.arrival.at[1, 0].set(4).at[2, 0].set(2))
+    partners = jnp.asarray([[1, 2], [-1, -1], [-1, -1], [-1, -1]], jnp.int32)
+    samples = jnp.ones((N,))
+    group = jnp.zeros((N,), jnp.int32)
+    # measured durations -> link caps: 1 entry via partner 1, 2 via partner 2
+    durations = jnp.zeros((N, N), jnp.int32)
+    durations = durations.at[0, 1].set(10).at[1, 0].set(10)
+    durations = durations.at[0, 2].set(20).at[2, 0].set(20)
+    out = gossip.exchange(params, cache, partners, 5, samples, group,
+                          tau_max=100, policy="lru", durations=durations,
+                          link_entries_per_step=0.1)
+    origins = set(np.asarray(out.origin[0]).tolist()) - {-1}
+    # link 1 (cap 1) carries only partner 1's fresh model; origin 3 still
+    # arrives as the ts=2 copy over link 2 (cap 2)
+    assert origins == {1, 2, 3}
+    idx3 = int(np.argwhere(np.asarray(out.origin[0]) == 3)[0, 0])
+    assert int(out.ts[0, idx3]) == 2
+
+
+def test_duplicate_partner_does_not_double_charge():
+    """A repeated partner id in one row must behave exactly like a single
+    occurrence — same candidates, one budget charge (bugfix)."""
+    N, cap = 4, 3
+    params, cache, samples, group = populated_fleet(N, cap)
+    dup = jnp.asarray([[1, 1], [0, -1], [-1, -1], [-1, -1]], jnp.int32)
+    single = jnp.asarray([[1, -1], [0, -1], [-1, -1], [-1, -1]], jnp.int32)
+    for kw in (dict(), dict(transfer_budget=1.0), dict(transfer_budget=2.0)):
+        out = gossip.exchange(params, cache, dup, 5, samples, group,
+                              tau_max=100, policy="lru", **kw)
+        ref = gossip.exchange(params, cache, single, 5, samples, group,
+                              tau_max=100, policy="lru", **kw)
+        assert_caches_equal(out, ref)
+
+
+def test_count_encounters_dedups_partners():
+    """Encounter counts use the same duplicate-partner mask the exchange
+    does, so mobility-aware scores see the realized contacts one-for-one."""
+    from repro.core import rounds as rounds_lib
+    enc = jnp.zeros((3, 3), jnp.float32)
+    partners = jnp.asarray([[1, 1], [0, -1], [-1, -1]], jnp.int32)
+    out = np.asarray(rounds_lib.count_encounters(enc, partners))
+    assert out[0, 1] == 1.0 and out[1, 0] == 1.0
+    assert out.sum() == 2.0
+
+
+def test_link_caps_combination():
+    partners = jnp.asarray([[1, 2], [0, -1], [0, 1]], jnp.int32)
+    durations = jnp.asarray([[0, 7, 2], [7, 0, 0], [2, 0, 0]], jnp.int32)
+    caps = gossip.link_caps(partners, durations, None, 0.5)
+    np.testing.assert_array_equal(np.asarray(caps),
+                                  [[3.0, 1.0], [3.0, 3.0], [1.0, 0.0]])
+    caps = gossip.link_caps(partners, durations, 2.0, 0.5)
+    np.testing.assert_array_equal(np.asarray(caps),
+                                  [[2.0, 1.0], [2.0, 2.0], [1.0, 0.0]])
+    caps = gossip.link_caps(partners, None, 4.2, 0.0)
+    np.testing.assert_array_equal(np.asarray(caps), np.full((3, 2), 4.0))
+    # negative = unlimited sentinel, honored even for traced per-call caps
+    # that bypass DFLConfig.resolved_transfer_budget
+    caps = gossip.link_caps(partners, None, -1.0, 0.0)
+    assert np.isinf(np.asarray(caps)).all()
+    caps = gossip.link_caps(partners, durations, jnp.float32(-3.0), 0.5)
+    np.testing.assert_array_equal(np.asarray(caps),
+                                  [[3.0, 1.0], [3.0, 3.0], [1.0, 0.0]])
+    with pytest.raises(ValueError):
+        gossip.link_caps(partners, None, None, 0.5)
+
+
+# ---------------------------------------------------------------------------
+# engine threading
+# ---------------------------------------------------------------------------
+
+ENGINE_CFG = dict(
+    dfl=DFLConfig(num_agents=6, cache_size=3, tau_max=10, local_steps=2,
+                  lr=0.1, batch_size=16, epoch_seconds=30.0,
+                  transfer_budget=2.0),
+    mobility=MobilityConfig(grid_w=4, grid_h=6),
+    epochs=4, eval_every=2, n_train=400, n_test=100, image_hw=12,
+    lr_plateau=False,
+)
+
+
+def test_budget_sweep_single_trace():
+    """The fused engine compiles once per (algorithm, shape): sweeping the
+    traced transfer budget must not retrace."""
+    cfg = ExperimentConfig(algorithm="cached", distribution="noniid",
+                           **ENGINE_CFG)
+    (model_cfg, state, data, counts, _tb, mstate,
+     group_slots, mob_model, mob_cfg) = build_fleet(cfg)
+    loss_fn = lambda p, b: cnn_lib.loss_fn(p, model_cfg, b["images"],
+                                           b["labels"])
+    eng = make_engine(cfg, loss_fn=loss_fn, mob_model=mob_model,
+                      mob_cfg=mob_cfg, group_slots=group_slots, chunk=2)
+    key = jax.random.PRNGKey(3)
+    for budget in (0.0, 1.0, 3.0, float("inf")):
+        state, mstate, key, losses = eng.run(
+            state, mstate, key, 0.1, data, counts, 2, jnp.float32(budget))
+        assert np.isfinite(np.asarray(losses)).all()
+    assert eng.traces == 1
+
+
+@pytest.mark.slow
+def test_fused_matches_legacy_with_budget():
+    """Both drivers thread durations + budget identically."""
+    dfl = dataclasses.replace(ENGINE_CFG["dfl"], transfer_budget=1.0,
+                              link_entries_per_step=0.5)
+    cfg = ExperimentConfig(algorithm="cached", distribution="noniid",
+                           **{**ENGINE_CFG, "dfl": dfl})
+    fused = run_experiment(cfg, engine="fused", record_cache_stats=True)
+    legacy = run_experiment(cfg, engine="legacy", record_cache_stats=True)
+    np.testing.assert_allclose(fused["acc"], legacy["acc"], atol=2e-3)
+    np.testing.assert_allclose(fused["cache_num"], legacy["cache_num"],
+                               atol=1e-5)
+    assert fused["epoch_traces"] == 1 and legacy["epoch_traces"] == 1
+
+
+@pytest.mark.slow
+def test_unbudgeted_run_unchanged_by_budget_inf():
+    """A run with budget knobs disabled and one with an effectively
+    unlimited cap produce the same trajectory end to end."""
+    cfg = ExperimentConfig(algorithm="cached", distribution="noniid",
+                           **{**ENGINE_CFG,
+                              "dfl": dataclasses.replace(
+                                  ENGINE_CFG["dfl"],
+                                  transfer_budget=float("inf"))})
+    assert not cfg.dfl.transfer_budget_enabled
+    base = run_experiment(cfg, engine="fused")
+    big = dataclasses.replace(ENGINE_CFG["dfl"], transfer_budget=1e9)
+    cfg_b = ExperimentConfig(algorithm="cached", distribution="noniid",
+                             **{**ENGINE_CFG, "dfl": big})
+    assert cfg_b.dfl.transfer_budget_enabled
+    budgeted = run_experiment(cfg_b, engine="fused")
+    np.testing.assert_allclose(base["acc"], budgeted["acc"], atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# legacy shim epoch clock (ctx.t) and the pod single-insert gate
+# ---------------------------------------------------------------------------
+
+def test_run_policy_threads_explicit_t():
+    """_run_policy must hand the policy the real epoch, not the candidate
+    max (which is -1 for an all-empty set)."""
+    seen = {}
+
+    def capture(meta, ctx, valid):
+        seen["t"] = int(ctx.t)
+        return meta.ts, valid
+
+    policy_registry.register(CachePolicy("_capture_t", capture, paper=False))
+    try:
+        empty = jnp.full((4,), -1, jnp.int32)
+        zeros = jnp.zeros((4,), jnp.float32)
+        cache_lib._run_policy("_capture_t", empty, empty, zeros, empty,
+                              empty, 2, t=7)
+        assert seen["t"] == 7
+        # fallback without t: floored at 0, never the all-empty sentinel -1
+        cache_lib._run_policy("_capture_t", empty, empty, zeros, empty,
+                              empty, 2)
+        assert seen["t"] == 0
+    finally:
+        policy_registry._REGISTRY.pop("_capture_t", None)
+
+
+def test_select_lru_accepts_epoch():
+    origin = jnp.asarray([0, 1, -1], jnp.int32)
+    ts = jnp.asarray([2, 4, -1], jnp.int32)
+    z = jnp.zeros((3,), jnp.float32)
+    g = jnp.zeros((3,), jnp.int32)
+    arr = jnp.asarray([2, 4, -1], jnp.int32)
+    sel_t, meta_t = cache_lib.select_lru(origin, ts, z, g, arr, 2, t=9)
+    sel, meta = cache_lib.select_lru(origin, ts, z, g, arr, 2)
+    # lru ignores the clock: same retention either way, but both accept it
+    np.testing.assert_array_equal(np.asarray(sel_t), np.asarray(sel))
+
+
+def test_insert_budget_gate():
+    cache = cache_lib.init_cache({"w": jnp.zeros((4,))}, 2)
+    params = {"w": jnp.ones((4,))}
+    out = cache_lib.insert(cache, params, 3, 1, 5.0, 0, tau_max=10,
+                           transfer_budget=0.4)
+    assert int(jnp.sum(out.valid)) == 0          # contact too short
+    out = cache_lib.insert(cache, params, 3, 1, 5.0, 0, tau_max=10,
+                           transfer_budget=1.0)
+    assert int(jnp.sum(out.valid)) == 1
+    out_ref = cache_lib.insert(cache, params, 3, 1, 5.0, 0, tau_max=10)
+    assert_caches_equal(out, out_ref)

@@ -1,10 +1,11 @@
 """Scenario smoke gate: every registered mobility model × {cached, dfl},
-plus every registered cache policy × {manhattan, trace}.
+every registered cache policy × {manhattan, trace}, plus
+bandwidth-budget-limited exchanges (flat and duration-derived caps).
 
 Runs 2 tiny epochs of the full experiment loop per combination and fails
 (non-zero exit) on NaN accuracy, shape errors, or exceptions — so a
-mobility/scenario/policy regression is caught in seconds without the full
-benchmark suite.
+mobility/scenario/policy/budget regression is caught in seconds without
+the full benchmark suite.
 
     PYTHONPATH=src python tools/check_scenarios.py
 """
@@ -30,6 +31,15 @@ from repro.policies import registry as policy_registry  # noqa: E402
 N_AGENTS = 6
 ALGORITHMS = ("cached", "dfl")
 POLICY_MOBILITIES = ("manhattan", "trace")
+# transfer-budget-limited exchanges: (mobility, policy, budget knobs)
+BUDGET_CONFIGS = (
+    ("manhattan", "lru", dict(transfer_budget=0.0)),
+    ("manhattan", "lru", dict(transfer_budget=2.0)),
+    ("manhattan", "lru", dict(link_entries_per_step=0.3)),
+    ("trace", "mobility_aware", dict(transfer_budget=1.0)),
+    ("trace", "group", dict(transfer_budget=2.0,
+                            link_entries_per_step=0.5)),
+)
 
 
 def tiny_mobility(name: str, trace_path: str) -> MobilityConfig:
@@ -68,7 +78,8 @@ def check(name: str, algorithm: str, trace_path: str) -> str | None:
     return _run(cfg)
 
 
-def check_policy(policy: str, mob_name: str, trace_path: str) -> str | None:
+def check_policy(policy: str, mob_name: str, trace_path: str,
+                 budget_knobs: dict | None = None) -> str | None:
     """Smoke one registered cache policy through the cached algorithm."""
     grouped = policy_registry.get_policy(policy).needs_group_slots
     cfg = ExperimentConfig(
@@ -76,7 +87,8 @@ def check_policy(policy: str, mob_name: str, trace_path: str) -> str | None:
         distribution="grouped" if grouped else "noniid",
         num_groups=3,
         dfl=DFLConfig(num_agents=N_AGENTS, cache_size=3, local_steps=2,
-                      batch_size=16, epoch_seconds=10.0, policy=policy),
+                      batch_size=16, epoch_seconds=10.0, policy=policy,
+                      **(budget_knobs or {})),
         mobility=tiny_mobility(mob_name, trace_path),
         epochs=2, n_train=300, n_test=60, image_hw=8,
         lr_plateau=False, partner_sample="random")
@@ -114,6 +126,20 @@ def main() -> int:
             total += 1
             print(f"{policy:>18} × {mob_name:<9} {status} "
                   f"[{time.time() - t0:.1f}s]")
+    for mob_name, policy, knobs in BUDGET_CONFIGS:
+        t0 = time.time()
+        try:
+            err = check_policy(policy, mob_name, trace_path,
+                               budget_knobs=knobs)
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            err = f"{type(e).__name__}: {e}"
+        status = "PASS" if err is None else f"FAIL ({err})"
+        failures += err is not None
+        total += 1
+        label = ",".join(f"{k}={v}" for k, v in knobs.items())
+        print(f"{policy:>18} × {mob_name:<9} budget[{label}] {status} "
+              f"[{time.time() - t0:.1f}s]")
     print(f"{failures} failure(s) across {total} scenarios")
     return 1 if failures else 0
 
