@@ -1,24 +1,26 @@
 """Paper contribution #3: "design and compare different model caching
-algorithms" — generalized into a full policy study.
+algorithms" — generalized into a full policy study on the sweep API.
 
-Sweeps EVERY registered cache policy (``repro.policies.registry``) across
-mobility models — same fleet, same data — and emits ``BENCH_policies.json``
-with per-combination best accuracy, cache occupancy/staleness, and
-epoch wall-time.
+One ``api.sweep`` grid covers EVERY registered cache policy
+(``repro.policies.registry``) × mobility models — same fleet, same data —
+and ``SweepResult.write_bench`` emits ``BENCH_policies.json`` (shared
+schema: config hash, per-cell metrics, engine/retrace accounting) with
+per-combination best accuracy, cache occupancy/staleness and epoch
+wall-time.
 
 Expectation from the paper's design rationale: LRU (freshest-trained
 models) ≥ FIFO ≥ Random under non-iid data, because staleness directly
 enters the convergence bound (Theorem 4). The beyond-paper policies
 (mobility_aware / staleness_weighted / priority) probe the
 distribution-aware caching direction of arXiv:2505.18866.
-"""
-import dataclasses
-import json
-import os
 
-from benchmarks.common import BASE, FAST, emit, run
+Run:  PYTHONPATH=src python -m benchmarks.bench_cache_policies
+"""
+from repro import api
 from repro.configs.base import MobilityConfig
 from repro.policies import registry as policy_registry
+
+from benchmarks.common import FAST, base_scenario, bench_out, emit
 
 MOBILITIES = {
     "manhattan": MobilityConfig(grid_w=8, grid_h=16),
@@ -28,51 +30,45 @@ MOBILITIES = {
                                 area_w=1500.0, area_h=1500.0,
                                 community_radius=200.0),
 }
-OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_policies.json")
+OUT = bench_out("BENCH_policies.json")
+
+
+def adjust(overrides):
+    """Group-slot policies need the grouped distribution (per-cell)."""
+    pol = policy_registry.get_policy(overrides["dfl.policy"])
+    return {"distribution": "grouped"} if pol.needs_group_slots else {}
 
 
 def main():
     lines = []
-    results = {}
-    mobilities = (("manhattan",) if FAST else tuple(MOBILITIES))
-    for policy_name in policy_registry.available():
-        pol = policy_registry.get_policy(policy_name)
-        for mob_name in mobilities:
-            dfl = dataclasses.replace(
-                BASE["dfl"], policy=policy_name, num_agents=12,
-                cache_size=6, epoch_seconds=30.0, tau_max=20)
-            dist = "grouped" if pol.needs_group_slots else "noniid"
-            hist = run(algorithm="cached", distribution=dist, seed=8,
-                       dfl=dfl, mobility=MOBILITIES[mob_name],
-                       epochs=BASE["epochs"], max_partners=3)
-            us = hist["wall_s"] / max(len(hist["epoch"]), 1) * 1e6
-            results[f"{policy_name}/{mob_name}"] = {
-                "policy": policy_name,
-                "mobility": mob_name,
-                "paper": pol.paper,
-                "distribution": dist,
-                "best_acc": hist["best_acc"],
-                "final_acc": hist["final_acc"],
-                "cache_num": (hist["cache_num"][-1]
-                              if hist["cache_num"] else None),
-                "cache_age": (hist["cache_age"][-1]
-                              if hist["cache_age"] else None),
-                "epoch_us": us,
-                "traces": hist["epoch_traces"],
-            }
-            lines.append(emit(f"policies_{policy_name}_{mob_name}", us,
-                              f"best_acc={hist['best_acc']:.4f}"))
-    with open(OUT, "w") as f:
-        json.dump({"fast": FAST, "results": results}, f, indent=1,
-                  sort_keys=True)
+    base = base_scenario(seed=8, max_partners=3).with_overrides({
+        "dfl.num_agents": 12, "dfl.cache_size": 6,
+        "dfl.epoch_seconds": 30.0, "dfl.tau_max": 20})
+    mobilities = ({"manhattan": MOBILITIES["manhattan"]} if FAST
+                  else MOBILITIES)
+    sw = api.sweep(base, {"dfl.policy": policy_registry.available(),
+                          "mobility": list(mobilities.values())},
+                   adjust=adjust)
     by_pol = {}
-    for r in results.values():
-        by_pol.setdefault(r["policy"], []).append(r["best_acc"])
+    for cell in sw.cells:
+        policy = cell.overrides["dfl.policy"]
+        mob = cell.result.scenario.experiment.mobility.model
+        us = (cell.result.wall_s / max(len(cell.result.epoch), 1)) * 1e6
+        by_pol.setdefault(policy, []).append(cell.result.best_acc)
+        lines.append(emit(f"policies_{policy}_{mob}", us,
+                          f"best_acc={cell.result.best_acc:.4f}"))
     mean = {p: sum(a) / len(a) for p, a in by_pol.items()}
-    lines.append(emit(
-        "policies_summary", 0.0,
-        ";".join(f"{p}={mean[p]:.3f}" for p in sorted(mean))
-        + f";lru_ge_random={mean['lru'] >= mean['random'] - 0.03}"))
+    summary = (";".join(f"{p}={mean[p]:.3f}" for p in sorted(mean))
+               + f";lru_ge_random={mean['lru'] >= mean['random'] - 0.03}")
+    sw.write_bench(OUT, name="cache_policies", fast=FAST,
+                   extra={"mean_best_acc_by_policy": mean,
+                          "lru_ge_random":
+                          bool(mean["lru"] >= mean["random"] - 0.03),
+                          "papers": {p: policy_registry.get_policy(p).paper
+                                     for p in policy_registry.available()}})
+    lines.append(emit("policies_summary", 0.0, summary))
+    lines.append(emit("policies_retraces", 0.0,
+                      f"engines={sw.num_engines};retraces={sw.retraces}"))
     return lines
 
 

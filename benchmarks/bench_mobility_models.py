@@ -4,20 +4,25 @@ The paper's convergence argument hinges on mobility statistics (meeting
 rate, inter-contact time), not on the Manhattan map itself. This
 benchmark runs the same Cached-DFL fleet under every registered mobility
 model — grid, random waypoint, Lévy walk, community/RPGM, and a synthetic
-contact-trace replay — and reports best accuracy next to the measured
-encounter statistics, making the mobility→convergence coupling visible.
+contact-trace replay — as one ``api.sweep`` over the mobility axis, and
+reports best accuracy next to the measured encounter statistics, making
+the mobility→convergence coupling visible. Emits
+``BENCH_mobility_models.json`` via the shared ``write_bench`` schema.
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_mobility_models
 """
-import dataclasses
 import os
 import tempfile
 
 import jax
 import numpy as np
 
-from benchmarks.common import BASE, emit, run
+from repro import api
 from repro.configs.base import MobilityConfig
 from repro.mobility import registry, stats
 from repro.mobility import trace as trace_lib
+
+from benchmarks.common import FAST, base_scenario, bench_out, emit
 
 N_AGENTS = 10
 EPOCH_S = 30.0
@@ -32,6 +37,7 @@ MODEL_CFGS = {
                                 area_h=1000.0, num_bands=3,
                                 community_radius=120.0),
 }
+OUT = bench_out("BENCH_mobility_models.json")
 
 
 def synthetic_trace(path: str, n: int = N_AGENTS, T: int = 240,
@@ -56,22 +62,27 @@ def encounter_line(name: str, mcfg: MobilityConfig) -> str:
 
 def main():
     lines = []
-    dfl = dataclasses.replace(BASE["dfl"], num_agents=N_AGENTS,
-                              epoch_seconds=EPOCH_S)
     cfgs = dict(MODEL_CFGS)
     tmp = tempfile.mkdtemp(prefix="bench_trace_")
     trace_path = os.path.join(tmp, "trace.npz")
     synthetic_trace(trace_path)
     cfgs["trace"] = MobilityConfig(model="trace", trace_path=trace_path,
                                    trace_frames_per_epoch=30)
-    for name, mcfg in cfgs.items():
-        hist = run(algorithm="cached", distribution="noniid", seed=5,
-                   dfl=dfl, mobility=mcfg, max_partners=3,
-                   partner_sample="random")
-        us = hist["wall_s"] / max(len(hist["epoch"]), 1) * 1e6
+    base = base_scenario(seed=5, max_partners=3,
+                         partner_sample="random").with_overrides({
+                             "dfl.num_agents": N_AGENTS,
+                             "dfl.epoch_seconds": EPOCH_S})
+    sw = api.sweep(base, {"mobility": list(cfgs.values())})
+    encounters = {}
+    for cell in sw.cells:
+        name = cell.result.scenario.experiment.mobility.model
+        us = (cell.result.wall_s / max(len(cell.result.epoch), 1)) * 1e6
+        enc = encounter_line(name, cell.result.scenario.experiment.mobility)
+        encounters[name] = enc
         lines.append(emit(f"mobility_{name}", us,
-                          f"best_acc={hist['best_acc']:.4f} "
-                          + encounter_line(name, mcfg)))
+                          f"best_acc={cell.result.best_acc:.4f} {enc}"))
+    sw.write_bench(OUT, name="mobility_models", fast=FAST,
+                   extra={"encounter_stats": encounters})
     return lines
 
 

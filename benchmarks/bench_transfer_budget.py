@@ -1,9 +1,10 @@
 """Accuracy-vs-bandwidth frontier for contact-duration-limited transfers.
 
 The unbudgeted exchange moves an unbounded candidate set per contact —
-physically impossible on a real vehicular link. This study sweeps the
-per-link transfer budget (entries one contact may move) across mobility
-models × cache policies and emits ``BENCH_budget.json``:
+physically impossible on a real vehicular link. This study is one
+``api.sweep`` over the per-link transfer budget (entries one contact may
+move) × mobility models × cache policies, emitting ``BENCH_budget.json``
+through the shared ``write_bench`` schema:
 
   * best/final accuracy per (budget, mobility, policy) — the
     accuracy-vs-budget frontier, expected monotone non-decreasing in the
@@ -11,38 +12,36 @@ models × cache policies and emits ``BENCH_budget.json``:
   * a duration-derived point (``link_entries_per_step``) where the cap
     comes from the measured per-pair contact durations instead of a flat
     knob;
-  * the fused engine's compile discipline: the budget is a *traced*
-    scalar, so sweeping it through one engine must report 0 retraces.
+  * the fused engine's compile discipline, now enforced *by the sweep
+    runner itself*: ``dfl.transfer_budget`` is a traced axis, so the
+    sweep shares one engine per (policy, mobility) and
+    ``SweepResult.retraces`` must be 0.
 
 Run:  PYTHONPATH=src python -m benchmarks.bench_transfer_budget
 Env:  REPRO_BENCH_FAST=1 trims mobilities and budgets.
 """
 from __future__ import annotations
 
-import dataclasses
-import json
 import os
 import tempfile
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import BASE, FAST, emit, run
+from repro import api
 from repro.configs.base import MobilityConfig
-from repro.fl.experiment import ExperimentConfig, build_fleet, make_engine
 from repro.mobility import trace as trace_lib
-from repro.models import cnn as cnn_lib
+
+from benchmarks.common import FAST, base_scenario, bench_out, emit
 
 N_AGENTS = 12
 BUDGETS = (0.0, 1.0, 2.0, 4.0, float("inf"))
+POLICIES = ("lru", "mobility_aware")
+OUT = bench_out("BENCH_budget.json")
 
 
 def jsonable(budget: float):
     """inf -> "inf" so the artifact stays strict RFC-8259 JSON."""
     return "inf" if budget == float("inf") else budget
-POLICIES = ("lru", "mobility_aware")
-OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_budget.json")
 
 
 def make_trace_file() -> str:
@@ -65,96 +64,67 @@ def mobilities(trace_path: str):
     return {"manhattan": mobs["manhattan"]} if FAST else mobs
 
 
-def budget_dfl(policy: str, budget: float, leps: float = 0.0):
-    return dataclasses.replace(
-        BASE["dfl"], policy=policy, num_agents=N_AGENTS, cache_size=6,
-        epoch_seconds=30.0, tau_max=20, transfer_budget=budget,
-        link_entries_per_step=leps)
-
-
-def check_no_retrace_across_budgets() -> int:
-    """One fused engine, many budgets: the cap is traced, 0 retraces."""
-    cfg = ExperimentConfig(
-        algorithm="cached", distribution="noniid", seed=8,
-        dfl=budget_dfl("lru", 2.0),
-        mobility=MobilityConfig(grid_w=6, grid_h=8),
-        epochs=4, eval_every=2, n_train=600, n_test=100, image_hw=12,
-        lr_plateau=False)
-    (model_cfg, state, data, counts, _tb, mstate,
-     group_slots, mob_model, mob_cfg) = build_fleet(cfg)
-    loss_fn = lambda p, b: cnn_lib.loss_fn(p, model_cfg, b["images"],
-                                           b["labels"])
-    eng = make_engine(cfg, loss_fn=loss_fn, mob_model=mob_model,
-                      mob_cfg=mob_cfg, group_slots=group_slots, chunk=2)
-    key = jax.random.PRNGKey(0)
-    for b in (0.0, 1.0, 3.0, 1e9):
-        state, mstate, key, _ = eng.run(state, mstate, key, 0.1, data,
-                                        counts, 2, jnp.float32(b))
-    return eng.traces - 1
-
-
 def main():
     lines = []
-    results = {}
     trace_path = make_trace_file()
     budgets = BUDGETS[:3] + (float("inf"),) if FAST else BUDGETS
+    base = base_scenario(seed=8, max_partners=3).with_overrides({
+        "dfl.num_agents": N_AGENTS, "dfl.cache_size": 6,
+        "dfl.epoch_seconds": 30.0, "dfl.tau_max": 20})
+    mobs = mobilities(trace_path)
+    sw = api.sweep(base, {"dfl.policy": list(POLICIES),
+                          "mobility": list(mobs.values()),
+                          "dfl.transfer_budget": list(budgets)})
+
+    # per-series frontier: monotone (non-decreasing within noise) in budget
+    extra = {"frontiers": {}}
     for policy in POLICIES:
-        for mob_name, mob in mobilities(trace_path).items():
-            frontier = []
-            for budget in budgets:
-                hist = run(algorithm="cached", distribution="noniid",
-                           seed=8, dfl=budget_dfl(policy, budget),
-                           mobility=mob, epochs=BASE["epochs"],
-                           max_partners=3)
-                key_name = f"{policy}/{mob_name}/{jsonable(budget)}"
-                results[key_name] = {
-                    "policy": policy, "mobility": mob_name,
-                    "transfer_budget": jsonable(budget),
-                    "best_acc": hist["best_acc"],
-                    "final_acc": hist["final_acc"],
-                    "cache_num": (hist["cache_num"][-1]
-                                  if hist["cache_num"] else None),
-                    "traces": hist["epoch_traces"],
-                }
-                frontier.append(hist["best_acc"])
-                lines.append(emit(
-                    f"budget_{policy}_{mob_name}_{budget}", 0.0,
-                    f"best_acc={hist['best_acc']:.4f}"))
-            # monotone (non-decreasing within noise) frontier per series
-            mono = all(b >= a - 0.03 for a, b in zip(frontier, frontier[1:]))
-            results[f"{policy}/{mob_name}/monotone"] = {
+        for mob_name, mob in mobs.items():
+            series = [c for c in sw.select(**{"dfl.policy": policy})
+                      if c.overrides["mobility"] == mob]
+            series.sort(key=lambda c: c.overrides["dfl.transfer_budget"])
+            frontier = [c.result.best_acc for c in series]
+            mono = all(b >= a - 0.03
+                       for a, b in zip(frontier, frontier[1:]))
+            extra["frontiers"][f"{policy}/{mob_name}"] = {
+                "budgets": [jsonable(b) for b in budgets],
                 "frontier": frontier, "monotone": bool(mono)}
+            for c in series:
+                b = c.overrides["dfl.transfer_budget"]
+                lines.append(emit(
+                    f"budget_{policy}_{mob_name}_{b}", 0.0,
+                    f"best_acc={c.result.best_acc:.4f}"))
+
     # aggregate frontier: mean best accuracy per budget across every
     # (policy, mobility) series — the headline accuracy-vs-budget curve
     # (individual series carry per-point noise at this scale)
     agg = []
     for budget in budgets:
-        pts = [r["best_acc"] for r in results.values()
-               if isinstance(r, dict)
-               and r.get("transfer_budget") == jsonable(budget)]
+        pts = [c.result.best_acc for c in sw.cells
+               if c.overrides["dfl.transfer_budget"] == budget]
         agg.append(sum(pts) / max(len(pts), 1))
-    results["frontier/mean_best_acc"] = {
+    extra["frontier_mean_best_acc"] = {
         "budgets": [str(b) for b in budgets], "mean_best_acc": agg,
         "monotone": bool(all(b >= a - 0.005       # seed-level noise floor
                              for a, b in zip(agg, agg[1:])))}
     lines.append(emit("budget_frontier", 0.0,
                       ";".join(f"{b}={a:.4f}"
                                for b, a in zip(budgets, agg))))
+
     # duration-derived budget point: cap = measured steps x entries/step
-    hist = run(algorithm="cached", distribution="noniid", seed=8,
-               dfl=budget_dfl("lru", float("inf"), leps=0.1),
-               mobility=MobilityConfig(grid_w=8, grid_h=16),
-               epochs=BASE["epochs"], max_partners=3)
-    results["lru/manhattan/duration_derived"] = {
-        "link_entries_per_step": 0.1, "best_acc": hist["best_acc"],
-        "traces": hist["epoch_traces"]}
-    retraces = check_no_retrace_across_budgets()
-    results["engine/retraces_across_budgets"] = retraces
-    with open(OUT, "w") as f:
-        json.dump({"fast": FAST, "results": results}, f, indent=1,
-                  sort_keys=True)
+    dur = api.run(base.with_overrides({
+        "dfl.link_entries_per_step": 0.1,
+        "mobility": MobilityConfig(grid_w=8, grid_h=16)}))
+    extra["duration_derived"] = {
+        "link_entries_per_step": 0.1, "best_acc": dur.best_acc,
+        "traces": dur.traces}
+
+    # compile discipline through the sweep API: the budget axis is traced,
+    # so every engine compiled exactly once
+    extra["retraces_across_budgets"] = sw.retraces
+    sw.write_bench(OUT, name="transfer_budget", fast=FAST, extra=extra)
     lines.append(emit("budget_retraces", 0.0,
-                      f"retraces_across_budgets={retraces}"))
+                      f"retraces_across_budgets={sw.retraces}"))
     return lines
 
 

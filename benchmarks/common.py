@@ -4,14 +4,20 @@ The paper trains 100 vehicles for 1000 epochs on real MNIST; on this CPU
 container each benchmark uses a 10-vehicle fleet, 16×16 synthetic images
 and ~12 epochs — enough to reproduce the paper's *qualitative orderings*
 (EXPERIMENTS.md maps each benchmark to its paper figure/table).
+
+``base_scenario()`` is the Scenario-API entry point — the sweep-driven
+benchmarks (`bench_cache_policies`, `bench_mobility_models`,
+`bench_transfer_budget`) build their grids on it and emit artifacts via
+``SweepResult.write_bench``; ``run()`` keeps the historical dict
+interface for the single-run benchmarks.
 """
 from __future__ import annotations
 
 import dataclasses
 import os
 
+from repro import api
 from repro.configs.base import DFLConfig, MobilityConfig
-from repro.fl.experiment import ExperimentConfig, run_experiment
 
 FAST = os.environ.get("REPRO_BENCH_FAST", "0") == "1"
 
@@ -28,11 +34,26 @@ BASE = dict(
 )
 
 
-def run(algorithm="cached", distribution="noniid", seed=0, **overrides):
+def base_scenario(algorithm="cached", distribution="noniid", seed=0,
+                  **overrides) -> api.Scenario:
+    """The benchmarks' shared scaled-down fleet as a Scenario spec."""
     kw = {**BASE, **overrides}
-    cfg = ExperimentConfig(algorithm=algorithm, distribution=distribution,
-                           seed=seed, **kw)
-    return run_experiment(cfg, record_cache_stats=True)
+    return api.Scenario(
+        experiment=api.ExperimentConfig(
+            algorithm=algorithm, distribution=distribution, seed=seed, **kw),
+        record_cache_stats=True)
+
+
+def run(algorithm="cached", distribution="noniid", seed=0, **overrides):
+    """Historical dict interface (single-run benchmarks)."""
+    scenario = base_scenario(algorithm=algorithm, distribution=distribution,
+                             seed=seed, **overrides)
+    return api.run(scenario).history()
+
+
+def bench_out(filename: str) -> str:
+    """Repo-root path for a BENCH_*.json artifact."""
+    return os.path.join(os.path.dirname(__file__), "..", filename)
 
 
 def emit(name: str, us_per_call: float, derived: str) -> str:

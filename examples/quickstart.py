@@ -1,60 +1,44 @@
-"""Quickstart: the Cached-DFL public API in ~60 lines.
+"""Quickstart: the Cached-DFL Scenario API in ~30 lines.
 
-Builds a 8-vehicle fleet on the Manhattan grid, trains the paper's MNIST
-CNN on synthetic non-iid data with LRU model caching, and prints the
-average-test-accuracy curve.
+A declarative, serializable experiment spec drives everything: build a
+Scenario (8 vehicles on the Manhattan grid, the paper's MNIST CNN on
+synthetic non-iid data, LRU model caching), run it through the fused
+fleet engine, and print the typed result.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import functools
+from repro import api
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+# 1) the spec: start from defaults, override via dotted paths — any
+#    ExperimentConfig / DFLConfig / MobilityConfig field is reachable
+scenario = api.Scenario(record_cache_stats=True).with_overrides({
+    "algorithm": "cached",
+    "distribution": "noniid",        # extreme label shards (paper §4.1)
+    "dfl.num_agents": 8,
+    "dfl.cache_size": 4,
+    "dfl.local_steps": 5,
+    "dfl.batch_size": 32,
+    "dfl.epoch_seconds": 60.0,
+    "mobility.grid_w": 4,            # Manhattan grid, 100 m DSRC range
+    "mobility.grid_h": 6,
+    "epochs": 10,
+    "n_train": 1500,
+    "n_test": 300,
+    "image_hw": 16,
+    "lr_plateau": False,
+})
 
-from repro.configs.base import MobilityConfig
-from repro.configs.paper_models import MNIST_CNN
-from repro.core import rounds
-from repro.data.synthetic import make_image_dataset
-from repro.fl.partition import gather_agent_data, shards_noniid_partition
-from repro.mobility import manhattan as mob
-from repro.models import cnn
+# 2) specs are serializable artifacts: share them, diff them, rerun them
+print(f"config hash {scenario.content_hash()}")
+# open("scenario.json", "w").write(scenario.to_json())
+# scenario = api.Scenario.from_json(open("scenario.json").read())
 
-N, EPOCHS, CACHE, TAU_MAX = 8, 10, 4, 10
+# 3) run: mobility sim -> contacts -> local SGD + cache exchange +
+#    aggregation, fused into one compiled program per eval chunk
+result = api.run(scenario)
 
-# 1) data: synthetic MNIST-like, extreme non-iid label shards
-tx, ty, ex, ey = make_image_dataset(0, n_train=1500, n_test=300, hw=16)
-idx, counts = shards_noniid_partition(np.random.default_rng(0), ty, N)
-data = {k: jnp.asarray(v) for k, v in
-        gather_agent_data({"images": tx, "labels": ty}, idx).items()}
-
-# 2) fleet: N agents, each with its own model + model cache
-model_cfg = MNIST_CNN.__class__(**{**MNIST_CNN.__dict__, "image_hw": 16})
-params0 = cnn.init_params(model_cfg, jax.random.PRNGKey(0))
-state = rounds.init_fleet(params0, N, cache_size=CACHE,
-                          samples=counts.astype(np.float32))
-
-# 3) mobility: Manhattan grid, 100 m DSRC range
-mcfg = MobilityConfig(grid_w=4, grid_h=6)
-mstate = mob.init_mobility(jax.random.PRNGKey(1), N, mcfg)
-
-# 4) one compiled program per epoch: local SGD + exchange + aggregation
-loss_fn = lambda p, b: cnn.loss_fn(p, model_cfg, b["images"], b["labels"])
-acc_fn = lambda p, b: cnn.accuracy(p, model_cfg, b["images"], b["labels"])
-epoch = jax.jit(functools.partial(
-    rounds.cached_dfl_epoch, loss_fn=loss_fn, local_steps=5, batch_size=32,
-    lr=0.1, tau_max=TAU_MAX, policy="lru"))
-simulate = jax.jit(functools.partial(mob.simulate_epoch, cfg=mcfg,
-                                     seconds=60.0))
-test = {"images": jnp.asarray(ex), "labels": jnp.asarray(ey)}
-
-key = jax.random.PRNGKey(2)
-for ep in range(EPOCHS):
-    key, k1, k2 = jax.random.split(key, 3)
-    mstate, met, _dur = simulate(mstate, k1)
-    partners = mob.partners_from_contacts(met, 4)
-    state, _ = epoch(state, partners, data, jnp.asarray(counts), k2)
-    acc, _ = rounds.fleet_accuracy(state, acc_fn, test)
-    cached = float(jnp.mean(jnp.sum(state.cache.valid, 1)))
-    print(f"epoch {ep + 1:2d}  avg_acc={float(acc):.3f} "
-          f"avg_cached_models={cached:.1f}")
+# 4) a typed RunResult instead of an untyped dict
+for ep, acc, cached in zip(result.epoch, result.acc, result.cache_num):
+    print(f"epoch {ep:2d}  avg_acc={acc:.3f} avg_cached_models={cached:.1f}")
+print(f"best {result.best_acc:.3f} (epoch {result.best_epoch}) "
+      f"in {result.wall_s:.1f}s, {result.traces} compile(s)")

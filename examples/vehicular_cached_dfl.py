@@ -1,15 +1,14 @@
 """End-to-end driver (the paper's kind of workload): train a vehicle fleet
 for a few hundred global epochs with Cached-DFL vs the DFL baseline, with
-ReduceLROnPlateau + early stopping exactly as §4.3/§B.4 prescribe.
+ReduceLROnPlateau + early stopping exactly as §4.3/§B.4 prescribe —
+expressed as one Scenario spec swept over the algorithm axis.
 
     PYTHONPATH=src python examples/vehicular_cached_dfl.py [--epochs 200]
 """
 import argparse
-import dataclasses
 import json
 
-from repro.configs.base import DFLConfig, MobilityConfig
-from repro.fl.experiment import ExperimentConfig, run_experiment
+from repro import api
 
 
 def main():
@@ -20,32 +19,37 @@ def main():
     ap.add_argument("--out", default="")
     args = ap.parse_args()
 
-    base = ExperimentConfig(
-        model="paper-mnist-cnn",
-        distribution=args.distribution,
-        dfl=DFLConfig(num_agents=args.agents, cache_size=10, tau_max=10,
-                      local_steps=10, lr=0.1, batch_size=64,
-                      epoch_seconds=120.0),
-        mobility=MobilityConfig(grid_w=6, grid_h=12),
-        epochs=args.epochs,
-        n_train=6000,
-        n_test=1000,
-        image_hw=20,
-        early_stop_patience=20,   # paper's early stop
-    )
+    base = api.Scenario(verbose=True).with_overrides({
+        "model": "paper-mnist-cnn",
+        "distribution": args.distribution,
+        "dfl.num_agents": args.agents,
+        "dfl.cache_size": 10,
+        "dfl.tau_max": 10,
+        "dfl.local_steps": 10,
+        "dfl.lr": 0.1,
+        "dfl.batch_size": 64,
+        "dfl.epoch_seconds": 120.0,
+        "mobility.grid_w": 6,
+        "mobility.grid_h": 12,
+        "epochs": args.epochs,
+        "n_train": 6000,
+        "n_test": 1000,
+        "image_hw": 20,
+        "early_stop_patience": 20,   # paper's early stop
+    })
     results = {}
     for alg in ("cached", "dfl"):
-        cfg = dataclasses.replace(base, algorithm=alg)
         print(f"=== {alg} ===")
-        hist = run_experiment(cfg, verbose=True)
-        results[alg] = hist
-        print(f"{alg}: best={hist['best_acc']:.4f} "
-              f"epochs={len(hist['epoch'])} wall={hist['wall_s']:.0f}s\n")
+        result = api.run(base.with_overrides({"algorithm": alg}))
+        results[alg] = result
+        print(f"{alg}: best={result.best_acc:.4f} "
+              f"epochs={len(result.epoch)} wall={result.wall_s:.0f}s\n")
     print("summary:",
-          {k: round(v["best_acc"], 4) for k, v in results.items()})
+          {k: round(v.best_acc, 4) for k, v in results.items()})
     if args.out:
         with open(args.out, "w") as f:
-            json.dump(results, f, indent=1)
+            json.dump({k: v.to_dict() for k, v in results.items()}, f,
+                      indent=1)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,40 @@
+"""The public experiment API: declarative scenarios, typed results, and a
+compile-aware sweep runner.
+
+Everything a downstream consumer (CLI, benchmarks, examples, tools,
+notebooks) needs rides behind this facade:
+
+    from repro import api
+
+    # spec -> resolve -> run
+    scenario = api.get_preset("paper-noniid").with_overrides(
+        {"dfl.policy": "mobility_aware", "epochs": 100})
+    result = api.run(scenario)          # typed RunResult
+    print(result.best_acc, result.config_hash)
+
+    # serializable round trip
+    spec = scenario.to_json()
+    assert api.Scenario.from_json(spec) == scenario
+
+    # compile-aware grid: traced knobs (lr / transfer_budget / epochs)
+    # share one fused engine per (algorithm, shape) — no retraces
+    sw = api.sweep(scenario, {"dfl.transfer_budget": [0.0, 2.0],
+                              "dfl.lr": [0.1, 0.05]})
+    sw.write_bench("BENCH_budget.json", name="budget")
+"""
+from repro.configs.base import DFLConfig, MobilityConfig  # noqa: F401
+from repro.fl.presets import (  # noqa: F401
+    available_presets, get_preset, preset_doc, register_preset)
+from repro.fl.runner import (  # noqa: F401
+    TRACED_AXES, RunResult, SweepCell, SweepResult, run, sweep)
+from repro.fl.scenario import (  # noqa: F401
+    Fleet, ExperimentConfig, ResolvedScenario, Scenario,
+    valid_override_paths)
+
+__all__ = [
+    "DFLConfig", "MobilityConfig", "ExperimentConfig",
+    "Scenario", "ResolvedScenario", "Fleet",
+    "RunResult", "SweepCell", "SweepResult", "run", "sweep", "TRACED_AXES",
+    "available_presets", "get_preset", "preset_doc", "register_preset",
+    "valid_override_paths",
+]

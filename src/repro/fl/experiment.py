@@ -1,185 +1,50 @@
-"""Reusable fleet-experiment harness — the engine behind train.py, the
-benchmarks (one per paper figure/table) and the examples.
+"""Compatibility layer over the Scenario API (``repro.api``).
 
-Reproduces the paper's experimental loop: mobility (any registered model,
-selected by ``MobilityConfig.model``) → contacts → Cached-DFL / DFL / CFL
-epochs → average-test-accuracy metric with ReduceLROnPlateau and early
-stopping.
+The experiment surface now lives in :mod:`repro.fl.scenario` (declarative
+``Scenario`` specs, validation, the named :class:`Fleet` struct) and
+:mod:`repro.fl.runner` (``run``/``sweep`` with typed results). This
+module keeps the historical entry points working unmodified:
+
+- ``ExperimentConfig`` — re-exported from ``scenario`` (same dataclass);
+- ``build_fleet(cfg)`` — returns the named ``Fleet`` struct, which still
+  unpacks as the historical 9-tuple;
+- ``resolve_policy_setup(cfg)`` — delegates to the consolidated
+  ``Scenario.resolve`` validation;
+- ``run_experiment(cfg, ...)`` — thin shim over ``runner.run`` returning
+  the legacy history dict;
+- ``make_epoch_fn`` / ``make_engine`` — the jitted-driver builders, used
+  by the runner and by engine-level tests/benchmarks.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-import time
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, Optional
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.configs.base import DFLConfig, MobilityConfig
-from repro.configs.paper_models import CNNConfig, PAPER_CONFIGS
 from repro.core import rounds as rounds_lib
-from repro.data.synthetic import make_image_dataset
-from repro.fl import partition as part_lib
-from repro.mobility import registry as mob_registry
-from repro.mobility import stats as mob_stats
-from repro.mobility.base import make_bands, partners_from_contacts
-from repro.models import cnn as cnn_lib
-from repro.optim.schedules import ReduceLROnPlateau
-from repro.policies import registry as policy_registry
-
-
-@dataclasses.dataclass
-class ExperimentConfig:
-    model: str = "paper-mnist-cnn"
-    distribution: str = "noniid"      # iid | noniid | dirichlet | grouped
-    algorithm: str = "cached"         # cached | dfl | cfl
-    dfl: DFLConfig = dataclasses.field(default_factory=DFLConfig)
-    mobility: MobilityConfig = dataclasses.field(
-        default_factory=MobilityConfig)
-    epochs: int = 50
-    eval_every: int = 1
-    seed: int = 0
-    n_train: int = 6000
-    n_test: int = 1000
-    image_hw: int = 0                 # 0 -> model default
-    max_partners: int = 4
-    partner_sample: str = "lowest-id"  # lowest-id | random (radio budget)
-    early_stop_patience: int = 20
-    dirichlet_pi: float = 0.5
-    overlap: int = 0                  # grouped: label overlap between areas
-    num_groups: int = 3
-    lr_plateau: bool = True
-
-
-def _area_labels(num_groups: int, overlap: int, num_classes: int = 10):
-    """n-overlap label allocation (paper appendix B.1.1)."""
-    base = [list(range(0, 4)), list(range(4, 7)), list(range(7, 10))]
-    if num_groups != 3:
-        per = num_classes // num_groups
-        base = [list(range(g * per, min((g + 1) * per, num_classes)))
-                for g in range(num_groups)]
-    out = []
-    for g, labels in enumerate(base):
-        l = list(labels)
-        for k in range(1, overlap + 1):
-            l.append((labels[0] - k) % num_classes)   # borrow neighbors
-        out.append(sorted(set(l)))
-    return out
+from repro.fl.scenario import (  # noqa: F401  (re-exports)
+    ExperimentConfig, Fleet, ResolvedScenario, Scenario, _area_labels,
+    _resolve_policy_setup)
 
 
 def resolve_policy_setup(cfg: ExperimentConfig):
     """Resolve + validate the cache policy once at config resolution.
 
-    Returns ``(policy, policy_params)``. Raises ValueError naming the
-    offending config fields for inconsistent setups (instead of failing
-    mid-trace inside ``gossip.exchange``), e.g. a group policy without a
-    grouped distribution or with fewer cache slots than groups.
+    Returns ``(policy, policy_params)``; raises ValueError naming the
+    offending config fields. Kept as a shim over the consolidated
+    ``Scenario.resolve`` validation.
     """
-    pol = policy_registry.resolve(cfg.dfl.policy)
-    params = dict(cfg.dfl.policy_params)
-    if cfg.algorithm != "cached" and cfg.dfl.transfer_budget_enabled:
-        raise ValueError(
-            "DFLConfig.transfer_budget / link_entries_per_step bound the "
-            "cached algorithm's cache exchange and have no effect on "
-            f"algorithm={cfg.algorithm!r} — unset them (or use "
-            "algorithm='cached') rather than sweeping a no-op knob")
-    unknown = sorted(set(params) - set(pol.knobs) - {"gamma"})
-    if unknown:
-        raise ValueError(
-            f"DFLConfig.policy_params has unknown knob(s) {unknown} for "
-            f"policy {pol.name!r}; accepted: "
-            f"{sorted(set(pol.knobs) | {'gamma'})}")
-    if cfg.algorithm == "cached" and pol.needs_group_slots:
-        if cfg.distribution != "grouped":
-            raise ValueError(
-                f"DFLConfig.policy={pol.name!r} needs per-group cache "
-                f"slots, which require ExperimentConfig.distribution="
-                f"'grouped' (got {cfg.distribution!r})")
-        if cfg.num_groups <= 0:
-            raise ValueError(
-                f"DFLConfig.policy={pol.name!r} requires "
-                f"ExperimentConfig.num_groups > 0 "
-                f"(got {cfg.num_groups})")
-        if cfg.dfl.cache_size < cfg.num_groups:
-            raise ValueError(
-                f"DFLConfig.cache_size={cfg.dfl.cache_size} < "
-                f"ExperimentConfig.num_groups={cfg.num_groups}: the "
-                f"{pol.name!r} policy needs at least one slot per group")
-    return pol, params
+    return _resolve_policy_setup(cfg)
 
 
-def build_fleet(cfg: ExperimentConfig):
-    """Returns (model_cfg, state, data, counts, test_batch, mobility_state,
-    group_slots, mob_model, mob_cfg)."""
-    policy, policy_params = resolve_policy_setup(cfg)  # fail fast if bad
-    model_cfg: CNNConfig = PAPER_CONFIGS[cfg.model]
-    if cfg.image_hw:
-        model_cfg = dataclasses.replace(model_cfg, image_hw=cfg.image_hw)
-    rng = np.random.default_rng(cfg.seed)
-    N = cfg.dfl.num_agents
+def build_fleet(cfg: ExperimentConfig) -> Fleet:
+    """Build the fleet for an ExperimentConfig.
 
-    # mobility: select the registered model by name; grouped runs thread the
-    # group count into the area-band restriction
-    mob_cfg = cfg.mobility
-    if cfg.distribution == "grouped" and mob_cfg.num_bands != cfg.num_groups:
-        mob_cfg = dataclasses.replace(mob_cfg, num_bands=cfg.num_groups)
-    mob_model = mob_registry.get_model(mob_cfg.model)
-
-    tx, ty, ex, ey = make_image_dataset(
-        cfg.seed, n_train=cfg.n_train, n_test=cfg.n_test,
-        hw=model_cfg.image_hw, channels=model_cfg.in_channels)
-
-    band = group = None
-    group_slots = None
-    if cfg.distribution == "iid":
-        idx, counts = part_lib.iid_partition(rng, ty, N)
-    elif cfg.distribution == "noniid":
-        idx, counts = part_lib.shards_noniid_partition(rng, ty, N)
-    elif cfg.distribution == "dirichlet":
-        idx, counts = part_lib.dirichlet_partition(rng, ty, N,
-                                                   pi=cfg.dirichlet_pi)
-    elif cfg.distribution == "grouped":
-        band, group = make_bands(N, cfg.num_groups)
-        idx, counts = part_lib.grouped_label_partition(
-            rng, ty, N, np.asarray(group),
-            _area_labels(cfg.num_groups, cfg.overlap))
-        per = cfg.dfl.cache_size // cfg.num_groups
-        slots = [per] * cfg.num_groups
-        for i in range(cfg.dfl.cache_size - per * cfg.num_groups):
-            slots[i] += 1
-        group_slots = jnp.asarray(slots, jnp.int32)
-    else:
-        raise ValueError(cfg.distribution)
-
-    data = part_lib.gather_agent_data({"images": tx, "labels": ty}, idx)
-    data = {k: jnp.asarray(v) for k, v in data.items()}
-    test_batch = {"images": jnp.asarray(ex), "labels": jnp.asarray(ey)}
-
-    key = jax.random.PRNGKey(cfg.seed)
-    params0 = cnn_lib.init_params(model_cfg, key)
-    state = rounds_lib.init_fleet(params0, N, cfg.dfl.cache_size,
-                                  counts.astype(np.float32), group=group)
-    mstate = mob_model.init(jax.random.PRNGKey(cfg.seed + 1), N, mob_cfg,
-                            band=band)
-    wants_encounters = (policy.needs_encounters
-                        or policy_params.get("w_encounter", 0.0) != 0.0)
-    if cfg.algorithm == "cached" and wants_encounters:
-        # warm-start the per-pair encounter counts from the mobility-stats
-        # subsystem: one epoch's contact roll-out on a throwaway copy of
-        # the mobility state, so the policy has a rate prior before any
-        # exchange happens
-        n_steps = min(200, max(1, int(cfg.dfl.epoch_seconds
-                                      / mob_cfg.step_seconds)))
-        _, seq = mob_stats.collect_contacts(
-            mob_model, mstate, jax.random.PRNGKey(cfg.seed + 3), mob_cfg,
-            n_steps)
-        est = mob_stats.encounter_stats(seq, mob_cfg.step_seconds)
-        state = dataclasses.replace(
-            state, encounters=est["encounter_counts"].astype(jnp.float32))
-    return (model_cfg, state, data, jnp.asarray(counts), test_batch, mstate,
-            group_slots, mob_model, mob_cfg)
+    Returns the named :class:`Fleet` struct ``(model_cfg, state, data,
+    counts, test_batch, mobility_state, group_slots, mob_model,
+    mobility)`` — field order matches the historical 9-tuple.
+    """
+    return Scenario(experiment=cfg).resolve().build_fleet()
 
 
 def make_epoch_fn(cfg: ExperimentConfig, *, loss_fn: Callable,
@@ -231,103 +96,13 @@ def make_engine(cfg: ExperimentConfig, *, loss_fn: Callable, mob_model,
 def run_experiment(cfg: ExperimentConfig, *, verbose: bool = False,
                    record_cache_stats: bool = False,
                    engine: str = "fused") -> Dict:
-    """Run one fleet experiment end to end.
+    """Run one fleet experiment end to end (legacy dict interface).
 
-    engine="fused" (default) drives `eval_every` epochs per jit call through
-    the scanned engine; engine="legacy" keeps the historical 3-dispatch
-    per-epoch host loop (the benchmark baseline).
+    Thin shim over ``repro.fl.runner.run``: wraps the config in a
+    Scenario (the kwargs became Scenario fields) and flattens the typed
+    ``RunResult`` back into the historical history dict.
     """
-    (model_cfg, state, data, counts, test_batch, mstate,
-     group_slots, mob_model, mob_cfg) = build_fleet(cfg)
-
-    loss_fn = lambda p, b: cnn_lib.loss_fn(p, model_cfg, b["images"],
-                                           b["labels"])
-    acc_fn = lambda p, b: cnn_lib.accuracy(p, model_cfg, b["images"],
-                                           b["labels"])
-    eval_fn = jax.jit(functools.partial(rounds_lib.fleet_eval,
-                                        acc_fn=acc_fn))
-
-    sched = ReduceLROnPlateau(lr=cfg.dfl.lr)
-    lr = cfg.dfl.lr
-    key = jax.random.PRNGKey(cfg.seed + 2)
-    history: Dict[str, List] = {"epoch": [], "acc": [], "lr": [],
-                                "cache_num": [], "cache_age": []}
-    best, best_epoch = -1.0, 0
-    stop = False
-    t0 = time.time()
-
-    def evaluate(ep):
-        """Eval at 0-based epoch index ep; returns True to early-stop."""
-        nonlocal lr, best, best_epoch
-        acc, cache_num, cache_age = eval_fn(state, test_batch=test_batch)
-        acc = float(acc)                     # scalars only cross to host
-        history["epoch"].append(ep + 1)
-        history["acc"].append(acc)
-        history["lr"].append(lr)
-        if record_cache_stats and cfg.algorithm == "cached":
-            history["cache_num"].append(float(cache_num))
-            history["cache_age"].append(float(cache_age))
-        if cfg.lr_plateau:
-            lr = sched.update(acc)           # traced arg: no retrace on change
-        if acc > best + 1e-4:
-            best, best_epoch = acc, ep
-        elif ep - best_epoch >= cfg.early_stop_patience:
-            if verbose:
-                print(f"early stop at epoch {ep + 1}")
-            return True
-        if verbose:
-            print(f"epoch {ep + 1:4d} acc={acc:.4f} lr={lr:.4f} "
-                  f"({time.time() - t0:.1f}s)")
-        return False
-
-    # budget sweeps pass the (traced) cap per engine call — never retraces;
-    # None = no flat cap (a duration-derived cap may still apply via
-    # link_entries_per_step, bound statically above)
-    budget = (jnp.float32(cfg.dfl.resolved_transfer_budget)
-              if cfg.dfl.resolved_transfer_budget is not None else None)
-
-    if engine == "fused":
-        eng = make_engine(cfg, loss_fn=loss_fn, mob_model=mob_model,
-                          mob_cfg=mob_cfg, group_slots=group_slots)
-        ep = 0
-        while ep < cfg.epochs and not stop:
-            n = min(eng.chunk, cfg.epochs - ep)
-            if budget is None:
-                state, mstate, key, _ = eng.run(state, mstate, key, lr,
-                                                data, counts, n)
-            else:
-                state, mstate, key, _ = eng.run(state, mstate, key, lr,
-                                                data, counts, n, budget)
-            ep += n
-            if ep % cfg.eval_every == 0:
-                stop = evaluate(ep - 1)
-        history["epoch_traces"] = eng.traces
-    elif engine == "legacy":
-        epoch_fn, counter = make_epoch_fn(cfg, loss_fn=loss_fn,
-                                          group_slots=group_slots)
-        sim = jax.jit(functools.partial(mob_model.simulate_epoch,
-                                        cfg=mob_cfg,
-                                        seconds=cfg.dfl.epoch_seconds))
-        for ep in range(cfg.epochs):
-            # deterministic partner selection keeps the historical key stream
-            if cfg.partner_sample == "lowest-id":
-                key, k1, k2 = jax.random.split(key, 3)
-                k3 = None
-            else:
-                key, k1, k2, k3 = jax.random.split(key, 4)
-            mstate, met, dur = sim(mstate, k1)
-            partners = partners_from_contacts(
-                met, cfg.max_partners, sample=cfg.partner_sample, key=k3)
-            state, _ = epoch_fn(state, partners, dur, data, counts, k2, lr)
-            if (ep + 1) % cfg.eval_every == 0:
-                if evaluate(ep):
-                    break
-        history["epoch_traces"] = counter["traces"]
-    else:
-        raise ValueError(f"unknown engine {engine!r}")
-
-    history["engine"] = engine
-    history["best_acc"] = best
-    history["final_acc"] = history["acc"][-1] if history["acc"] else 0.0
-    history["wall_s"] = time.time() - t0
-    return history
+    from repro.fl import runner  # local import: runner imports this module
+    scenario = Scenario(experiment=cfg, engine=engine, verbose=verbose,
+                        record_cache_stats=record_cache_stats)
+    return runner.run(scenario).history()

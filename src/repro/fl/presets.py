@@ -1,0 +1,191 @@
+"""Named scenario presets — the curated entry points of the Scenario API.
+
+A preset is a zero-argument factory returning a fully-formed
+:class:`~repro.fl.scenario.Scenario`. Factories (not instances) are
+registered so presets that need side artifacts (e.g. the synthetic
+contact trace of ``trace-replay``) can materialize them lazily. Every
+registered preset must ``resolve()`` without error — ``tests/
+test_presets.py`` enforces that in tier-1 and ``tools/
+check_scenarios.py`` smoke-runs each one.
+
+    from repro import api
+    result = api.run(api.get_preset("paper-noniid"))
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import tempfile
+from typing import Callable, Dict, List, NamedTuple
+
+import numpy as np
+
+from repro.configs.base import DFLConfig, MobilityConfig
+from repro.fl.scenario import ExperimentConfig, Scenario
+
+
+class Preset(NamedTuple):
+    factory: Callable[[], Scenario]
+    doc: str
+
+
+_PRESETS: Dict[str, Preset] = {}
+
+
+def register_preset(name: str, factory: Callable[[], Scenario],
+                    doc: str = "") -> None:
+    """Register a preset factory (third parties call this at import time)."""
+    _PRESETS[name] = Preset(factory, doc)
+
+
+def available_presets() -> List[str]:
+    return sorted(_PRESETS)
+
+
+def preset_doc(name: str) -> str:
+    return _get(name).doc
+
+
+def get_preset(name: str) -> Scenario:
+    """Instantiate a registered preset (a fresh Scenario each call)."""
+    scenario = _get(name).factory()
+    return scenario if scenario.name else dataclasses.replace(scenario,
+                                                              name=name)
+
+
+def _get(name: str) -> Preset:
+    if name not in _PRESETS:
+        raise ValueError(f"unknown preset {name!r}; registered presets: "
+                         f"{available_presets()}")
+    return _PRESETS[name]
+
+
+# ---------------------------------------------------------------------------
+# built-in presets
+# ---------------------------------------------------------------------------
+
+def _paper_noniid() -> Scenario:
+    """Paper §4.1 regime: 100 vehicles, Manhattan grid, non-iid shards,
+    LRU caching (Alg. 2), ReduceLROnPlateau + early stop."""
+    return Scenario(
+        name="paper-noniid",
+        experiment=ExperimentConfig(
+            algorithm="cached", distribution="noniid",
+            dfl=DFLConfig(), mobility=MobilityConfig(),
+            epochs=200, early_stop_patience=20))
+
+
+def _grouped_overlap() -> Scenario:
+    """Paper Alg. 3 regime: grouped label areas with 1-label overlap and
+    the group cache policy (per-group slots)."""
+    return Scenario(
+        name="grouped-overlap",
+        experiment=ExperimentConfig(
+            algorithm="cached", distribution="grouped", num_groups=3,
+            overlap=1,
+            dfl=DFLConfig(policy="group", cache_size=9),
+            mobility=MobilityConfig(),
+            epochs=200))
+
+
+def _budget_limited() -> Scenario:
+    """Bandwidth-constrained exchange: a flat 2-entries-per-link cap
+    (the middle of the BENCH_budget.json frontier)."""
+    return Scenario(
+        name="budget-limited",
+        experiment=ExperimentConfig(
+            algorithm="cached", distribution="noniid",
+            dfl=DFLConfig(transfer_budget=2.0),
+            epochs=200))
+
+
+def _duration_budget() -> Scenario:
+    """Physically-grounded budget: link capacity derived from the measured
+    per-pair contact durations (entries = 0.1 x steps in contact)."""
+    return Scenario(
+        name="duration-budget",
+        experiment=ExperimentConfig(
+            algorithm="cached", distribution="noniid",
+            dfl=DFLConfig(link_entries_per_step=0.1),
+            epochs=200))
+
+
+def _levy_sparse() -> Scenario:
+    """Lévy-walk mobility on a large plane: heavy-tailed flights, sparse
+    encounters — the stress case for cache staleness."""
+    return Scenario(
+        name="levy-sparse",
+        experiment=ExperimentConfig(
+            algorithm="cached", distribution="noniid",
+            dfl=DFLConfig(policy="mobility_aware"),
+            mobility=MobilityConfig(model="levy_walk", area_w=3000.0,
+                                    area_h=3000.0, levy_max_flight=3000.0),
+            epochs=200))
+
+
+def _community_grouped() -> Scenario:
+    """RPGM community mobility with the grouped distribution: band ==
+    community id, so data groups and movement clusters coincide."""
+    return Scenario(
+        name="community-grouped",
+        experiment=ExperimentConfig(
+            algorithm="cached", distribution="grouped", num_groups=3,
+            dfl=DFLConfig(policy="group", cache_size=9),
+            mobility=MobilityConfig(model="community", area_w=2000.0,
+                                    area_h=2000.0, community_radius=200.0),
+            epochs=200))
+
+
+_TRACE_AGENTS = 8
+
+
+def _synthetic_trace_path() -> str:
+    """Materialize a bursty synthetic contact schedule for the
+    trace-replay preset at a *stable* path: the schedule is seeded and
+    the location deterministic, so the serialized spec reruns in other
+    processes and its ``content_hash`` stays stable (the version tag
+    bumps when the generator changes)."""
+    path = os.path.join(tempfile.gettempdir(),
+                        "repro-preset-trace-v1.npz")
+    if os.path.exists(path):
+        return path
+    from repro.mobility import trace as trace_lib
+    rng = np.random.default_rng(0)
+    T, n = 600, _TRACE_AGENTS
+    seq = np.zeros((T, n, n), bool)
+    for _ in range(8 * n):
+        i, j = rng.choice(n, size=2, replace=False)
+        t0 = int(rng.integers(0, T - 6))
+        seq[t0:t0 + int(rng.integers(2, 6)), i, j] = True
+    # write-then-rename: a process killed mid-save must not leave a
+    # truncated file at the stable path (exists() would trust it forever)
+    scratch = tempfile.mktemp(suffix=".npz", prefix="repro-preset-trace-",
+                              dir=tempfile.gettempdir())
+    trace_lib.save_trace(scratch, seq | seq.transpose(0, 2, 1))
+    os.replace(scratch, path)
+    return path
+
+
+def _trace_replay() -> Scenario:
+    """Contact-schedule replay: the synthetic DTN-style trace stands in
+    for real taxi/bus traces until a redistributable one is vendored."""
+    return Scenario(
+        name="trace-replay",
+        experiment=ExperimentConfig(
+            algorithm="cached", distribution="noniid",
+            dfl=DFLConfig(num_agents=_TRACE_AGENTS, cache_size=4),
+            mobility=MobilityConfig(model="trace",
+                                    trace_path=_synthetic_trace_path(),
+                                    trace_frames_per_epoch=30),
+            epochs=100))
+
+
+for _name, _factory in (
+        ("paper-noniid", _paper_noniid),
+        ("grouped-overlap", _grouped_overlap),
+        ("budget-limited", _budget_limited),
+        ("duration-budget", _duration_budget),
+        ("levy-sparse", _levy_sparse),
+        ("community-grouped", _community_grouped),
+        ("trace-replay", _trace_replay)):
+    register_preset(_name, _factory, (_factory.__doc__ or "").strip())

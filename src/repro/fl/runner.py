@@ -1,0 +1,418 @@
+"""Execute Scenarios: ``run(scenario) -> RunResult`` and the
+compile-aware grid runner ``sweep(base, axes) -> SweepResult``.
+
+``run`` subsumes the old ``run_experiment`` ad-hoc kwargs — engine
+choice, verbosity and cache-stat recording ride in the Scenario — and
+returns a typed :class:`RunResult` (metric arrays, best/final accuracy,
+engine/trace/wall-clock stats, config snapshot + content hash) instead
+of an untyped dict. ``run_experiment`` in ``fl/experiment.py`` remains
+as a thin compatibility shim over this module.
+
+``sweep`` partitions axes into *traced* knobs (``dfl.lr``,
+``dfl.transfer_budget``, ``epochs`` — changing them never retraces the
+fused engine) and *trace-static* knobs (algorithm, policy, shapes, ...),
+orders the grid so trace-static combinations are outer and traced
+combinations inner, and shares one :class:`FleetEngine` per static
+combination across all of its cells — asserting in accounting (and the
+tests pin it) the fused engine's one-trace-per-(algorithm, shape)
+guarantee through the new API.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import functools
+import itertools
+import json
+import time
+from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rounds as rounds_lib
+from repro.fl.scenario import (Fleet, ResolvedScenario, Scenario, _encode)
+from repro.mobility.base import partners_from_contacts
+from repro.optim.schedules import ReduceLROnPlateau
+
+#: dotted override paths the fused engine treats as traced scalars —
+#: sweeping them reuses the compiled executable (no retrace).
+TRACED_AXES = frozenset({"dfl.lr", "dfl.transfer_budget", "epochs"})
+
+
+# ---------------------------------------------------------------------------
+# typed results
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RunResult:
+    """Typed outcome of one Scenario run (JSON-able via ``to_dict``)."""
+    scenario: Scenario
+    config_hash: str
+    engine: str
+    epoch: List[int]
+    acc: List[float]
+    lr: List[float]
+    cache_num: List[float]
+    cache_age: List[float]
+    best_acc: float
+    best_epoch: int               # 1-based epoch of the best accuracy
+    final_acc: float
+    traces: int                   # engine retraces charged to this run
+    wall_s: float
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "scenario": self.scenario.to_dict(),
+            "config_hash": self.config_hash,
+            "engine": self.engine,
+            "metrics": {"epoch": self.epoch, "acc": self.acc,
+                        "lr": self.lr, "cache_num": self.cache_num,
+                        "cache_age": self.cache_age},
+            "best_acc": self.best_acc, "best_epoch": self.best_epoch,
+            "final_acc": self.final_acc, "traces": self.traces,
+            "wall_s": self.wall_s,
+        }
+
+    def to_json(self, **dumps_kwargs) -> str:
+        dumps_kwargs.setdefault("indent", 1)
+        dumps_kwargs.setdefault("sort_keys", True)
+        return json.dumps(self.to_dict(), **dumps_kwargs)
+
+    def history(self) -> Dict[str, Any]:
+        """The legacy ``run_experiment`` dict (compatibility shim)."""
+        return {"epoch": list(self.epoch), "acc": list(self.acc),
+                "lr": list(self.lr), "cache_num": list(self.cache_num),
+                "cache_age": list(self.cache_age),
+                "epoch_traces": self.traces, "engine": self.engine,
+                "best_acc": self.best_acc, "final_acc": self.final_acc,
+                "wall_s": self.wall_s}
+
+
+# ---------------------------------------------------------------------------
+# run
+# ---------------------------------------------------------------------------
+
+def _engine_key(rs: ResolvedScenario, chunk: int, traced_budget: bool):
+    """Everything that forces a distinct fused engine: static trace
+    bindings + array shapes. Traced scalars (lr, epoch budget, and — in
+    traced-budget mode — the transfer budget) are zeroed out so sweeps
+    over them share one engine."""
+    cfg = rs.experiment
+    dfl_static = dataclasses.replace(
+        cfg.dfl, lr=0.0,
+        transfer_budget=0.0 if traced_budget else cfg.dfl.transfer_budget)
+    return (cfg.algorithm, cfg.distribution, cfg.num_groups,
+            cfg.max_partners, cfg.partner_sample, cfg.n_train, cfg.n_test,
+            rs.model_cfg, rs.mobility, dfl_static, chunk, traced_budget)
+
+
+def run(scenario: Scenario, *,
+        engines: Optional[Dict[Any, rounds_lib.FleetEngine]] = None,
+        force_traced_budget: bool = False) -> RunResult:
+    """Run one Scenario end to end.
+
+    ``engines`` is an optional cache mapping engine keys to live
+    ``FleetEngine`` objects; ``sweep`` passes one so cells that differ
+    only in traced knobs reuse a compiled executable. With
+    ``force_traced_budget`` the per-link transfer budget is always passed
+    as a traced scalar (unlimited = +inf, bit-exact with the unbudgeted
+    path), so a budget axis never retraces.
+    """
+    rs = scenario.resolve()
+    return _drive(rs, rs.build_fleet(), engines=engines,
+                  force_traced_budget=force_traced_budget)
+
+
+def _drive(rs: ResolvedScenario, fleet: Fleet, *,
+           engines: Optional[Dict[Any, rounds_lib.FleetEngine]] = None,
+           force_traced_budget: bool = False) -> RunResult:
+    from repro.fl import experiment as experiment_lib  # shim-free builders
+
+    scenario = rs.scenario
+    cfg = rs.experiment
+    verbose = scenario.verbose
+    record_cache_stats = scenario.record_cache_stats
+    engine = scenario.engine
+
+    state, mstate = fleet.state, fleet.mobility_state
+    data, counts, test_batch = fleet.data, fleet.counts, fleet.test_batch
+    loss_fn = fleet.loss_fn()
+    eval_fn = jax.jit(functools.partial(rounds_lib.fleet_eval,
+                                        acc_fn=fleet.acc_fn()))
+
+    sched = ReduceLROnPlateau(lr=cfg.dfl.lr)
+    lr = cfg.dfl.lr
+    key = jax.random.PRNGKey(cfg.seed + 2)
+    epochs_hist: List[int] = []
+    acc_hist: List[float] = []
+    lr_hist: List[float] = []
+    cache_num_hist: List[float] = []
+    cache_age_hist: List[float] = []
+    best, best_epoch = -1.0, 0
+    stop = False
+    t0 = time.time()
+
+    def evaluate(ep):
+        """Eval at 0-based epoch index ep; returns True to early-stop."""
+        nonlocal lr, best, best_epoch
+        acc, cache_num, cache_age = eval_fn(state, test_batch=test_batch)
+        acc = float(acc)                     # scalars only cross to host
+        epochs_hist.append(ep + 1)
+        acc_hist.append(acc)
+        lr_hist.append(lr)
+        if record_cache_stats and cfg.algorithm == "cached":
+            cache_num_hist.append(float(cache_num))
+            cache_age_hist.append(float(cache_age))
+        if cfg.lr_plateau:
+            lr = sched.update(acc)           # traced arg: no retrace on change
+        if acc > best + 1e-4:
+            best, best_epoch = acc, ep
+        elif ep - best_epoch >= cfg.early_stop_patience:
+            if verbose:
+                print(f"early stop at epoch {ep + 1}")
+            return True
+        if verbose:
+            print(f"epoch {ep + 1:4d} acc={acc:.4f} lr={lr:.4f} "
+                  f"({time.time() - t0:.1f}s)")
+        return False
+
+    # budget sweeps pass the (traced) cap per engine call — never retraces;
+    # None = no flat cap (a duration-derived cap may still apply via
+    # link_entries_per_step, bound statically below)
+    resolved_budget = cfg.dfl.resolved_transfer_budget
+    traced_budget = (force_traced_budget and cfg.algorithm == "cached")
+    if traced_budget:
+        budget = jnp.float32(resolved_budget if resolved_budget is not None
+                             else jnp.inf)
+    else:
+        budget = (jnp.float32(resolved_budget)
+                  if resolved_budget is not None else None)
+
+    traces = 0
+    if engine == "fused":
+        key_ = _engine_key(rs, cfg.eval_every, traced_budget)
+        eng = None if engines is None else engines.get(key_)
+        if eng is None:
+            eng = experiment_lib.make_engine(
+                cfg, loss_fn=loss_fn, mob_model=fleet.mob_model,
+                mob_cfg=fleet.mobility, group_slots=fleet.group_slots)
+            if engines is not None:
+                engines[key_] = eng
+        traces0 = eng.traces
+        ep = 0
+        while ep < cfg.epochs and not stop:
+            n = min(eng.chunk, cfg.epochs - ep)
+            if budget is None:
+                state, mstate, key, _ = eng.run(state, mstate, key, lr,
+                                                data, counts, n)
+            else:
+                state, mstate, key, _ = eng.run(state, mstate, key, lr,
+                                                data, counts, n, budget)
+            ep += n
+            # evaluate on the cadence AND at the terminal epoch: a tail
+            # chunk shorter than eval_every (epochs not a multiple, or an
+            # early-stop truncation) must still land in the history
+            if ep % cfg.eval_every == 0 or ep == cfg.epochs:
+                stop = evaluate(ep - 1)
+        traces = eng.traces - traces0
+    elif engine == "legacy":
+        epoch_fn, counter = experiment_lib.make_epoch_fn(
+            cfg, loss_fn=loss_fn, group_slots=fleet.group_slots)
+        sim = jax.jit(functools.partial(fleet.mob_model.simulate_epoch,
+                                        cfg=fleet.mobility,
+                                        seconds=cfg.dfl.epoch_seconds))
+        for ep in range(cfg.epochs):
+            # deterministic partner selection keeps the historical key stream
+            if cfg.partner_sample == "lowest-id":
+                key, k1, k2 = jax.random.split(key, 3)
+                k3 = None
+            else:
+                key, k1, k2, k3 = jax.random.split(key, 4)
+            mstate, met, dur = sim(mstate, k1)
+            partners = partners_from_contacts(
+                met, cfg.max_partners, sample=cfg.partner_sample, key=k3)
+            state, _ = epoch_fn(state, partners, dur, data, counts, k2, lr)
+            if (ep + 1) % cfg.eval_every == 0 or (ep + 1) == cfg.epochs:
+                if evaluate(ep):
+                    break
+        traces = counter["traces"]
+    else:
+        raise ValueError(f"unknown engine {engine!r}")
+
+    return RunResult(
+        scenario=scenario, config_hash=scenario.content_hash(),
+        engine=engine, epoch=epochs_hist, acc=acc_hist, lr=lr_hist,
+        cache_num=cache_num_hist, cache_age=cache_age_hist,
+        best_acc=best, best_epoch=best_epoch + 1,
+        final_acc=acc_hist[-1] if acc_hist else 0.0,
+        traces=traces, wall_s=time.time() - t0)
+
+
+# ---------------------------------------------------------------------------
+# sweep
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SweepCell:
+    overrides: Dict[str, Any]     # the axes values this cell ran with
+    result: RunResult
+
+    def to_dict(self) -> Dict[str, Any]:
+        r = self.result
+        return {
+            "overrides": {k: _encode(v) for k, v in self.overrides.items()},
+            "config_hash": r.config_hash,
+            "best_acc": r.best_acc, "final_acc": r.final_acc,
+            "best_epoch": r.best_epoch,
+            "cache_num": r.cache_num[-1] if r.cache_num else None,
+            "cache_age": r.cache_age[-1] if r.cache_age else None,
+            "epochs_run": r.epoch[-1] if r.epoch else 0,
+            "traces": r.traces, "wall_s": r.wall_s,
+        }
+
+
+@dataclasses.dataclass
+class SweepResult:
+    """Tidy per-cell records of a grid sweep, with engine accounting."""
+    base: Scenario
+    axes: Dict[str, List[Any]]
+    cells: List[SweepCell]
+    engine_traces: Dict[str, int]  # engine key repr -> total traces
+    wall_s: float
+
+    @property
+    def num_engines(self) -> int:
+        return len(self.engine_traces)
+
+    @property
+    def retraces(self) -> int:
+        """Traces beyond the guaranteed one-per-engine — 0 when the fused
+        engine's no-retrace guarantee holds through the sweep."""
+        return sum(self.engine_traces.values()) - self.num_engines
+
+    def select(self, **conditions) -> List[SweepCell]:
+        """Cells whose overrides match every ``axis=value`` condition
+        (axis names may use '_' in place of the group '.', e.g.
+        ``dfl_transfer_budget``)."""
+        def match(cell):
+            for k, v in conditions.items():
+                key = k if k in cell.overrides else k.replace("_", ".", 1)
+                if cell.overrides.get(key) != v:
+                    return False
+            return True
+        return [c for c in self.cells if match(c)]
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "base": self.base.to_dict(),
+            "base_config_hash": self.base.content_hash(),
+            "axes": {k: [_encode(v) for v in vs]
+                     for k, vs in self.axes.items()},
+            "cells": [c.to_dict() for c in self.cells],
+            "engines": dict(self.engine_traces),
+            "num_engines": self.num_engines,
+            "retraces": self.retraces,
+            "wall_s": self.wall_s,
+        }
+
+    def to_json(self, **dumps_kwargs) -> str:
+        dumps_kwargs.setdefault("indent", 1)
+        dumps_kwargs.setdefault("sort_keys", True)
+        return json.dumps(self.to_dict(), **dumps_kwargs)
+
+    def write_bench(self, path: str, *, name: str = "",
+                    fast: Optional[bool] = None,
+                    extra: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+        """Emit the shared benchmark-artifact schema (config hash,
+        per-cell metrics, retrace count) — the one JSON writer every
+        ``BENCH_*.json`` benchmark goes through."""
+        doc = {"bench": name, "schema": "sweep-v1"}
+        if fast is not None:
+            doc["fast"] = fast
+        doc.update(self.to_dict())
+        if extra:
+            doc["extra"] = {k: _encode(v) for k, v in extra.items()}
+        with open(path, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+        return doc
+
+
+def sweep(base: Scenario, axes: Mapping[str, Sequence[Any]], *,
+          adjust: Optional[Callable[[Dict[str, Any]],
+                                    Optional[Dict[str, Any]]]] = None,
+          verbose: bool = False) -> SweepResult:
+    """Run the full grid ``axes`` over ``base`` with engine reuse.
+
+    ``axes`` maps dotted override paths (see
+    ``Scenario.with_overrides``) to value sequences. Axes in
+    :data:`TRACED_AXES` are traced scalars of the fused engine — the
+    sweep orders them innermost and reuses one engine per trace-static
+    combination, so e.g. a ``transfer_budget x lr`` grid compiles exactly
+    once per (algorithm, shape). ``adjust`` may return extra per-cell
+    overrides derived from the grid point (e.g. switching to the grouped
+    distribution for policies that need group slots); derived overrides
+    are recorded in the cell.
+    """
+    static_axes = [(k, list(v)) for k, v in axes.items()
+                   if k not in TRACED_AXES]
+    traced_axes = [(k, list(v)) for k, v in axes.items() if k in TRACED_AXES]
+    cells: List[SweepCell] = []
+    t0 = time.time()
+    # traced budget mode keeps a budget axis from splitting engines
+    budget_axis = "dfl.transfer_budget" in axes
+    # bounded LRU engine cache: cells that differ only in traced knobs —
+    # or repeat a trace-static combination (e.g. a seed axis) — reuse a
+    # live engine, while a long static grid doesn't keep every compiled
+    # executable alive at once (evicted engines log their trace count)
+    retired: List[int] = []
+    engines = _EngineCache(maxsize=2,
+                           on_evict=lambda e: retired.append(e.traces))
+
+    for static_vals in itertools.product(*(v for _, v in static_axes)):
+        for traced_vals in itertools.product(*(v for _, v in traced_axes)):
+            overrides: Dict[str, Any] = dict(
+                zip((k for k, _ in static_axes), static_vals))
+            overrides.update(
+                zip((k for k, _ in traced_axes), traced_vals))
+            if adjust is not None:
+                overrides.update(adjust(dict(overrides)) or {})
+            cell_scenario = base.with_overrides(overrides)
+            result = run(cell_scenario, engines=engines,
+                         force_traced_budget=budget_axis)
+            cells.append(SweepCell(overrides=overrides, result=result))
+            if verbose:
+                label = ",".join(f"{k}={_encode(v)}"
+                                 for k, v in overrides.items())
+                print(f"sweep[{label}] best={result.best_acc:.4f} "
+                      f"traces={result.traces} ({result.wall_s:.1f}s)")
+
+    retired.extend(eng.traces for eng in engines.values())
+    engine_traces = {f"engine{idx}": t for idx, t in enumerate(retired)}
+    return SweepResult(base=base, axes={k: list(v) for k, v in axes.items()},
+                       cells=cells, engine_traces=engine_traces,
+                       wall_s=time.time() - t0)
+
+
+class _EngineCache(collections.OrderedDict):
+    """LRU mapping of engine keys to live FleetEngines; evicted engines
+    report their trace count through ``on_evict`` so the sweep's retrace
+    accounting stays complete."""
+
+    def __init__(self, *, maxsize: int, on_evict: Callable[[Any], None]):
+        super().__init__()
+        self.maxsize = maxsize
+        self.on_evict = on_evict
+
+    def get(self, key, default=None):
+        if key not in self:
+            return default
+        self.move_to_end(key)
+        return super().__getitem__(key)
+
+    def __setitem__(self, key, value):
+        super().__setitem__(key, value)
+        self.move_to_end(key)
+        while len(self) > self.maxsize:
+            _, evicted = self.popitem(last=False)
+            self.on_evict(evicted)

@@ -1,0 +1,542 @@
+"""Declarative experiment specs: the single source of truth for what a
+fleet experiment *is*.
+
+A :class:`Scenario` is a frozen, fully serializable wrapper around
+``ExperimentConfig`` / ``DFLConfig`` / ``MobilityConfig`` plus the
+run-level knobs (``engine``, ``verbose``, ``record_cache_stats``) that
+used to ride as ``run_experiment`` kwargs. It round-trips through
+``to_dict``/``from_dict``/``to_json``/``from_json`` losslessly, supports
+dotted-path overrides built generically from dataclass introspection
+(``with_overrides({"dfl.policy": "mobility_aware",
+"mobility.levy_alpha": 1.2})`` — unknown keys raise, naming the valid
+fields), and resolves once into a validated :class:`ResolvedScenario`
+(registry lookups, the ``num_groups``→``num_bands`` threading, policy /
+budget consistency checks) whose ``build_fleet()`` replaces the old
+9-tuple with the named :class:`Fleet` struct.
+
+Downstream consumers (CLI, benchmarks, examples, tools, tests) go
+through ``repro.api`` → :mod:`repro.fl.runner`, which executes a
+``Scenario`` into a typed ``RunResult``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import math
+import typing
+from typing import Any, Dict, List, Mapping, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import DFLConfig, MobilityConfig
+from repro.configs.paper_models import CNNConfig, PAPER_CONFIGS
+from repro.core import rounds as rounds_lib
+from repro.data.synthetic import make_image_dataset
+from repro.fl import partition as part_lib
+from repro.mobility import registry as mob_registry
+from repro.mobility import stats as mob_stats
+from repro.mobility.base import make_bands
+from repro.models import cnn as cnn_lib
+from repro.policies import registry as policy_registry
+
+ALGORITHMS = ("cached", "dfl", "cfl")
+DISTRIBUTIONS = ("iid", "noniid", "dirichlet", "grouped")
+ENGINES = ("fused", "legacy")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentConfig:
+    model: str = "paper-mnist-cnn"
+    distribution: str = "noniid"      # iid | noniid | dirichlet | grouped
+    algorithm: str = "cached"         # cached | dfl | cfl
+    dfl: DFLConfig = dataclasses.field(default_factory=DFLConfig)
+    mobility: MobilityConfig = dataclasses.field(
+        default_factory=MobilityConfig)
+    epochs: int = 50
+    eval_every: int = 1
+    seed: int = 0
+    n_train: int = 6000
+    n_test: int = 1000
+    image_hw: int = 0                 # 0 -> model default
+    max_partners: int = 4
+    partner_sample: str = "lowest-id"  # lowest-id | random (radio budget)
+    early_stop_patience: int = 20
+    dirichlet_pi: float = 0.5
+    overlap: int = 0                  # grouped: label overlap between areas
+    num_groups: int = 3
+    lr_plateau: bool = True
+
+
+def _area_labels(num_groups: int, overlap: int, num_classes: int = 10):
+    """n-overlap label allocation (paper appendix B.1.1).
+
+    For ``num_groups`` that do not divide ``num_classes`` the remainder
+    classes are spread one-per-group from the front, so every class is
+    owned by at least one group (groups beyond ``num_classes`` stay
+    empty).
+    """
+    base = [list(range(0, 4)), list(range(4, 7)), list(range(7, 10))]
+    if num_groups != 3:
+        per, rem = divmod(num_classes, num_groups)
+        sizes = [per + (1 if g < rem else 0) for g in range(num_groups)]
+        starts = [sum(sizes[:g]) for g in range(num_groups)]
+        base = [list(range(starts[g], starts[g] + sizes[g]))
+                for g in range(num_groups)]
+    out = []
+    for g, labels in enumerate(base):
+        l = list(labels)
+        for k in range(1, overlap + 1):
+            if labels:
+                l.append((labels[0] - k) % num_classes)  # borrow neighbors
+        out.append(sorted(set(l)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# generic dataclass <-> dict plumbing (serialization + dotted overrides)
+# ---------------------------------------------------------------------------
+
+def _encode(value):
+    """JSON-safe encoding: nested dataclasses -> dicts, tuples -> lists,
+    non-finite floats -> "inf"/"-inf"/"nan" sentinels (strict RFC 8259)."""
+    if dataclasses.is_dataclass(value) and not isinstance(value, type):
+        return {f.name: _encode(getattr(value, f.name))
+                for f in dataclasses.fields(value)}
+    if isinstance(value, (tuple, list)):
+        return [_encode(v) for v in value]
+    if isinstance(value, float) and not math.isfinite(value):
+        return "nan" if math.isnan(value) else (
+            "inf" if value > 0 else "-inf")
+    return value
+
+
+_FLOAT_SENTINELS = {"inf": float("inf"), "-inf": float("-inf"),
+                    "nan": float("nan")}
+
+
+def _coerce(hint, value, *, path: str):
+    """Coerce ``value`` (possibly a string from JSON / the CLI ``--set``
+    flag) to the annotated field type ``hint``."""
+    if dataclasses.is_dataclass(hint):
+        if isinstance(value, hint):
+            return value
+        if isinstance(value, Mapping):
+            return _dataclass_from_dict(hint, value, path=path)
+        raise ValueError(
+            f"{path!r} expects a {hint.__name__} (or a mapping of its "
+            f"fields), got {value!r}")
+    origin = typing.get_origin(hint)
+    if origin is tuple:  # DFLConfig.policy_params
+        return _coerce_policy_params(value, path=path)
+    if hint is bool:
+        if isinstance(value, bool):
+            return value
+        if isinstance(value, str):
+            low = value.strip().lower()
+            if low in ("1", "true", "yes", "on"):
+                return True
+            if low in ("0", "false", "no", "off"):
+                return False
+        raise ValueError(f"{path!r} expects a bool, got {value!r}")
+    if hint is int:
+        if isinstance(value, bool) or not isinstance(value, (int, str)):
+            raise ValueError(f"{path!r} expects an int, got {value!r}")
+        try:
+            return int(value)
+        except ValueError:
+            raise ValueError(
+                f"{path!r} expects an int, got {value!r}") from None
+    if hint is float:
+        if isinstance(value, str):
+            if value.strip().lower() in _FLOAT_SENTINELS:
+                return _FLOAT_SENTINELS[value.strip().lower()]
+            try:
+                return float(value)
+            except ValueError:
+                raise ValueError(
+                    f"{path!r} expects a float, got {value!r}") from None
+        if isinstance(value, (int, float)) and not isinstance(value, bool):
+            return float(value)
+        raise ValueError(f"{path!r} expects a float, got {value!r}")
+    if hint is str:
+        if not isinstance(value, str):
+            raise ValueError(f"{path!r} expects a string, got {value!r}")
+        return value
+    return value
+
+
+def _coerce_policy_params(value, *, path: str) -> Tuple[Tuple[str, float], ...]:
+    """policy_params accepts ((name, value), ...), [[name, value], ...]
+    (JSON) or the CLI string form "name=1.0,other=2"."""
+    if isinstance(value, str):
+        if not value.strip():
+            return ()
+        pairs = []
+        for item in value.replace(";", ",").split(","):
+            name, sep, raw = item.partition("=")
+            if not sep or not name.strip():
+                raise ValueError(
+                    f"{path!r} expects NAME=VALUE[,NAME=VALUE...], got "
+                    f"{value!r}")
+            try:
+                pairs.append((name.strip(), float(raw)))
+            except ValueError:
+                raise ValueError(
+                    f"{path!r} expects a numeric value for "
+                    f"{name.strip()!r}, got {raw!r}") from None
+        return tuple(pairs)
+    try:
+        return tuple((str(n), float(v)) for n, v in value)
+    except (TypeError, ValueError) as e:
+        raise ValueError(
+            f"{path!r} expects (name, value) pairs, got {value!r}") from e
+
+
+def _dataclass_from_dict(cls, d: Mapping, *, path: str = ""):
+    names = {f.name for f in dataclasses.fields(cls)}
+    unknown = sorted(set(d) - names)
+    if unknown:
+        where = f" under {path!r}" if path else ""
+        raise ValueError(
+            f"unknown {cls.__name__} field(s) {unknown}{where}; "
+            f"valid fields: {sorted(names)}")
+    hints = typing.get_type_hints(cls)
+    kwargs = {k: _coerce(hints[k], v,
+                         path=f"{path}.{k}" if path else k)
+              for k, v in d.items()}
+    return cls(**kwargs)
+
+
+_GROUPS = {"dfl": DFLConfig, "mobility": MobilityConfig}
+
+
+def valid_override_paths() -> List[str]:
+    """Every dotted path ``with_overrides`` / the CLI ``--set`` accept."""
+    paths = [f.name for f in dataclasses.fields(Scenario)
+             if f.name != "experiment"]
+    for f in dataclasses.fields(ExperimentConfig):
+        paths.append(f.name)
+        if f.name in _GROUPS:
+            paths.extend(f"{f.name}.{g.name}"
+                         for g in dataclasses.fields(_GROUPS[f.name]))
+    return sorted(paths)
+
+
+# ---------------------------------------------------------------------------
+# Scenario
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """A frozen, serializable experiment spec.
+
+    ``experiment`` carries the full ``ExperimentConfig`` (which nests
+    ``DFLConfig``/``MobilityConfig``); the remaining fields are run-level
+    knobs that previously rode as ``run_experiment`` keyword arguments.
+    """
+    experiment: ExperimentConfig = dataclasses.field(
+        default_factory=ExperimentConfig)
+    name: str = ""
+    engine: str = "fused"             # fused | legacy
+    verbose: bool = False
+    record_cache_stats: bool = False
+
+    # -- serialization ------------------------------------------------------
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"name": self.name, "engine": self.engine,
+                "verbose": self.verbose,
+                "record_cache_stats": self.record_cache_stats,
+                "experiment": _encode(self.experiment)}
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "Scenario":
+        return _dataclass_from_dict(cls, d)
+
+    def to_json(self, **dumps_kwargs) -> str:
+        dumps_kwargs.setdefault("indent", 1)
+        dumps_kwargs.setdefault("sort_keys", True)
+        return json.dumps(self.to_dict(), allow_nan=False, **dumps_kwargs)
+
+    @classmethod
+    def from_json(cls, s: str) -> "Scenario":
+        return cls.from_dict(json.loads(s))
+
+    def content_hash(self) -> str:
+        """Stable provenance hash of what the run *computes*: the
+        experiment spec + engine choice. Presentation-only fields
+        (``name``, ``verbose``, ``record_cache_stats``) are excluded, so
+        a preset, a spec file, and a verbose CLI run of the same
+        experiment all report the same hash."""
+        canon = json.dumps({"experiment": _encode(self.experiment),
+                            "engine": self.engine},
+                           sort_keys=True, separators=(",", ":"),
+                           allow_nan=False)
+        return hashlib.sha256(canon.encode()).hexdigest()[:16]
+
+    # -- dotted-path overrides ---------------------------------------------
+
+    def with_overrides(self, overrides: Mapping[str, Any]) -> "Scenario":
+        """Return a new Scenario with dotted-path overrides applied.
+
+        Paths: ``dfl.<field>`` / ``mobility.<field>`` reach the nested
+        configs, bare ``ExperimentConfig`` field names (``epochs``,
+        ``algorithm``, ...) reach the experiment, and Scenario-level
+        knobs (``engine``, ``verbose``, ...) are addressed directly.
+        ``dfl`` / ``mobility`` / ``experiment`` accept a whole config
+        object (or mapping). String values are coerced to the field type,
+        so the CLI can feed ``--set dfl.cache_size=8`` verbatim. Unknown
+        paths raise, naming the valid fields.
+        """
+        scen_fields = {f.name for f in dataclasses.fields(Scenario)}
+        exp_fields = {f.name: f for f in
+                      dataclasses.fields(ExperimentConfig)}
+        exp_hints = typing.get_type_hints(ExperimentConfig)
+        scen_hints = typing.get_type_hints(Scenario)
+
+        scen_kw: Dict[str, Any] = {}
+        exp_kw: Dict[str, Any] = {}
+        group_kw: Dict[str, Dict[str, Any]] = {g: {} for g in _GROUPS}
+        exp_base: Optional[ExperimentConfig] = None
+
+        for key, value in overrides.items():
+            head, _, rest = key.partition(".")
+            if head == "experiment" and rest:
+                head, _, rest = rest.partition(".")
+            if head in _GROUPS:
+                gcls = _GROUPS[head]
+                if not rest:
+                    exp_kw[head] = _coerce(gcls, value, path=key)
+                    continue
+                gfields = {f.name for f in dataclasses.fields(gcls)}
+                if rest not in gfields:
+                    raise ValueError(
+                        f"unknown override path {key!r}: {gcls.__name__} "
+                        f"has no field {rest!r}; valid: "
+                        f"{sorted(f'{head}.{n}' for n in gfields)}")
+                ghints = typing.get_type_hints(gcls)
+                group_kw[head][rest] = _coerce(ghints[rest], value, path=key)
+            elif head == "experiment":
+                exp_base = _coerce(ExperimentConfig, value, path=key)
+            elif head in exp_fields and not rest:
+                exp_kw[head] = _coerce(exp_hints[head], value, path=key)
+            elif head in scen_fields and head != "experiment" and not rest:
+                scen_kw[head] = _coerce(scen_hints[head], value, path=key)
+            else:
+                raise ValueError(
+                    f"unknown override path {key!r}; valid paths: "
+                    f"{valid_override_paths()}")
+
+        exp = self.experiment if exp_base is None else exp_base
+        for g, kw in group_kw.items():
+            if kw:
+                base = exp_kw.get(g, getattr(exp, g))
+                exp_kw[g] = dataclasses.replace(base, **kw)
+        if exp_kw:
+            exp = dataclasses.replace(exp, **exp_kw)
+        return dataclasses.replace(self, experiment=exp, **scen_kw)
+
+    # -- resolution ---------------------------------------------------------
+
+    def resolve(self) -> "ResolvedScenario":
+        """Validate the spec once and bind registry objects.
+
+        Consolidates the checks that used to live in
+        ``resolve_policy_setup``, the ``num_groups``→``num_bands``
+        replace-hack in ``build_fleet``, and the late registry/model
+        lookups — every inconsistency fails here, naming the config
+        fields, instead of mid-trace.
+        """
+        cfg = self.experiment
+        if self.engine not in ENGINES:
+            raise ValueError(f"Scenario.engine={self.engine!r}; "
+                             f"valid engines: {list(ENGINES)}")
+        if cfg.algorithm not in ALGORITHMS:
+            raise ValueError(
+                f"ExperimentConfig.algorithm={cfg.algorithm!r}; "
+                f"valid algorithms: {list(ALGORITHMS)}")
+        if cfg.distribution not in DISTRIBUTIONS:
+            raise ValueError(
+                f"ExperimentConfig.distribution={cfg.distribution!r}; "
+                f"valid distributions: {list(DISTRIBUTIONS)}")
+        if cfg.model not in PAPER_CONFIGS:
+            raise ValueError(
+                f"ExperimentConfig.model={cfg.model!r}; registered models: "
+                f"{sorted(PAPER_CONFIGS)}")
+        if cfg.partner_sample not in ("lowest-id", "random"):
+            raise ValueError(
+                f"ExperimentConfig.partner_sample={cfg.partner_sample!r}; "
+                f"valid: ['lowest-id', 'random']")
+        if cfg.epochs <= 0 or cfg.eval_every <= 0:
+            raise ValueError(
+                f"ExperimentConfig.epochs={cfg.epochs} and "
+                f"eval_every={cfg.eval_every} must both be positive")
+        policy, policy_params = _resolve_policy_setup(cfg)
+        mob_cfg = cfg.mobility
+        if cfg.distribution == "grouped" and mob_cfg.num_bands != cfg.num_groups:
+            # grouped runs thread the group count into the area-band
+            # restriction so band == data group
+            mob_cfg = dataclasses.replace(mob_cfg, num_bands=cfg.num_groups)
+        mob_model = mob_registry.get_model(mob_cfg.model)
+        model_cfg: CNNConfig = PAPER_CONFIGS[cfg.model]
+        if cfg.image_hw:
+            model_cfg = dataclasses.replace(model_cfg, image_hw=cfg.image_hw)
+        return ResolvedScenario(
+            scenario=self, policy=policy, policy_params=policy_params,
+            mobility=mob_cfg, mob_model=mob_model, model_cfg=model_cfg)
+
+
+def _resolve_policy_setup(cfg: ExperimentConfig):
+    """Resolve + validate the cache policy once at config resolution.
+
+    Returns ``(policy, policy_params)``. Raises ValueError naming the
+    offending config fields for inconsistent setups (instead of failing
+    mid-trace inside ``gossip.exchange``), e.g. a group policy without a
+    grouped distribution or with fewer cache slots than groups.
+    """
+    pol = policy_registry.resolve(cfg.dfl.policy)
+    params = dict(cfg.dfl.policy_params)
+    if cfg.algorithm != "cached" and cfg.dfl.transfer_budget_enabled:
+        raise ValueError(
+            "DFLConfig.transfer_budget / link_entries_per_step bound the "
+            "cached algorithm's cache exchange and have no effect on "
+            f"algorithm={cfg.algorithm!r} — unset them (or use "
+            "algorithm='cached') rather than sweeping a no-op knob")
+    unknown = sorted(set(params) - set(pol.knobs) - {"gamma"})
+    if unknown:
+        raise ValueError(
+            f"DFLConfig.policy_params has unknown knob(s) {unknown} for "
+            f"policy {pol.name!r}; accepted: "
+            f"{sorted(set(pol.knobs) | {'gamma'})}")
+    if cfg.algorithm == "cached" and pol.needs_group_slots:
+        if cfg.distribution != "grouped":
+            raise ValueError(
+                f"DFLConfig.policy={pol.name!r} needs per-group cache "
+                f"slots, which require ExperimentConfig.distribution="
+                f"'grouped' (got {cfg.distribution!r})")
+        if cfg.num_groups <= 0:
+            raise ValueError(
+                f"DFLConfig.policy={pol.name!r} requires "
+                f"ExperimentConfig.num_groups > 0 "
+                f"(got {cfg.num_groups})")
+        if cfg.dfl.cache_size < cfg.num_groups:
+            raise ValueError(
+                f"DFLConfig.cache_size={cfg.dfl.cache_size} < "
+                f"ExperimentConfig.num_groups={cfg.num_groups}: the "
+                f"{pol.name!r} policy needs at least one slot per group")
+    return pol, params
+
+
+# ---------------------------------------------------------------------------
+# Fleet
+# ---------------------------------------------------------------------------
+
+class Fleet(NamedTuple):
+    """Everything a runner needs to drive one experiment.
+
+    Field order matches the historical ``build_fleet`` 9-tuple, so legacy
+    ``(model_cfg, state, ...) = build_fleet(cfg)`` unpacking keeps
+    working while new code uses the named fields.
+    """
+    model_cfg: CNNConfig
+    state: Any                 # rounds.FleetState
+    data: Dict[str, jax.Array]
+    counts: jax.Array
+    test_batch: Dict[str, jax.Array]
+    mobility_state: Any
+    group_slots: Optional[jax.Array]
+    mob_model: Any
+    mobility: MobilityConfig   # normalized (num_bands threaded)
+
+    @property
+    def num_agents(self) -> int:
+        return int(self.state.samples.shape[0])
+
+    def loss_fn(self):
+        cfg = self.model_cfg
+        return lambda p, b: cnn_lib.loss_fn(p, cfg, b["images"], b["labels"])
+
+    def acc_fn(self):
+        cfg = self.model_cfg
+        return lambda p, b: cnn_lib.accuracy(p, cfg, b["images"],
+                                             b["labels"])
+
+
+@dataclasses.dataclass(frozen=True)
+class ResolvedScenario:
+    """A validated Scenario with registry objects bound."""
+    scenario: Scenario
+    policy: Any                       # policies.base.CachePolicy
+    policy_params: Dict[str, float]
+    mobility: MobilityConfig          # num_bands threaded for grouped runs
+    mob_model: Any                    # mobility.base.MobilityModel
+    model_cfg: CNNConfig
+
+    @property
+    def experiment(self) -> ExperimentConfig:
+        return self.scenario.experiment
+
+    def build_fleet(self) -> Fleet:
+        """Materialize data, models, caches and mobility state."""
+        cfg = self.experiment
+        model_cfg = self.model_cfg
+        mob_cfg = self.mobility
+        rng = np.random.default_rng(cfg.seed)
+        N = cfg.dfl.num_agents
+
+        tx, ty, ex, ey = make_image_dataset(
+            cfg.seed, n_train=cfg.n_train, n_test=cfg.n_test,
+            hw=model_cfg.image_hw, channels=model_cfg.in_channels)
+
+        band = group = None
+        group_slots = None
+        if cfg.distribution == "iid":
+            idx, counts = part_lib.iid_partition(rng, ty, N)
+        elif cfg.distribution == "noniid":
+            idx, counts = part_lib.shards_noniid_partition(rng, ty, N)
+        elif cfg.distribution == "dirichlet":
+            idx, counts = part_lib.dirichlet_partition(rng, ty, N,
+                                                       pi=cfg.dirichlet_pi)
+        else:  # grouped (resolve() validated membership)
+            band, group = make_bands(N, cfg.num_groups)
+            idx, counts = part_lib.grouped_label_partition(
+                rng, ty, N, np.asarray(group),
+                _area_labels(cfg.num_groups, cfg.overlap))
+            per = cfg.dfl.cache_size // cfg.num_groups
+            slots = [per] * cfg.num_groups
+            for i in range(cfg.dfl.cache_size - per * cfg.num_groups):
+                slots[i] += 1
+            group_slots = jnp.asarray(slots, jnp.int32)
+
+        data = part_lib.gather_agent_data({"images": tx, "labels": ty}, idx)
+        data = {k: jnp.asarray(v) for k, v in data.items()}
+        test_batch = {"images": jnp.asarray(ex), "labels": jnp.asarray(ey)}
+
+        key = jax.random.PRNGKey(cfg.seed)
+        params0 = cnn_lib.init_params(model_cfg, key)
+        state = rounds_lib.init_fleet(params0, N, cfg.dfl.cache_size,
+                                      counts.astype(np.float32), group=group)
+        mstate = self.mob_model.init(jax.random.PRNGKey(cfg.seed + 1), N,
+                                     mob_cfg, band=band)
+        wants_encounters = (
+            self.policy.needs_encounters
+            or self.policy_params.get("w_encounter", 0.0) != 0.0)
+        if cfg.algorithm == "cached" and wants_encounters:
+            # warm-start the per-pair encounter counts from the
+            # mobility-stats subsystem: one epoch's contact roll-out on a
+            # throwaway copy of the mobility state, so the policy has a
+            # rate prior before any exchange happens
+            n_steps = min(200, max(1, int(cfg.dfl.epoch_seconds
+                                          / mob_cfg.step_seconds)))
+            _, seq = mob_stats.collect_contacts(
+                self.mob_model, mstate, jax.random.PRNGKey(cfg.seed + 3),
+                mob_cfg, n_steps)
+            est = mob_stats.encounter_stats(seq, mob_cfg.step_seconds)
+            state = dataclasses.replace(
+                state,
+                encounters=est["encounter_counts"].astype(jnp.float32))
+        return Fleet(model_cfg, state, data, jnp.asarray(counts), test_batch,
+                     mstate, group_slots, self.mob_model, mob_cfg)

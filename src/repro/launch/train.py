@@ -1,10 +1,18 @@
 """Training launcher.
 
 Two modes:
-  fleet — the paper's vehicular Cached-DFL simulation (N vehicles, Manhattan
-          mobility, CNN models, synthetic MNIST-like data):
+  fleet — the paper's vehicular Cached-DFL simulation, driven entirely by
+          the declarative Scenario API (``repro.api``). The flag surface
+          is generated from the config dataclasses, so EVERY
+          ``ExperimentConfig`` / ``DFLConfig`` / ``MobilityConfig`` field
+          is reachable — either through a generated flag
+          (``--dfl-cache-size 8``, ``--mobility-levy-alpha 1.2``) or the
+          dotted ``--set`` override (``--set dfl.cache_size=8``):
             python -m repro.launch.train --mode fleet --algorithm cached \
                 --distribution noniid --agents 20 --epochs 30
+            python -m repro.launch.train --preset paper-noniid \
+                --set dfl.policy=mobility_aware --set epochs=100
+            python -m repro.launch.train --scenario spec.json --out out.json
   pod   — the production path on CPU: a reduced --arch transformer trained
           with Cached-DFL rounds (local SGD + cache aggregation + agent
           exchange) on synthetic LM data:
@@ -17,78 +25,174 @@ import argparse
 import dataclasses
 import json
 import time
+import typing
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import registry as cfg_registry
 from repro.configs.base import DFLConfig, MobilityConfig
 
+# the fleet CLI's historical defaults (kept so bare invocations behave as
+# before the Scenario API); every other field follows the dataclass default
+_CLI_BASE_OVERRIDES = {
+    "dfl.num_agents": 20, "epochs": 30, "lr_plateau": True,
+}
 
-def run_fleet(args) -> dict:
-    from repro.fl.experiment import ExperimentConfig, run_experiment
-    cfg = ExperimentConfig(
-        model=args.model,
-        distribution=args.distribution,
-        algorithm=args.algorithm,
-        dfl=DFLConfig(num_agents=args.agents, cache_size=args.cache_size,
-                      tau_max=args.tau_max, local_steps=args.local_steps,
-                      lr=args.lr, batch_size=args.batch_size,
-                      epoch_seconds=args.epoch_seconds, policy=args.policy,
-                      policy_params=tuple(args.policy_param),
-                      transfer_budget=args.transfer_budget,
-                      link_entries_per_step=args.link_entries_per_step),
-        mobility=MobilityConfig(speed=args.speed, grid_w=args.grid_w,
-                                grid_h=args.grid_h),
-        epochs=args.epochs,
-        seed=args.seed,
-        n_train=args.n_train,
-        n_test=args.n_test,
-        image_hw=args.image_hw,
-        overlap=args.overlap,
-    )
-    hist = run_experiment(cfg, verbose=True)
-    print(f"\nbest acc {hist['best_acc']:.4f} "
-          f"final {hist['final_acc']:.4f} in {hist['wall_s']:.1f}s")
-    return hist
+# convenience aliases: historical flag name -> dotted override path
+_FLAG_ALIASES = {
+    "agents": "dfl.num_agents",
+    "cache-size": "dfl.cache_size",
+    "tau-max": "dfl.tau_max",
+    "local-steps": "dfl.local_steps",
+    "lr": "dfl.lr",
+    "batch-size": "dfl.batch_size",
+    "epoch-seconds": "dfl.epoch_seconds",
+    "policy": "dfl.policy",
+    "transfer-budget": "dfl.transfer_budget",
+    "link-entries-per-step": "dfl.link_entries_per_step",
+    "speed": "mobility.speed",
+    "grid-w": "mobility.grid_w",
+    "grid-h": "mobility.grid_h",
+    "mobility-model": "mobility.model",
+}
 
 
-def run_pod(args) -> dict:
+def _add_generated_flags(ap: argparse.ArgumentParser) -> dict:
+    """Generate one flag per scalar config field from the dataclasses.
+
+    Returns ``dest -> dotted path``; flags default to ``SUPPRESS`` so
+    only explicitly-passed ones override the base scenario / preset.
+    """
+    from repro.fl.scenario import ExperimentConfig
+    dest_to_path = {}
+    group = ap.add_argument_group(
+        "scenario fields (generated from the config dataclasses; "
+        "equivalently --set PATH=VALUE)")
+
+    def add(flag: str, path: str, ftype, help_text: str):
+        dest = "ov_" + flag.replace("-", "_")
+        kwargs = dict(default=argparse.SUPPRESS, dest=dest, help=help_text)
+        if ftype is bool:
+            kwargs["type"] = lambda v: v  # coerced by with_overrides
+            kwargs["metavar"] = "BOOL"
+        elif ftype in (int, float, str):
+            kwargs["type"] = ftype
+        else:
+            kwargs["type"] = str
+        group.add_argument(f"--{flag}", **kwargs)
+        dest_to_path[dest] = path
+
+    for prefix, cls in (("", ExperimentConfig), ("dfl-", DFLConfig),
+                        ("mobility-", MobilityConfig)):
+        hints = typing.get_type_hints(cls)
+        for f in dataclasses.fields(cls):
+            if f.name in ("dfl", "mobility", "policy_params"):
+                continue  # nested configs / structured knobs: use --set
+            path = (f"{prefix[:-1]}.{f.name}" if prefix else f.name)
+            add(prefix + f.name.replace("_", "-"), path, hints[f.name],
+                f"Scenario override for {path}")
+    for flag, path in _FLAG_ALIASES.items():
+        if "ov_" + flag.replace("-", "_") in dest_to_path:
+            continue
+        leaf = path.split(".")[-1]
+        cls = DFLConfig if path.startswith("dfl.") else MobilityConfig
+        add(flag, path, typing.get_type_hints(cls)[leaf],
+            f"alias for --set {path}=VALUE")
+    return dest_to_path
+
+
+def collect_overrides(args, dest_to_path: dict) -> dict:
+    """Merge generated-flag values, --policy-param and --set pairs into
+    one dotted-override mapping (later --set wins)."""
+    overrides = {}
+    for dest, path in dest_to_path.items():
+        if hasattr(args, dest):
+            overrides[path] = getattr(args, dest)
+    if args.policy_param:
+        # string form: with_overrides' policy_params coercion parses it
+        overrides["dfl.policy_params"] = ",".join(args.policy_param)
+    for item in args.set or []:
+        path, sep, value = item.partition("=")
+        if not sep or not path:
+            raise SystemExit(f"--set expects PATH=VALUE, got {item!r}")
+        overrides[path.strip()] = value
+    return overrides
+
+
+def scenario_from_args(args, dest_to_path: dict):
+    """Build the fleet Scenario: preset/file/CLI-default base + overrides."""
+    from repro import api
+    if args.scenario:
+        with open(args.scenario) as f:
+            base = api.Scenario.from_json(f.read())
+    elif args.preset:
+        base = api.get_preset(args.preset)
+    else:
+        base = api.Scenario().with_overrides(_CLI_BASE_OVERRIDES)
+    base = dataclasses.replace(base, verbose=True)
+    return base.with_overrides(collect_overrides(args, dest_to_path))
+
+
+def run_fleet(args, dest_to_path: dict) -> dict:
+    from repro import api
+    try:
+        scenario = scenario_from_args(args, dest_to_path)
+        scenario.resolve()       # clean CLI error, not a traceback
+    except (ValueError, KeyError) as e:
+        raise SystemExit(f"error: {e}") from None
+    result = api.run(scenario)
+    print(f"\nbest acc {result.best_acc:.4f} "
+          f"final {result.final_acc:.4f} in {result.wall_s:.1f}s "
+          f"[config {result.config_hash}]")
+    return result.to_dict()
+
+
+def run_pod(args, overrides: dict) -> dict:
     """Cached-DFL rounds over pod-scale agents with a reduced transformer."""
+    from repro import api
     from repro.data.synthetic import make_lm_dataset
     from repro.launch import steps as steps_lib
     from repro.models import registry as models
 
+    # validate + coerce through the Scenario override machinery, so a
+    # misspelled --set path fails loudly here exactly as in fleet mode
+    try:
+        exp = api.Scenario().with_overrides(overrides).experiment
+    except (ValueError, KeyError) as e:
+        raise SystemExit(f"error: {e}") from None
+    dfl = exp.dfl
+
     cfg = cfg_registry.get_smoke_config(args.arch)
-    key = jax.random.PRNGKey(args.seed)
-    agents = args.agents
-    toks = make_lm_dataset(args.seed, vocab=cfg.vocab, seq_len=args.seq_len,
-                           n_seq=agents * args.batch_size * 4)
+    key = jax.random.PRNGKey(exp.seed)
+    agents = min(dfl.num_agents, 4)
+    batch_size = min(dfl.batch_size, 4)
+    cache_size = min(dfl.cache_size, 3)
+    toks = make_lm_dataset(exp.seed, vocab=cfg.vocab, seq_len=args.seq_len,
+                           n_seq=agents * batch_size * 4)
     toks = jnp.asarray(toks)
 
     params = jax.vmap(lambda k: models.init_params(cfg, k))(
         jax.random.split(key, agents))
     cache = steps_lib.init_pod_cache(
-        cfg, models.init_params(cfg, key), args.cache_size, agents=agents)
+        cfg, models.init_params(cfg, key), cache_size, agents=agents)
     # same unlimited-sentinel normalization as the fleet path
-    budget = DFLConfig(
-        transfer_budget=args.transfer_budget).resolved_transfer_budget
+    budget = dfl.resolved_transfer_budget
     step = jax.jit(steps_lib.make_train_step(
-        cfg, lr=args.lr, multi_pod=True, tau_max=args.tau_max,
-        policy=args.policy, scan_layers=True, transfer_budget=budget))
+        cfg, lr=dfl.lr, multi_pod=True, tau_max=dfl.tau_max,
+        policy=dfl.policy, scan_layers=True, transfer_budget=budget))
 
     def make_batch(k):
-        idx = jax.random.randint(k, (agents, args.batch_size), 0,
+        idx = jax.random.randint(k, (agents, batch_size), 0,
                                  toks.shape[0])
         batch = {"tokens": toks[idx]}
         if cfg.family == "vlm":
             batch["image_embeds"] = jnp.zeros(
-                (agents, args.batch_size, cfg.image_tokens, cfg.d_model),
+                (agents, batch_size, cfg.image_tokens, cfg.d_model),
                 jnp.dtype(cfg.compute_dtype))
         if cfg.enc_dec:
             batch["frames"] = jnp.zeros(
-                (agents, args.batch_size, cfg.enc_context, cfg.d_model),
+                (agents, batch_size, cfg.enc_context, cfg.d_model),
                 jnp.dtype(cfg.compute_dtype))
         return batch
 
@@ -107,72 +211,48 @@ def run_pod(args) -> dict:
     return {"losses": losses}
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser(description=__doc__)
+def build_parser():
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("--mode", choices=["fleet", "pod"], default="fleet")
-    # fleet args
-    ap.add_argument("--model", default="paper-mnist-cnn")
-    ap.add_argument("--distribution", default="noniid",
-                    choices=["iid", "noniid", "dirichlet", "grouped"])
-    ap.add_argument("--algorithm", default="cached",
-                    choices=["cached", "dfl", "cfl"])
-    from repro.policies import registry as policy_registry
-
-    def policy_param(arg: str):
-        name, sep, value = arg.partition("=")
-        if not sep or not name:
-            raise argparse.ArgumentTypeError(
-                f"expected NAME=VALUE, got {arg!r}")
-        try:
-            return name, float(value)
-        except ValueError:
-            raise argparse.ArgumentTypeError(
-                f"value for {name!r} must be a number, got {value!r}")
-
-    ap.add_argument("--policy", default="lru",
-                    choices=policy_registry.available())
+    # scenario sources (fleet mode)
+    ap.add_argument("--scenario", default="",
+                    help="load a Scenario JSON spec (see Scenario.to_json)")
+    ap.add_argument("--preset", default="",
+                    help="start from a named preset (see --list-presets)")
+    ap.add_argument("--list-presets", action="store_true",
+                    help="list registered scenario presets and exit")
+    ap.add_argument("--set", action="append", default=[], metavar="PATH=VALUE",
+                    help="dotted scenario override, repeatable (e.g. "
+                         "--set dfl.cache_size=8 --set mobility.levy_alpha=1.2)")
     ap.add_argument("--policy-param", action="append", default=[],
-                    type=policy_param, metavar="NAME=VALUE",
+                    metavar="NAME=VALUE",
                     help="score knob for the chosen policy, repeatable "
-                         "(e.g. --policy-param mobility_bias=8)")
-    ap.add_argument("--transfer-budget", type=float, default=float("inf"),
-                    help="max cache entries one contact can move per link "
-                         "per epoch (inf = unlimited, 0 = metadata only; "
-                         "cached algorithm / pod exchange only)")
-    ap.add_argument("--link-entries-per-step", type=float, default=0.0,
-                    help="entries admitted per simulation step of measured "
-                         "contact duration (0 = link speed unconstrained; "
-                         "fleet mode, cached algorithm only)")
-    ap.add_argument("--agents", type=int, default=20)
-    ap.add_argument("--cache-size", type=int, default=10)
-    ap.add_argument("--tau-max", type=int, default=10)
-    ap.add_argument("--local-steps", type=int, default=10)
-    ap.add_argument("--epochs", type=int, default=30)
-    ap.add_argument("--lr", type=float, default=0.1)
-    ap.add_argument("--batch-size", type=int, default=64)
-    ap.add_argument("--epoch-seconds", type=float, default=120.0)
-    ap.add_argument("--speed", type=float, default=13.89)
-    ap.add_argument("--grid-w", type=int, default=10)
-    ap.add_argument("--grid-h", type=int, default=30)
-    ap.add_argument("--n-train", type=int, default=6000)
-    ap.add_argument("--n-test", type=int, default=1000)
-    ap.add_argument("--image-hw", type=int, default=0)
-    ap.add_argument("--overlap", type=int, default=0)
-    ap.add_argument("--seed", type=int, default=0)
+                         "(e.g. --policy-param mobility_bias=8); "
+                         "shorthand for --set dfl.policy_params=...")
+    dest_to_path = _add_generated_flags(ap)
     # pod args
     ap.add_argument("--arch", choices=cfg_registry.ARCH_IDS,
                     default="internlm2-1.8b")
     ap.add_argument("--steps", type=int, default=10)
     ap.add_argument("--seq-len", type=int, default=128)
     ap.add_argument("--out", default="")
+    return ap, dest_to_path
+
+
+def main() -> None:
+    ap, dest_to_path = build_parser()
     args = ap.parse_args()
+    if args.list_presets:
+        from repro import api
+        for name in api.available_presets():
+            print(f"{name:>20}  {api.preset_doc(name)}")
+        return
     if args.mode == "pod":
-        args.batch_size = min(args.batch_size, 4)
-        args.agents = min(args.agents, 4)
-        args.cache_size = min(args.cache_size, 3)
-        hist = run_pod(args)
+        hist = run_pod(args, collect_overrides(args, dest_to_path))
     else:
-        hist = run_fleet(args)
+        hist = run_fleet(args, dest_to_path)
     if args.out:
         with open(args.out, "w") as f:
             json.dump(hist, f, indent=1)

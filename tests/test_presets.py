@@ -1,0 +1,47 @@
+"""Fast preset gate: every registered preset must resolve() without
+error (a broken preset fails tier-1, not the nightly smoke) and
+round-trip through JSON losslessly."""
+import pytest
+
+from repro import api
+
+
+def test_presets_registered():
+    names = api.available_presets()
+    assert {"paper-noniid", "grouped-overlap", "budget-limited",
+            "trace-replay"} <= set(names)
+
+
+@pytest.mark.parametrize("name", api.available_presets())
+def test_preset_resolves(name):
+    scenario = api.get_preset(name)
+    assert scenario.name == name
+    rs = scenario.resolve()
+    assert rs.scenario is scenario
+    assert rs.mob_model.name == rs.mobility.model
+
+
+@pytest.mark.parametrize("name", api.available_presets())
+def test_preset_json_roundtrip(name):
+    scenario = api.get_preset(name)
+    again = api.Scenario.from_json(scenario.to_json())
+    assert again == scenario
+    again.resolve()
+
+
+def test_preset_docs_present():
+    for name in api.available_presets():
+        assert api.preset_doc(name).strip(), name
+
+
+def test_unknown_preset_raises_naming_available():
+    with pytest.raises(ValueError, match="paper-noniid"):
+        api.get_preset("warp-speed")
+
+
+def test_preset_overridable():
+    s = api.get_preset("paper-noniid").with_overrides(
+        {"dfl.policy": "mobility_aware", "epochs": 5})
+    assert s.experiment.dfl.policy == "mobility_aware"
+    assert s.experiment.epochs == 5
+    s.resolve()

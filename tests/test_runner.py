@@ -1,0 +1,149 @@
+"""Runner API: typed RunResult vs the run_experiment shim, the terminal-
+epoch eval-cadence fix, and the compile-aware sweep (traced axes reuse
+one fused engine — no retraces)."""
+import json
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.configs.base import DFLConfig, MobilityConfig
+from repro.fl.experiment import ExperimentConfig, run_experiment
+
+TINY = dict(
+    dfl=DFLConfig(num_agents=6, cache_size=3, tau_max=10, local_steps=2,
+                  lr=0.1, batch_size=16, epoch_seconds=10.0),
+    mobility=MobilityConfig(grid_w=4, grid_h=6),
+    epochs=2, eval_every=2, n_train=300, n_test=60, image_hw=8,
+    lr_plateau=False,
+)
+
+
+def tiny_scenario(**kw):
+    merged = {**TINY, **kw}
+    return api.Scenario(experiment=ExperimentConfig(**merged),
+                        record_cache_stats=True)
+
+
+# ---------------------------------------------------------------------------
+# RunResult vs the legacy shim
+# ---------------------------------------------------------------------------
+
+def test_run_matches_run_experiment_shim():
+    scenario = tiny_scenario()
+    result = api.run(scenario)
+    hist = run_experiment(scenario.experiment, record_cache_stats=True)
+    assert result.acc == hist["acc"]
+    assert result.epoch == hist["epoch"]
+    assert result.cache_num == hist["cache_num"]
+    assert result.traces == hist["epoch_traces"] == 1
+    assert result.best_acc == hist["best_acc"]
+    assert result.final_acc == hist["final_acc"]
+
+
+def test_run_result_typed_fields_and_json():
+    result = api.run(tiny_scenario())
+    assert result.engine == "fused"
+    assert result.config_hash == tiny_scenario().content_hash()
+    assert result.best_epoch in result.epoch
+    doc = json.loads(result.to_json())
+    assert doc["config_hash"] == result.config_hash
+    assert doc["metrics"]["acc"] == result.acc
+    # history() is the exact legacy dict shape
+    hist = result.history()
+    assert set(hist) == {"epoch", "acc", "lr", "cache_num", "cache_age",
+                         "epoch_traces", "engine", "best_acc", "final_acc",
+                         "wall_s"}
+
+
+def test_run_legacy_engine():
+    result = api.run(tiny_scenario().with_overrides({"engine": "legacy"}))
+    assert result.engine == "legacy"
+    assert len(result.acc) == 1 and np.isfinite(result.acc).all()
+
+
+# ---------------------------------------------------------------------------
+# eval cadence: the terminal epoch is always evaluated (satellite)
+# ---------------------------------------------------------------------------
+
+def test_fused_evaluates_terminal_partial_chunk():
+    """epochs not a multiple of eval_every: the tail epochs used to run
+    but never land in the history."""
+    result = api.run(tiny_scenario(epochs=5, eval_every=2))
+    assert result.epoch == [2, 4, 5]
+    assert result.final_acc == result.acc[-1]
+
+
+def test_legacy_evaluates_terminal_partial_chunk():
+    result = api.run(tiny_scenario(epochs=3, eval_every=2).with_overrides(
+        {"engine": "legacy"}))
+    assert result.epoch == [2, 3]
+
+
+@pytest.mark.slow
+def test_fused_and_legacy_history_lengths_pinned():
+    """Regression: epochs=10, eval_every=3 — fused == legacy histories,
+    both including the terminal epoch."""
+    fused = run_experiment(ExperimentConfig(**{**TINY, "epochs": 10,
+                                               "eval_every": 3}))
+    legacy = run_experiment(ExperimentConfig(**{**TINY, "epochs": 10,
+                                                "eval_every": 3}),
+                            engine="legacy")
+    assert fused["epoch"] == legacy["epoch"] == [3, 6, 9, 10]
+    assert len(fused["acc"]) == len(legacy["acc"]) == 4
+    np.testing.assert_allclose(fused["acc"], legacy["acc"], atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# sweep: compile-aware grids (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+def test_sweep_budget_lr_grid_single_engine_single_trace():
+    """Acceptance: sweeping transfer_budget × lr reuses ONE fused engine
+    with exactly one trace — the engine's no-retrace guarantee holds
+    through the new API."""
+    sw = api.sweep(tiny_scenario(),
+                   {"dfl.transfer_budget": [0.0, 2.0, float("inf")],
+                    "dfl.lr": [0.1, 0.05]})
+    assert len(sw.cells) == 6
+    assert sw.num_engines == 1
+    assert list(sw.engine_traces.values()) == [1]
+    assert sw.retraces == 0
+    for cell in sw.cells:
+        assert np.isfinite(cell.result.acc).all()
+
+
+def test_sweep_static_axis_splits_engines():
+    sw = api.sweep(tiny_scenario(), {"dfl.policy": ["lru", "fifo"],
+                                     "dfl.lr": [0.1, 0.05]})
+    assert len(sw.cells) == 4
+    assert sw.num_engines == 2               # one per trace-static combo
+    assert sw.retraces == 0
+
+
+def test_sweep_adjust_and_select():
+    sw = api.sweep(tiny_scenario(), {"dfl.lr": [0.1, 0.05]},
+                   adjust=lambda ov: {"seed": 3})
+    assert all(c.overrides["seed"] == 3 for c in sw.cells)
+    assert all(c.result.scenario.experiment.seed == 3 for c in sw.cells)
+    assert len(sw.select(dfl_lr=0.1)) == 1
+    # underscore shorthand also works for fields whose names contain '_'
+    sw2 = api.sweep(tiny_scenario(),
+                    {"dfl.transfer_budget": [0.0, 2.0]})
+    assert len(sw2.select(dfl_transfer_budget=2.0)) == 1
+
+
+def test_sweep_write_bench_schema(tmp_path):
+    sw = api.sweep(tiny_scenario(), {"dfl.lr": [0.1]})
+    out = tmp_path / "BENCH_test.json"
+    doc = sw.write_bench(str(out), name="unit", fast=True,
+                         extra={"budget": float("inf")})
+    on_disk = json.loads(out.read_text())
+    assert on_disk == doc
+    assert on_disk["bench"] == "unit"
+    assert on_disk["schema"] == "sweep-v1"
+    assert on_disk["retraces"] == 0
+    assert on_disk["extra"]["budget"] == "inf"    # strict JSON
+    cell = on_disk["cells"][0]
+    assert {"overrides", "config_hash", "best_acc", "final_acc",
+            "traces"} <= set(cell)

@@ -1,0 +1,337 @@
+"""Scenario API: lossless serialization round-trips, dotted-path
+overrides (unknown keys raise, every config field reachable — including
+via the CLI ``--set`` surface), consolidated resolve() validation, the
+named Fleet struct, and the _area_labels remainder fix."""
+import dataclasses
+import json
+import typing
+
+import pytest
+
+from repro import api
+from repro.configs.base import DFLConfig, MobilityConfig
+from repro.fl.scenario import (ExperimentConfig, Scenario, _area_labels,
+                               valid_override_paths)
+from repro.mobility import registry as mob_registry
+from repro.policies import registry as policy_registry
+
+
+# ---------------------------------------------------------------------------
+# serialization round trips
+# ---------------------------------------------------------------------------
+
+def test_roundtrip_default():
+    s = Scenario()
+    assert Scenario.from_json(s.to_json()) == s
+    assert Scenario.from_dict(s.to_dict()) == s
+
+
+@pytest.mark.parametrize("mobility", mob_registry.available())
+@pytest.mark.parametrize("policy", policy_registry.available())
+def test_roundtrip_every_mobility_policy_combo(mobility, policy):
+    """Acceptance: lossless JSON round trip for every registered
+    mobility model × cache policy combination."""
+    s = Scenario(name=f"{mobility}-{policy}").with_overrides({
+        "mobility.model": mobility,
+        "dfl.policy": policy,
+        "mobility.levy_alpha": 1.25,
+        "mobility.trace_path": "/tmp/t.npz",
+        "dfl.policy_params": (("gamma", 0.9),),
+        "distribution": "grouped",
+        "engine": "legacy",
+    })
+    s2 = Scenario.from_json(s.to_json())
+    assert s2 == s
+    assert s2.content_hash() == s.content_hash()
+
+
+def test_roundtrip_nonfinite_floats():
+    s = Scenario().with_overrides({"dfl.transfer_budget": float("inf")})
+    j = s.to_json()
+    json.loads(j)                        # strict JSON, no Infinity literal
+    assert "Infinity" not in j
+    s2 = Scenario.from_json(j)
+    assert s2.experiment.dfl.transfer_budget == float("inf")
+    assert s2 == s
+
+
+def test_from_dict_unknown_key_raises_naming_fields():
+    with pytest.raises(ValueError, match="experiment"):
+        Scenario.from_dict({"bogus": 1})
+    with pytest.raises(ValueError, match="cache_size"):
+        Scenario.from_dict({"experiment": {"dfl": {"cach_size": 3}}})
+
+
+def test_content_hash_changes_with_config():
+    a = Scenario()
+    b = a.with_overrides({"dfl.cache_size": 7})
+    assert a.content_hash() != b.content_hash()
+    assert a.content_hash() == Scenario().content_hash()
+
+
+def test_content_hash_ignores_presentation_fields():
+    """The provenance hash covers what the run computes — a named
+    preset, a verbose CLI run and an anonymous spec of the same
+    experiment hash identically."""
+    a = Scenario()
+    assert a.content_hash() == Scenario(name="x", verbose=True,
+                                        record_cache_stats=True
+                                        ).content_hash()
+    assert a.content_hash() != Scenario(engine="legacy").content_hash()
+
+
+def test_coercion_errors_name_the_path():
+    with pytest.raises(ValueError, match="epochs"):
+        Scenario().with_overrides({"epochs": "abc"})
+    with pytest.raises(ValueError, match="dfl.lr"):
+        Scenario().with_overrides({"dfl.lr": "1..2"})
+
+
+# ---------------------------------------------------------------------------
+# dotted-path overrides
+# ---------------------------------------------------------------------------
+
+def test_with_overrides_nested_and_toplevel():
+    s = Scenario().with_overrides({
+        "dfl.policy": "mobility_aware",
+        "mobility.levy_alpha": 1.2,
+        "epochs": 7,
+        "engine": "legacy",
+        "experiment.dfl.cache_size": 4,
+    })
+    assert s.experiment.dfl.policy == "mobility_aware"
+    assert s.experiment.mobility.levy_alpha == 1.2
+    assert s.experiment.epochs == 7
+    assert s.engine == "legacy"
+    assert s.experiment.dfl.cache_size == 4
+
+
+def test_with_overrides_whole_subconfig():
+    mob = MobilityConfig(model="community", community_radius=99.0)
+    s = Scenario().with_overrides({"mobility": mob, "dfl.cache_size": 3})
+    assert s.experiment.mobility == mob
+    assert s.experiment.dfl.cache_size == 3
+
+
+def test_with_overrides_unknown_key_raises_naming_valid():
+    with pytest.raises(ValueError, match="dfl.cache_size"):
+        Scenario().with_overrides({"dfl.nope": 1})
+    with pytest.raises(ValueError, match="valid paths"):
+        Scenario().with_overrides({"totally_bogus": 1})
+    with pytest.raises(ValueError, match="valid paths"):
+        Scenario().with_overrides({"epochs.nested": 1})
+
+
+def test_with_overrides_does_not_mutate_base():
+    base = Scenario()
+    base.with_overrides({"dfl.cache_size": 99, "epochs": 1})
+    assert base.experiment.dfl.cache_size == DFLConfig().cache_size
+    assert base.experiment.epochs == ExperimentConfig().epochs
+
+
+def _string_value(hint, default):
+    """A non-default CLI-style string for a field of type ``hint``."""
+    if hint is bool:
+        return "false" if default else "true", (not default)
+    if hint is int:
+        return str(default + 1), default + 1
+    if hint is float:
+        new = 2.5 if default in (float("inf"), 0.0) else default + 0.5
+        return repr(new), new
+    if hint is str:
+        return default + "x", default + "x"
+    return None
+
+
+@pytest.mark.parametrize("group,cls", [("dfl", DFLConfig),
+                                       ("mobility", MobilityConfig)])
+def test_every_config_field_reachable_via_string_override(group, cls):
+    """Satellite: no unreachable knobs — every DFLConfig/MobilityConfig
+    field accepts a string value, as the CLI --set flag supplies it."""
+    hints = typing.get_type_hints(cls)
+    for f in dataclasses.fields(cls):
+        path = f"{group}.{f.name}"
+        if f.name == "policy_params":
+            s = Scenario().with_overrides({path: "gamma=0.9,w_ts=2"})
+            assert getattr(s.experiment, group).policy_params == (
+                ("gamma", 0.9), ("w_ts", 2.0))
+            continue
+        default = getattr(cls(), f.name)
+        sval, expect = _string_value(hints[f.name], default)
+        s = Scenario().with_overrides({path: sval})
+        assert getattr(getattr(s.experiment, group), f.name) == expect, path
+
+
+def test_valid_override_paths_cover_all_fields():
+    paths = set(valid_override_paths())
+    for f in dataclasses.fields(DFLConfig):
+        assert f"dfl.{f.name}" in paths
+    for f in dataclasses.fields(MobilityConfig):
+        assert f"mobility.{f.name}" in paths
+    for f in dataclasses.fields(ExperimentConfig):
+        assert f.name in paths
+    assert "engine" in paths
+
+
+def test_coercion_rejects_garbage():
+    with pytest.raises(ValueError, match="int"):
+        Scenario().with_overrides({"epochs": "many"})
+    with pytest.raises(ValueError, match="bool"):
+        Scenario().with_overrides({"lr_plateau": "maybe"})
+    with pytest.raises(ValueError, match="NAME=VALUE"):
+        Scenario().with_overrides({"dfl.policy_params": "garbage"})
+
+
+# ---------------------------------------------------------------------------
+# CLI surface (--set / generated flags / presets)
+# ---------------------------------------------------------------------------
+
+def _cli_scenario(argv):
+    from repro.launch.train import build_parser, scenario_from_args
+    ap, dest_to_path = build_parser()
+    return scenario_from_args(ap.parse_args(argv), dest_to_path)
+
+
+def test_cli_set_reaches_every_dfl_and_mobility_field():
+    """Satellite: the CLI exposes the full config surface — no more
+    unreachable knobs like levy_alpha or max_partners."""
+    hints = {**{f"dfl.{f.name}": typing.get_type_hints(DFLConfig)[f.name]
+                for f in dataclasses.fields(DFLConfig)},
+             **{f"mobility.{f.name}":
+                typing.get_type_hints(MobilityConfig)[f.name]
+                for f in dataclasses.fields(MobilityConfig)}}
+    argv, expects = [], {}
+    for path, hint in hints.items():
+        if path.endswith("policy_params"):
+            continue
+        group, leaf = path.split(".")
+        default = getattr({"dfl": DFLConfig(), "mobility":
+                           MobilityConfig()}[group], leaf)
+        sval, expect = _string_value(hint, default)
+        argv += ["--set", f"{path}={sval}"]
+        expects[path] = expect
+    s = _cli_scenario(argv)
+    for path, expect in expects.items():
+        group, leaf = path.split(".")
+        assert getattr(getattr(s.experiment, group), leaf) == expect, path
+
+
+def test_cli_generated_flags_and_aliases():
+    s = _cli_scenario(["--mobility-levy-alpha", "1.75",
+                       "--agents", "9", "--dfl-cache-size", "4",
+                       "--max-partners", "2", "--policy", "fifo"])
+    assert s.experiment.mobility.levy_alpha == 1.75
+    assert s.experiment.dfl.num_agents == 9
+    assert s.experiment.dfl.cache_size == 4
+    assert s.experiment.max_partners == 2
+    assert s.experiment.dfl.policy == "fifo"
+
+
+def test_cli_defaults_match_historical_launcher():
+    s = _cli_scenario([])
+    assert s.experiment.dfl.num_agents == 20
+    assert s.experiment.epochs == 30
+
+
+def test_cli_preset_and_scenario_file(tmp_path):
+    s = _cli_scenario(["--preset", "grouped-overlap", "--set", "epochs=3"])
+    assert s.experiment.distribution == "grouped"
+    assert s.experiment.dfl.policy == "group"
+    assert s.experiment.epochs == 3
+    spec = tmp_path / "spec.json"
+    spec.write_text(api.get_preset("budget-limited").to_json())
+    s2 = _cli_scenario(["--scenario", str(spec), "--agents", "7"])
+    assert s2.experiment.dfl.transfer_budget == 2.0
+    assert s2.experiment.dfl.num_agents == 7
+
+
+# ---------------------------------------------------------------------------
+# resolve(): consolidated validation
+# ---------------------------------------------------------------------------
+
+def test_resolve_rejects_bad_enums():
+    with pytest.raises(ValueError, match="algorithm"):
+        Scenario().with_overrides({"algorithm": "sgd"}).resolve()
+    with pytest.raises(ValueError, match="distribution"):
+        Scenario().with_overrides({"distribution": "uniform"}).resolve()
+    with pytest.raises(ValueError, match="engines"):
+        Scenario(engine="warp").resolve()
+    with pytest.raises(ValueError, match="registered models"):
+        Scenario().with_overrides({"model": "resnet-152"}).resolve()
+    with pytest.raises(KeyError, match="mobility model"):
+        Scenario().with_overrides({"mobility.model": "teleport"}).resolve()
+
+
+def test_resolve_rejects_budget_on_noncached():
+    bad = Scenario().with_overrides({"algorithm": "dfl",
+                                     "dfl.transfer_budget": 2.0})
+    with pytest.raises(ValueError, match="transfer_budget"):
+        bad.resolve()
+
+
+def test_resolve_rejects_group_policy_without_groups():
+    bad = Scenario().with_overrides({"dfl.policy": "group",
+                                     "distribution": "noniid"})
+    with pytest.raises(ValueError, match="grouped"):
+        bad.resolve()
+
+
+def test_resolve_threads_num_bands():
+    s = Scenario().with_overrides({"distribution": "grouped",
+                                   "num_groups": 5,
+                                   "dfl.cache_size": 10})
+    rs = s.resolve()
+    assert rs.mobility.num_bands == 5
+    assert s.experiment.mobility.num_bands == 3     # spec untouched
+
+
+def test_resolve_applies_image_hw():
+    rs = Scenario().with_overrides({"image_hw": 12}).resolve()
+    assert rs.model_cfg.image_hw == 12
+
+
+# ---------------------------------------------------------------------------
+# Fleet struct
+# ---------------------------------------------------------------------------
+
+def test_fleet_named_fields_and_tuple_unpack():
+    s = Scenario().with_overrides({
+        "dfl.num_agents": 5, "dfl.cache_size": 2, "n_train": 200,
+        "n_test": 40, "image_hw": 8})
+    fleet = s.resolve().build_fleet()
+    (model_cfg, state, data, counts, test_batch, mstate,
+     group_slots, mob_model, mob_cfg) = fleet          # legacy 9-tuple
+    assert fleet.model_cfg is model_cfg
+    assert fleet.mobility is mob_cfg
+    assert fleet.group_slots is None
+    assert fleet.num_agents == 5
+    assert data["images"].shape[0] == 5
+    assert callable(fleet.loss_fn()) and callable(fleet.acc_fn())
+
+
+# ---------------------------------------------------------------------------
+# _area_labels remainder fix (satellite)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("num_groups", [1, 2, 3, 4, 5, 6, 7, 10])
+def test_area_labels_cover_every_class(num_groups):
+    """4 groups × 10 classes used to drop classes 8 and 9 entirely."""
+    labels = _area_labels(num_groups, overlap=0)
+    assert len(labels) == num_groups
+    covered = set().union(*[set(l) for l in labels])
+    assert covered == set(range(10)), labels
+    if num_groups <= 10:
+        assert all(l for l in labels)              # no empty group
+
+
+def test_area_labels_overlap_borrows_neighbors():
+    labels = _area_labels(4, overlap=1)
+    covered = set().union(*[set(l) for l in labels])
+    assert covered == set(range(10))
+    # each later group borrows its left neighbor's first class
+    assert 2 in labels[1]                           # group1 starts at 3
+
+
+def test_area_labels_paper_default_unchanged():
+    assert _area_labels(3, overlap=0) == [[0, 1, 2, 3], [4, 5, 6],
+                                          [7, 8, 9]]

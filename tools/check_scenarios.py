@@ -1,29 +1,32 @@
 """Scenario smoke gate: every registered mobility model × {cached, dfl},
-every registered cache policy × {manhattan, trace}, plus
-bandwidth-budget-limited exchanges (flat and duration-derived caps).
+every registered cache policy × {manhattan, trace}, bandwidth-budget-
+limited exchanges (flat and duration-derived caps), and every registered
+scenario preset (``repro.api.available_presets``) — each preset must
+``resolve()`` at full size and smoke-run shrunken.
 
-Runs 2 tiny epochs of the full experiment loop per combination and fails
-(non-zero exit) on NaN accuracy, shape errors, or exceptions — so a
-mobility/scenario/policy/budget regression is caught in seconds without
-the full benchmark suite.
+Runs 2 tiny epochs of the full experiment loop per combination through
+the Scenario API and fails (non-zero exit) on NaN accuracy, shape
+errors, or exceptions — so a mobility/scenario/policy/budget/preset
+regression is caught in seconds without the full benchmark suite.
 
-    PYTHONPATH=src python tools/check_scenarios.py
+    PYTHONPATH=src python tools/check_scenarios.py [--list] [--only SUBSTR]
 """
 from __future__ import annotations
 
+import argparse
 import math
 import os
 import sys
 import tempfile
 import time
 import traceback
+from typing import Callable, List, Optional, Tuple
 
 import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.configs.base import DFLConfig, MobilityConfig  # noqa: E402
-from repro.fl.experiment import ExperimentConfig, run_experiment  # noqa: E402
+from repro import api  # noqa: E402
 from repro.mobility import registry  # noqa: E402
 from repro.mobility import trace as trace_lib  # noqa: E402
 from repro.policies import registry as policy_registry  # noqa: E402
@@ -33,114 +36,143 @@ ALGORITHMS = ("cached", "dfl")
 POLICY_MOBILITIES = ("manhattan", "trace")
 # transfer-budget-limited exchanges: (mobility, policy, budget knobs)
 BUDGET_CONFIGS = (
-    ("manhattan", "lru", dict(transfer_budget=0.0)),
-    ("manhattan", "lru", dict(transfer_budget=2.0)),
-    ("manhattan", "lru", dict(link_entries_per_step=0.3)),
-    ("trace", "mobility_aware", dict(transfer_budget=1.0)),
-    ("trace", "group", dict(transfer_budget=2.0,
-                            link_entries_per_step=0.5)),
+    ("manhattan", "lru", {"dfl.transfer_budget": 0.0}),
+    ("manhattan", "lru", {"dfl.transfer_budget": 2.0}),
+    ("manhattan", "lru", {"dfl.link_entries_per_step": 0.3}),
+    ("trace", "mobility_aware", {"dfl.transfer_budget": 1.0}),
+    ("trace", "group", {"dfl.transfer_budget": 2.0,
+                        "dfl.link_entries_per_step": 0.5}),
 )
 
+# the tiny-footprint overrides every smoke run shares
+SMOKE = {
+    "epochs": 2, "n_train": 300, "n_test": 60, "image_hw": 8,
+    "lr_plateau": False, "partner_sample": "random",
+    "early_stop_patience": 100,
+    "dfl.num_agents": N_AGENTS, "dfl.cache_size": 3, "dfl.local_steps": 2,
+    "dfl.batch_size": 16, "dfl.epoch_seconds": 10.0,
+}
 
-def tiny_mobility(name: str, trace_path: str) -> MobilityConfig:
+
+def tiny_mobility(name: str, trace_path: str) -> dict:
     if name == "trace":
-        return MobilityConfig(model=name, trace_path=trace_path,
-                              trace_frames_per_epoch=5)
-    return MobilityConfig(model=name, grid_w=4, grid_h=6,
-                          area_w=400.0, area_h=400.0,
-                          levy_max_flight=400.0, community_radius=80.0)
+        return {"mobility.model": name, "mobility.trace_path": trace_path,
+                "mobility.trace_frames_per_epoch": 5}
+    return {"mobility.model": name, "mobility.grid_w": 4,
+            "mobility.grid_h": 6, "mobility.area_w": 400.0,
+            "mobility.area_h": 400.0, "mobility.levy_max_flight": 400.0,
+            "mobility.community_radius": 80.0}
 
 
-def make_trace(path: str) -> None:
+def make_trace(path: str, n: int = N_AGENTS) -> None:
     rng = np.random.default_rng(0)
-    seq = rng.random((20, N_AGENTS, N_AGENTS)) < 0.15
+    seq = rng.random((20, n, n)) < 0.15
     trace_lib.save_trace(path, seq | seq.transpose(0, 2, 1))
 
 
-def _run(cfg: ExperimentConfig) -> str | None:
-    hist = run_experiment(cfg)
-    if len(hist["acc"]) != cfg.epochs:
-        return f"expected {cfg.epochs} eval points, got {len(hist['acc'])}"
-    bad = [a for a in hist["acc"] if not math.isfinite(a)]
+def _run(scenario: api.Scenario) -> Optional[str]:
+    result = api.run(scenario)
+    epochs = scenario.experiment.epochs
+    if len(result.acc) != epochs:
+        return f"expected {epochs} eval points, got {len(result.acc)}"
+    bad = [a for a in result.acc if not math.isfinite(a)]
     if bad:
-        return f"non-finite accuracy: {hist['acc']}"
+        return f"non-finite accuracy: {result.acc}"
     return None
 
 
-def check(name: str, algorithm: str, trace_path: str) -> str | None:
-    cfg = ExperimentConfig(
-        algorithm=algorithm, distribution="noniid",
-        dfl=DFLConfig(num_agents=N_AGENTS, cache_size=3, local_steps=2,
-                      batch_size=16, epoch_seconds=10.0),
-        mobility=tiny_mobility(name, trace_path),
-        epochs=2, n_train=300, n_test=60, image_hw=8,
-        lr_plateau=False, partner_sample="random")
-    return _run(cfg)
+def check_mobility(name: str, algorithm: str, trace_path: str
+                   ) -> Optional[str]:
+    scenario = api.Scenario().with_overrides({
+        **SMOKE, **tiny_mobility(name, trace_path),
+        "algorithm": algorithm, "distribution": "noniid"})
+    return _run(scenario)
 
 
 def check_policy(policy: str, mob_name: str, trace_path: str,
-                 budget_knobs: dict | None = None) -> str | None:
+                 budget_knobs: Optional[dict] = None) -> Optional[str]:
     """Smoke one registered cache policy through the cached algorithm."""
     grouped = policy_registry.get_policy(policy).needs_group_slots
-    cfg = ExperimentConfig(
-        algorithm="cached",
-        distribution="grouped" if grouped else "noniid",
-        num_groups=3,
-        dfl=DFLConfig(num_agents=N_AGENTS, cache_size=3, local_steps=2,
-                      batch_size=16, epoch_seconds=10.0, policy=policy,
-                      **(budget_knobs or {})),
-        mobility=tiny_mobility(mob_name, trace_path),
-        epochs=2, n_train=300, n_test=60, image_hw=8,
-        lr_plateau=False, partner_sample="random")
-    return _run(cfg)
+    scenario = api.Scenario().with_overrides({
+        **SMOKE, **tiny_mobility(mob_name, trace_path),
+        "algorithm": "cached",
+        "distribution": "grouped" if grouped else "noniid",
+        "num_groups": 3, "dfl.policy": policy, **(budget_knobs or {})})
+    return _run(scenario)
 
 
-def main() -> int:
+def check_preset(name: str) -> Optional[str]:
+    """Full-size resolve, then a shrunken smoke run of the preset."""
+    scenario = api.get_preset(name)
+    scenario.resolve()                       # paper-scale spec must validate
+    smoke = dict(SMOKE)
+    exp = scenario.experiment
+    # keep invariants the preset's spec depends on: the trace fleet size
+    # is pinned by the trace file; group policies need slots >= groups
+    if exp.mobility.model == "trace":
+        smoke.pop("dfl.num_agents")
+        smoke.pop("dfl.cache_size")
+    if policy_registry.get_policy(exp.dfl.policy).needs_group_slots:
+        smoke["dfl.cache_size"] = max(3, exp.num_groups)
+    return _run(scenario.with_overrides(smoke))
+
+
+def build_checks(trace_path: str) -> List[Tuple[str, Callable[[], Optional[str]]]]:
+    checks: List[Tuple[str, Callable[[], Optional[str]]]] = []
+    for name in registry.available():
+        for algorithm in ALGORITHMS:
+            checks.append((f"mobility:{name}×{algorithm}",
+                           lambda n=name, a=algorithm:
+                           check_mobility(n, a, trace_path)))
+    for policy in policy_registry.available():
+        for mob_name in POLICY_MOBILITIES:
+            checks.append((f"policy:{policy}×{mob_name}",
+                           lambda p=policy, m=mob_name:
+                           check_policy(p, m, trace_path)))
+    for mob_name, policy, knobs in BUDGET_CONFIGS:
+        label = ",".join(f"{k.split('.')[-1]}={v}" for k, v in knobs.items())
+        checks.append((f"budget:{policy}×{mob_name}[{label}]",
+                       lambda p=policy, m=mob_name, k=knobs:
+                       check_policy(p, m, trace_path, budget_knobs=k)))
+    for name in api.available_presets():
+        checks.append((f"preset:{name}", lambda n=name: check_preset(n)))
+    return checks
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--list", action="store_true",
+                    help="list scenario ids without running them")
+    ap.add_argument("--only", default="",
+                    help="run only scenarios whose id contains SUBSTR")
+    args = ap.parse_args(argv)
+
     tmp = tempfile.mkdtemp(prefix="check_scenarios_")
     trace_path = os.path.join(tmp, "trace.npz")
     make_trace(trace_path)
-    failures = total = 0
-    for name in registry.available():
-        for algorithm in ALGORITHMS:
-            t0 = time.time()
-            try:
-                err = check(name, algorithm, trace_path)
-            except Exception as e:  # noqa: BLE001
-                traceback.print_exc()
-                err = f"{type(e).__name__}: {e}"
-            status = "PASS" if err is None else f"FAIL ({err})"
-            failures += err is not None
-            total += 1
-            print(f"{name:>16} × {algorithm:<6} {status} "
-                  f"[{time.time() - t0:.1f}s]")
-    for policy in policy_registry.available():
-        for mob_name in POLICY_MOBILITIES:
-            t0 = time.time()
-            try:
-                err = check_policy(policy, mob_name, trace_path)
-            except Exception as e:  # noqa: BLE001
-                traceback.print_exc()
-                err = f"{type(e).__name__}: {e}"
-            status = "PASS" if err is None else f"FAIL ({err})"
-            failures += err is not None
-            total += 1
-            print(f"{policy:>18} × {mob_name:<9} {status} "
-                  f"[{time.time() - t0:.1f}s]")
-    for mob_name, policy, knobs in BUDGET_CONFIGS:
+    checks = build_checks(trace_path)
+    if args.only:
+        checks = [(cid, fn) for cid, fn in checks if args.only in cid]
+    if args.list:
+        for cid, _ in checks:
+            print(cid)
+        return 0
+    if not checks:
+        print(f"no scenarios match --only {args.only!r}")
+        return 1
+
+    failures = 0
+    for cid, fn in checks:
         t0 = time.time()
         try:
-            err = check_policy(policy, mob_name, trace_path,
-                               budget_knobs=knobs)
+            err = fn()
         except Exception as e:  # noqa: BLE001
             traceback.print_exc()
             err = f"{type(e).__name__}: {e}"
         status = "PASS" if err is None else f"FAIL ({err})"
         failures += err is not None
-        total += 1
-        label = ",".join(f"{k}={v}" for k, v in knobs.items())
-        print(f"{policy:>18} × {mob_name:<9} budget[{label}] {status} "
-              f"[{time.time() - t0:.1f}s]")
-    print(f"{failures} failure(s) across {total} scenarios")
+        print(f"{cid:>44} {status} [{time.time() - t0:.1f}s]")
+    print(f"{failures} failure(s) across {len(checks)} scenarios")
     return 1 if failures else 0
 
 
