@@ -22,6 +22,7 @@ Env:  REPRO_BENCH_FAST=1 trims mobilities and budgets.
 """
 from __future__ import annotations
 
+import dataclasses
 import os
 import tempfile
 
@@ -71,6 +72,10 @@ def main():
     base = base_scenario(seed=8, max_partners=3).with_overrides({
         "dfl.num_agents": N_AGENTS, "dfl.cache_size": 6,
         "dfl.epoch_seconds": 30.0, "dfl.tau_max": 20})
+    # telemetry-enabled cells carry staleness/spread/budget-utilization
+    # summary columns into the artifact (tools/report.py renders the
+    # utilization frontier from them); bit-exact with a telemetry-off run
+    base = dataclasses.replace(base, telemetry=True)
     mobs = mobilities(trace_path)
     sw = api.sweep(base, {"dfl.policy": list(POLICIES),
                           "mobility": list(mobs.values()),

@@ -11,7 +11,8 @@ from repro import api
 
 # 1) the spec: start from defaults, override via dotted paths — any
 #    ExperimentConfig / DFLConfig / MobilityConfig field is reachable
-scenario = api.Scenario(record_cache_stats=True).with_overrides({
+scenario = api.Scenario(record_cache_stats=True,
+                        telemetry=True).with_overrides({
     "algorithm": "cached",
     "distribution": "noniid",        # extreme label shards (paper §4.1)
     "dfl.num_agents": 8,
@@ -42,3 +43,8 @@ for ep, acc, cached in zip(result.epoch, result.acc, result.cache_num):
     print(f"epoch {ep:2d}  avg_acc={acc:.3f} avg_cached_models={cached:.1f}")
 print(f"best {result.best_acc:.3f} (epoch {result.best_epoch}) "
       f"in {result.wall_s:.1f}s, {result.traces} compile(s)")
+
+# 5) telemetry=True adds on-device fleet metrics (staleness, spread,
+#    gossip traffic), phase timings and a structured event stream —
+#    bit-exact with a telemetry-off run
+print(api.telemetry_line(result))

@@ -26,10 +26,14 @@ from repro.configs.base import DFLConfig, MobilityConfig  # noqa: F401
 from repro.fl.presets import (  # noqa: F401
     available_presets, get_preset, preset_doc, register_preset)
 from repro.fl.runner import (  # noqa: F401
-    TRACED_AXES, RunResult, SweepCell, SweepResult, run, sweep)
+    TRACED_AXES, RunResult, SweepCell, SweepResult, run, sweep,
+    telemetry_line)
 from repro.fl.scenario import (  # noqa: F401
     Fleet, ExperimentConfig, ResolvedScenario, Scenario,
     valid_override_paths)
+from repro.telemetry import (  # noqa: F401
+    FleetMetrics, SCHEMA_VERSION as TELEMETRY_SCHEMA, validate_events,
+    validate_jsonl)
 
 __all__ = [
     "DFLConfig", "MobilityConfig", "ExperimentConfig",
@@ -37,4 +41,6 @@ __all__ = [
     "RunResult", "SweepCell", "SweepResult", "run", "sweep", "TRACED_AXES",
     "available_presets", "get_preset", "preset_doc", "register_preset",
     "valid_override_paths",
+    "telemetry_line", "FleetMetrics", "TELEMETRY_SCHEMA",
+    "validate_events", "validate_jsonl",
 ]

@@ -36,6 +36,7 @@ from repro.core.cache import CacheMeta, ModelCache, NEG
 from repro.policies import base as policy_base
 from repro.policies import registry as policy_registry
 from repro.policies.base import CachePolicy
+from repro.telemetry.metrics import ExchangeStats
 
 
 def valid_partner_mask(partners: jax.Array) -> jax.Array:
@@ -152,8 +153,13 @@ def link_caps(partners, durations, transfer_budget,
 
 def _admit_within_budget(meta: CacheMeta, pol: CachePolicy,
                          ctx: "policy_base.PolicyContext", link: jax.Array,
-                         cap: jax.Array) -> CacheMeta:
+                         cap: jax.Array):
     """Mask one agent's candidates down to each link's entry cap.
+
+    Returns ``(meta, admitted)`` — the masked candidate metadata plus the
+    [M] admission mask (True for entries that survive; own-cache entries
+    are always True, charged entries only when they made their link's
+    cut), so telemetry can count realized link traffic.
 
     The configured policy's own priority function orders which entries
     make the cut on a saturated link (higher key first, earlier candidate
@@ -212,7 +218,7 @@ def _admit_within_budget(meta: CacheMeta, pol: CachePolicy,
         origin=jnp.where(admitted, meta.origin, NEG),
         samples=jnp.where(admitted, meta.samples, 0.0),
         group=jnp.where(admitted, meta.group, NEG),
-        arrival=jnp.where(admitted, meta.arrival, NEG))
+        arrival=jnp.where(admitted, meta.arrival, NEG)), admitted
 
 
 def gather_winners(cache_models, params, gather_a, gather_s, *,
@@ -263,7 +269,8 @@ def exchange(params, cache: ModelCache, partners, t, own_samples, own_group,
              gather_mode: str = "select",
              durations: Optional[jax.Array] = None,
              transfer_budget=None,
-             link_entries_per_step: float = 0.0) -> ModelCache:
+             link_entries_per_step: float = 0.0,
+             with_stats: bool = False):
     """One epoch of DTN-like cache exchange for the whole fleet.
 
     params: pytree [N, ...] (post-local-update models x̃_i(t));
@@ -282,6 +289,12 @@ def exchange(params, cache: ModelCache, partners, t, own_samples, own_group,
     the policy's priority (see :func:`_admit_within_budget`). Budget 0
     degenerates to no exchange (caches only age/evict); an unlimited
     budget is bit-exact with the unbudgeted path.
+
+    With ``with_stats`` (static flag — telemetry-enabled traces only) the
+    return becomes ``(cache, ExchangeStats)``: fleet-total offered /
+    admitted entry counts plus the finite link capacity, for gossip
+    traffic and budget-utilization telemetry. The cache result is
+    untouched by the flag.
     """
     pol = policy_registry.resolve(policy)
     N, C = cache.ts.shape
@@ -297,12 +310,15 @@ def exchange(params, cache: ModelCache, partners, t, own_samples, own_group,
     t_arr = jnp.asarray(t, jnp.int32)
 
     budgeted = transfer_budget is not None or link_entries_per_step > 0
-    if budgeted:
+    if budgeted or with_stats:
         link = _candidate_links(C, D)
+    else:
+        link = None
+    if budgeted:
         caps = link_caps(partners, durations, transfer_budget,
                          link_entries_per_step)
     else:
-        link = caps = None
+        caps = None
 
     def one_agent(origin_i, ts_i, samples_i, group_i, arrival_i, key_i,
                   enc_i, cap_i):
@@ -311,21 +327,55 @@ def exchange(params, cache: ModelCache, partners, t, own_samples, own_group,
         ctx = policy_base.PolicyContext(
             t=t_arr, capacity=C, rng=key_i, group_slots=group_slots,
             encounters=enc_i, params=pparams)
+        if with_stats:
+            offered = jnp.sum(((link >= 0) & meta.valid)
+                              .astype(jnp.float32))
         if budgeted:
-            meta = _admit_within_budget(meta, pol, ctx, link, cap_i)
-        return policy_base.retain(meta, pol, ctx)
+            meta, admitted = _admit_within_budget(meta, pol, ctx, link,
+                                                  cap_i)
+            if with_stats:
+                sent = admitted & (link >= 0)
+                cap_c = cap_i[jnp.clip(link, 0, cap_i.shape[0] - 1)]
+                n_sent = jnp.sum(sent.astype(jnp.float32))
+                n_capped = jnp.sum((sent & jnp.isfinite(cap_c))
+                                   .astype(jnp.float32))
+        elif with_stats:
+            n_sent, n_capped = offered, jnp.float32(0.0)
+        out = policy_base.retain(meta, pol, ctx)
+        if with_stats:
+            return out + ((offered, n_sent, n_capped),)
+        return out
 
-    sel, meta = jax.vmap(
+    outs = jax.vmap(
         one_agent,
         in_axes=(0, 0, 0, 0, 0,
                  0 if keys is not None else None,
                  0 if encounters is not None else None,
                  0 if caps is not None else None))(
         origin, ts, samples, group, arrival, keys, encounters, caps)
+    if with_stats:
+        sel, meta, (offered_pa, sent_pa, sent_capped_pa) = outs
+    else:
+        sel, meta = outs
 
     # phase 2: gather winning model weights only
     gather_a = jnp.take_along_axis(src_a, sel, axis=1)  # [N, C]
     gather_s = jnp.take_along_axis(src_s, sel, axis=1)
     models = gather_winners(cache.models, params, gather_a, gather_s,
                             mode=gather_mode)
-    return dataclasses.replace(cache, models=models, **meta.as_dict())
+    new_cache = dataclasses.replace(cache, models=models, **meta.as_dict())
+    if not with_stats:
+        return new_cache
+
+    if budgeted:
+        pvalid = valid_partner_mask(partners)
+        finite = pvalid & jnp.isfinite(caps)
+        capacity = jnp.sum(jnp.where(finite, caps, 0.0))
+        capped_links = jnp.sum(finite.astype(jnp.float32))
+    else:
+        capacity = capped_links = jnp.float32(0.0)
+    stats = ExchangeStats(
+        offered=jnp.sum(offered_pa), admitted=jnp.sum(sent_pa),
+        admitted_capped=jnp.sum(sent_capped_pa),
+        link_capacity=capacity, capped_links=capped_links)
+    return new_cache, stats

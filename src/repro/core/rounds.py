@@ -15,6 +15,7 @@ from repro.core import gossip
 from repro.core.aggregate import aggregate
 from repro.core.cache import ModelCache, evict_stale, init_cache
 from repro.core.local_update import fleet_local_update
+from repro.telemetry import metrics as metrics_lib
 from repro.utils.tree import tree_take
 
 
@@ -82,8 +83,8 @@ def cached_dfl_epoch(state: FleetState, partners, data, counts, key, *,
                      gather_mode: str = "select",
                      durations: Optional[jax.Array] = None,
                      transfer_budget=None,
-                     link_entries_per_step: float = 0.0
-                     ) -> Tuple[FleetState, jax.Array]:
+                     link_entries_per_step: float = 0.0,
+                     with_stats: bool = False):
     """One global epoch of Algorithm 1 for the whole fleet.
 
     partners: [N, D] contact lists for this epoch (-1 padded). ``policy``
@@ -91,6 +92,9 @@ def cached_dfl_epoch(state: FleetState, partners, data, counts, key, *,
     ``durations`` [N, N] (steps in contact, from ``simulate_epoch``) plus
     ``transfer_budget`` / ``link_entries_per_step`` bound how many entries
     each contact can move (see ``gossip.exchange``).
+
+    With ``with_stats`` (static) the exchange also reduces its traffic
+    counters and the return becomes ``(state, losses, ExchangeStats)``.
     """
     N = state.samples.shape[0]
     key, k_local, k_policy = jax.random.split(key, 3)
@@ -105,20 +109,25 @@ def cached_dfl_epoch(state: FleetState, partners, data, counts, key, *,
     # realized partner contacts feed the per-pair encounter counts that
     # mobility-aware policies score against
     encounters = count_encounters(state.encounters, partners)
-    cache = gossip.exchange(
+    out = gossip.exchange(
         tilde, state.cache, partners, state.t, state.samples, state.group,
         tau_max=tau_max, policy=policy, group_slots=group_slots,
         rng=k_policy, encounters=encounters, policy_params=policy_params,
         gather_mode=gather_mode, durations=durations,
         transfer_budget=transfer_budget,
-        link_entries_per_step=link_entries_per_step)
+        link_entries_per_step=link_entries_per_step,
+        with_stats=with_stats)
+    cache, xstats = out if with_stats else (out, None)
 
     # 3) ModelAggregation over all cached models (+ own)
     new_params = aggregate(tilde, state.samples, cache, t=state.t,
                            staleness_decay=staleness_decay)
 
-    return dataclasses.replace(state, params=new_params, cache=cache,
-                               t=state.t + 1, encounters=encounters), losses
+    new_state = dataclasses.replace(state, params=new_params, cache=cache,
+                                    t=state.t + 1, encounters=encounters)
+    if with_stats:
+        return new_state, losses, xstats
+    return new_state, losses
 
 
 # ---------------------------------------------------------------------------
@@ -186,7 +195,8 @@ def make_epoch_step(algorithm: str, *, loss_fn: Callable, local_steps: int,
                     policy_params: Optional[dict] = None,
                     gather_mode: str = "select",
                     transfer_budget=None,
-                    link_entries_per_step: float = 0.0) -> Callable:
+                    link_entries_per_step: float = 0.0,
+                    telemetry: bool = False) -> Callable:
     """Bind an algorithm's hyperparameters into a uniform per-epoch step
 
         step(state, partners, durations, data, counts, key, lr,
@@ -204,6 +214,11 @@ def make_epoch_step(algorithm: str, *, loss_fn: Callable, local_steps: int,
     ``transfer_budget`` are bound statically; a per-call
     ``transfer_budget`` (e.g. a traced scalar, so budget sweeps don't
     retrace) overrides the default.
+
+    With ``telemetry`` (static) the step returns ``(state, losses,
+    ExchangeStats)`` — real gossip traffic counters for ``cached``,
+    zeros for the exchange-free baselines — so the fused engine can fold
+    them into its :class:`~repro.telemetry.metrics.FleetMetrics` carry.
     """
     common = dict(loss_fn=loss_fn, local_steps=local_steps,
                   batch_size=batch_size, rho=rho)
@@ -226,16 +241,21 @@ def make_epoch_step(algorithm: str, *, loss_fn: Callable, local_steps: int,
                 policy_params=policy_params, gather_mode=gather_mode,
                 durations=durations, transfer_budget=tb,
                 link_entries_per_step=link_entries_per_step,
+                with_stats=telemetry,
                 **common)
     elif algorithm == "dfl":
         def step(state, partners, durations, data, counts, key, lr,
                  transfer_budget=None):
-            return dfl_epoch(state, partners, data, counts, key, lr=lr,
-                             **common)
+            out = dfl_epoch(state, partners, data, counts, key, lr=lr,
+                            **common)
+            return out + (metrics_lib.zero_exchange_stats(),) if telemetry \
+                else out
     elif algorithm == "cfl":
         def step(state, partners, durations, data, counts, key, lr,
                  transfer_budget=None):
-            return cfl_epoch(state, data, counts, key, lr=lr, **common)
+            out = cfl_epoch(state, data, counts, key, lr=lr, **common)
+            return out + (metrics_lib.zero_exchange_stats(),) if telemetry \
+                else out
     else:
         raise ValueError(f"unknown algorithm {algorithm!r}")
     return step
@@ -298,7 +318,8 @@ def make_fleet_engine(*, algorithm: str, mob_model, mob_cfg,
                       transfer_budget=None,
                       link_entries_per_step: float = 0.0,
                       chunk: int = 1,
-                      donate: Optional[bool] = None) -> FleetEngine:
+                      donate: Optional[bool] = None,
+                      telemetry: bool = False) -> FleetEngine:
     """Build the fused epoch engine for one (algorithm, scenario) pair.
 
     The per-epoch key discipline matches the legacy host loop exactly
@@ -312,6 +333,13 @@ def make_fleet_engine(*, algorithm: str, mob_model, mob_cfg,
     passed per ``run`` call as a traced scalar so budget sweeps never
     retrace; ``link_entries_per_step`` converts measured duration to link
     capacity and is static).
+
+    With ``telemetry`` (static per engine) a :class:`FleetMetrics`
+    accumulator rides the fori_loop carry: ``run(..., metrics=m)``
+    returns ``(state, mstate, key, losses, metrics)``. The accumulation
+    only reads state — the key discipline and model trajectory are
+    bit-exact with a telemetry-off engine — and a telemetry engine still
+    traces once per (algorithm, shape).
     """
     from repro.mobility.base import partners_from_contacts
 
@@ -327,9 +355,10 @@ def make_fleet_engine(*, algorithm: str, mob_model, mob_cfg,
         group_slots=group_slots, staleness_decay=staleness_decay,
         policy_params=policy_params, gather_mode=gather_mode,
         transfer_budget=transfer_budget,
-        link_entries_per_step=link_entries_per_step)
+        link_entries_per_step=link_entries_per_step,
+        telemetry=telemetry)
 
-    def epoch_step(state, mstate, key, lr, data, counts, tb):
+    def epoch_step(state, mstate, key, lr, data, counts, tb, metrics):
         if partner_sample == "lowest-id":
             key, k1, k2 = jax.random.split(key, 3)
             k3 = None
@@ -339,26 +368,37 @@ def make_fleet_engine(*, algorithm: str, mob_model, mob_cfg,
                                                     seconds=epoch_seconds)
         partners = partners_fn(met, max_partners, sample=partner_sample,
                                key=k3)
-        state, losses = step(state, partners, dur, data, counts, k2, lr,
-                             transfer_budget=tb)
-        return state, mstate, key, losses
+        if telemetry:
+            state, losses, xstats = step(state, partners, dur, data, counts,
+                                         k2, lr, transfer_budget=tb)
+            metrics = metrics_lib.accumulate(metrics, state, partners,
+                                             xstats)
+        else:
+            state, losses = step(state, partners, dur, data, counts, k2, lr,
+                                 transfer_budget=tb)
+        return state, mstate, key, losses, metrics
 
     def run_epochs(state, mstate, key, lr, data, counts, num_epochs,
-                   transfer_budget=None):
+                   transfer_budget=None, metrics=None):
         losses0 = jnp.full((chunk,), jnp.nan, jnp.float32)
 
         def body(i, carry):
-            state, mstate, key, losses = carry
-            state, mstate, key, ep_losses = epoch_step(
-                state, mstate, key, lr, data, counts, transfer_budget)
+            state, mstate, key, losses, metrics = carry
+            state, mstate, key, ep_losses, metrics = epoch_step(
+                state, mstate, key, lr, data, counts, transfer_budget,
+                metrics)
             losses = jax.lax.dynamic_update_index_in_dim(
                 losses, jnp.mean(ep_losses), i, 0)
-            return state, mstate, key, losses
+            return state, mstate, key, losses, metrics
 
         # clamp to the losses-buffer capacity: epochs past `chunk` would
         # run but pile their losses into the last slot
-        return jax.lax.fori_loop(0, jnp.minimum(num_epochs, chunk), body,
-                                 (state, mstate, key, losses0))
+        out = jax.lax.fori_loop(
+            0, jnp.minimum(num_epochs, chunk), body,
+            (state, mstate, key, losses0, metrics))
+        # telemetry-off: `metrics` is None (an empty pytree) both in and
+        # out; drop it so existing 4-tuple callers are untouched
+        return out if telemetry else out[:4]
 
     return FleetEngine(run_epochs, chunk=chunk, donate=donate)
 
@@ -386,3 +426,15 @@ def fleet_eval(state: FleetState, acc_fn: Callable, test_batch):
     cache_num = jnp.mean(jnp.sum(vf, axis=1))
     cache_age = jnp.sum(ages * vf) / jnp.maximum(jnp.sum(vf), 1.0)
     return acc, cache_num, cache_age
+
+
+def fleet_dispersion(state: FleetState, acc_fn: Callable, test_batch):
+    """Per-agent accuracy dispersion: ``(acc_std, acc_min, acc_max)``.
+
+    Deliberately a separate jit unit from :func:`fleet_eval`: folding the
+    dispersion reductions into the eval trace changes XLA's fusion choices
+    and can shift the reported mean accuracy by an ULP, which would break
+    the telemetry-on == telemetry-off bit-exactness guarantee.
+    """
+    _, accs = fleet_accuracy(state, acc_fn, test_batch)
+    return jnp.std(accs), jnp.min(accs), jnp.max(accs)

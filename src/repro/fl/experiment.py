@@ -48,7 +48,8 @@ def build_fleet(cfg: ExperimentConfig) -> Fleet:
 
 
 def make_epoch_fn(cfg: ExperimentConfig, *, loss_fn: Callable,
-                  group_slots=None, gather_mode: str = "select"):
+                  group_slots=None, gather_mode: str = "select",
+                  telemetry: bool = False):
     """Jitted single-epoch step for the legacy per-epoch driver.
 
     ``lr`` is threaded as a *traced* call argument (historically it was
@@ -57,7 +58,8 @@ def make_epoch_fn(cfg: ExperimentConfig, *, loss_fn: Callable,
     contact-duration matrix from ``simulate_epoch`` feeding the transfer
     budget. Returns ``(epoch_fn, counter)`` where ``counter["traces"]``
     counts actual retraces — exactly 1 per (algorithm, shape) regardless
-    of LR changes.
+    of LR changes. With ``telemetry`` the step also returns per-epoch
+    :class:`~repro.telemetry.metrics.ExchangeStats`.
     """
     counter = {"traces": 0}
     step = rounds_lib.make_epoch_step(
@@ -67,7 +69,8 @@ def make_epoch_fn(cfg: ExperimentConfig, *, loss_fn: Callable,
         group_slots=group_slots, staleness_decay=cfg.dfl.staleness_decay,
         policy_params=dict(cfg.dfl.policy_params), gather_mode=gather_mode,
         transfer_budget=cfg.dfl.resolved_transfer_budget,
-        link_entries_per_step=cfg.dfl.link_entries_per_step)
+        link_entries_per_step=cfg.dfl.link_entries_per_step,
+        telemetry=telemetry)
 
     def fn(state, partners, durations, data, counts, key, lr):
         counter["traces"] += 1
@@ -78,7 +81,8 @@ def make_epoch_fn(cfg: ExperimentConfig, *, loss_fn: Callable,
 
 def make_engine(cfg: ExperimentConfig, *, loss_fn: Callable, mob_model,
                 mob_cfg, group_slots=None, gather_mode: str = "select",
-                chunk: Optional[int] = None, donate: Optional[bool] = None):
+                chunk: Optional[int] = None, donate: Optional[bool] = None,
+                telemetry: bool = False):
     """Build the fused scan engine for an experiment config."""
     return rounds_lib.make_fleet_engine(
         algorithm=cfg.algorithm, mob_model=mob_model, mob_cfg=mob_cfg,
@@ -90,7 +94,8 @@ def make_engine(cfg: ExperimentConfig, *, loss_fn: Callable, mob_model,
         policy_params=dict(cfg.dfl.policy_params), gather_mode=gather_mode,
         transfer_budget=cfg.dfl.resolved_transfer_budget,
         link_entries_per_step=cfg.dfl.link_entries_per_step,
-        chunk=cfg.eval_every if chunk is None else chunk, donate=donate)
+        chunk=cfg.eval_every if chunk is None else chunk, donate=donate,
+        telemetry=telemetry)
 
 
 def run_experiment(cfg: ExperimentConfig, *, verbose: bool = False,

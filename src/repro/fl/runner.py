@@ -20,6 +20,7 @@ guarantee through the new API.
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 import functools
 import itertools
@@ -34,6 +35,9 @@ from repro.core import rounds as rounds_lib
 from repro.fl.scenario import (Fleet, ResolvedScenario, Scenario, _encode)
 from repro.mobility.base import partners_from_contacts
 from repro.optim.schedules import ReduceLROnPlateau
+from repro.telemetry import events as events_lib
+from repro.telemetry import metrics as metrics_lib
+from repro.telemetry import spans as spans_lib
 
 #: dotted override paths the fused engine treats as traced scalars —
 #: sweeping them reuses the compiled executable (no retrace).
@@ -60,6 +64,8 @@ class RunResult:
     final_acc: float
     traces: int                   # engine retraces charged to this run
     wall_s: float
+    phase_s: Dict[str, float] = dataclasses.field(default_factory=dict)
+    telemetry: Optional[Dict[str, Any]] = None
 
     def to_dict(self) -> Dict[str, Any]:
         return {
@@ -72,6 +78,8 @@ class RunResult:
             "best_acc": self.best_acc, "best_epoch": self.best_epoch,
             "final_acc": self.final_acc, "traces": self.traces,
             "wall_s": self.wall_s,
+            "phase_s": dict(self.phase_s),
+            "telemetry": self.telemetry,
         }
 
     def to_json(self, **dumps_kwargs) -> str:
@@ -93,18 +101,22 @@ class RunResult:
 # run
 # ---------------------------------------------------------------------------
 
-def _engine_key(rs: ResolvedScenario, chunk: int, traced_budget: bool):
+def _engine_key(rs: ResolvedScenario, chunk: int, traced_budget: bool,
+                telemetry: bool = False):
     """Everything that forces a distinct fused engine: static trace
     bindings + array shapes. Traced scalars (lr, epoch budget, and — in
     traced-budget mode — the transfer budget) are zeroed out so sweeps
-    over them share one engine."""
+    over them share one engine. ``telemetry`` is a static binding (the
+    metrics carry changes the trace), so telemetry-on and -off cells
+    never share an engine."""
     cfg = rs.experiment
     dfl_static = dataclasses.replace(
         cfg.dfl, lr=0.0,
         transfer_budget=0.0 if traced_budget else cfg.dfl.transfer_budget)
     return (cfg.algorithm, cfg.distribution, cfg.num_groups,
             cfg.max_partners, cfg.partner_sample, cfg.n_train, cfg.n_test,
-            rs.model_cfg, rs.mobility, dfl_static, chunk, traced_budget)
+            rs.model_cfg, rs.mobility, dfl_static, chunk, traced_budget,
+            telemetry)
 
 
 def run(scenario: Scenario, *,
@@ -118,15 +130,38 @@ def run(scenario: Scenario, *,
     ``force_traced_budget`` the per-link transfer budget is always passed
     as a traced scalar (unlimited = +inf, bit-exact with the unbudgeted
     path), so a budget axis never retraces.
+
+    With ``scenario.telemetry`` the result additionally carries
+    ``phase_s`` (build/compile/dispatch/eval wall breakdown) and a
+    ``telemetry`` dict: on-device fleet metrics (staleness histogram,
+    model spread, gossip traffic, budget utilization), per-eval accuracy
+    dispersion + encounter-rate drift, span aggregates and the
+    schema-validated structured event stream (see ``repro.telemetry``).
+    The model trajectory is bit-exact with a telemetry-off run.
     """
     rs = scenario.resolve()
-    return _drive(rs, rs.build_fleet(), engines=engines,
-                  force_traced_budget=force_traced_budget)
+    spans = events = None
+    if scenario.telemetry:
+        events = events_lib.EventLog(scenario.content_hash())
+        spans = spans_lib.SpanTimer(on_close=events.span_callback())
+        cfg = scenario.experiment
+        events.emit("run_start", algorithm=cfg.algorithm,
+                    engine=scenario.engine,
+                    num_agents=cfg.dfl.num_agents, epochs=cfg.epochs)
+        with spans.span("build"):
+            fleet = rs.build_fleet()
+    else:
+        fleet = rs.build_fleet()
+    return _drive(rs, fleet, engines=engines,
+                  force_traced_budget=force_traced_budget,
+                  spans=spans, events=events)
 
 
 def _drive(rs: ResolvedScenario, fleet: Fleet, *,
            engines: Optional[Dict[Any, rounds_lib.FleetEngine]] = None,
-           force_traced_budget: bool = False) -> RunResult:
+           force_traced_budget: bool = False,
+           spans: Optional[spans_lib.SpanTimer] = None,
+           events: Optional[events_lib.EventLog] = None) -> RunResult:
     from repro.fl import experiment as experiment_lib  # shim-free builders
 
     scenario = rs.scenario
@@ -134,12 +169,21 @@ def _drive(rs: ResolvedScenario, fleet: Fleet, *,
     verbose = scenario.verbose
     record_cache_stats = scenario.record_cache_stats
     engine = scenario.engine
+    telemetry = scenario.telemetry
+    if telemetry and events is None:
+        events = events_lib.EventLog(scenario.content_hash())
+    if telemetry and spans is None:
+        spans = spans_lib.SpanTimer(on_close=events.span_callback())
 
     state, mstate = fleet.state, fleet.mobility_state
     data, counts, test_batch = fleet.data, fleet.counts, fleet.test_batch
     loss_fn = fleet.loss_fn()
     eval_fn = jax.jit(functools.partial(rounds_lib.fleet_eval,
                                         acc_fn=fleet.acc_fn()))
+    # dispersion stays its own jit unit so telemetry can't perturb eval
+    disp_fn = (jax.jit(functools.partial(rounds_lib.fleet_dispersion,
+                                         acc_fn=fleet.acc_fn()))
+               if telemetry else None)
 
     sched = ReduceLROnPlateau(lr=cfg.dfl.lr)
     lr = cfg.dfl.lr
@@ -149,21 +193,43 @@ def _drive(rs: ResolvedScenario, fleet: Fleet, *,
     lr_hist: List[float] = []
     cache_num_hist: List[float] = []
     cache_age_hist: List[float] = []
+    # telemetry-only per-eval series (accuracy dispersion, contact drift)
+    disp_hist: Dict[str, List[float]] = {"acc_std": [], "acc_min": [],
+                                         "acc_max": []}
+    contacts_at_eval: List[float] = []
+    metrics = None
+    if telemetry and engine == "fused":
+        metrics = metrics_lib.init_metrics(cfg.dfl.num_agents,
+                                           cfg.dfl.tau_max + 1)
     best, best_epoch = -1.0, 0
     stop = False
-    t0 = time.time()
+    t0 = time.perf_counter()
 
     def evaluate(ep):
         """Eval at 0-based epoch index ep; returns True to early-stop."""
         nonlocal lr, best, best_epoch
-        acc, cache_num, cache_age = eval_fn(state, test_batch=test_batch)
+        with (spans.span("eval") if spans is not None
+              else contextlib.nullcontext()):
+            acc, cache_num, cache_age = eval_fn(state,
+                                                test_batch=test_batch)
+            if telemetry:
+                acc_std, acc_min, acc_max = disp_fn(state,
+                                                    test_batch=test_batch)
+        if telemetry:
+            disp_hist["acc_std"].append(float(acc_std))
+            disp_hist["acc_min"].append(float(acc_min))
+            disp_hist["acc_max"].append(float(acc_max))
+            if metrics is not None:
+                contacts_at_eval.append(float(metrics.contacts))
         acc = float(acc)                     # scalars only cross to host
         epochs_hist.append(ep + 1)
         acc_hist.append(acc)
         lr_hist.append(lr)
-        if record_cache_stats and cfg.algorithm == "cached":
+        if record_cache_stats:
             cache_num_hist.append(float(cache_num))
             cache_age_hist.append(float(cache_age))
+        if events is not None:
+            events.emit("eval", epoch=ep + 1, acc=acc, lr=lr)
         if cfg.lr_plateau:
             lr = sched.update(acc)           # traced arg: no retrace on change
         if acc > best + 1e-4:
@@ -174,7 +240,7 @@ def _drive(rs: ResolvedScenario, fleet: Fleet, *,
             return True
         if verbose:
             print(f"epoch {ep + 1:4d} acc={acc:.4f} lr={lr:.4f} "
-                  f"({time.time() - t0:.1f}s)")
+                  f"({time.perf_counter() - t0:.1f}s)")
         return False
 
     # budget sweeps pass the (traced) cap per engine call — never retraces;
@@ -189,26 +255,35 @@ def _drive(rs: ResolvedScenario, fleet: Fleet, *,
         budget = (jnp.float32(resolved_budget)
                   if resolved_budget is not None else None)
 
+    span = (spans.span if spans is not None
+            else (lambda name: contextlib.nullcontext()))
     traces = 0
     if engine == "fused":
-        key_ = _engine_key(rs, cfg.eval_every, traced_budget)
+        key_ = _engine_key(rs, cfg.eval_every, traced_budget, telemetry)
         eng = None if engines is None else engines.get(key_)
         if eng is None:
-            eng = experiment_lib.make_engine(
-                cfg, loss_fn=loss_fn, mob_model=fleet.mob_model,
-                mob_cfg=fleet.mobility, group_slots=fleet.group_slots)
+            with span("compile"):
+                eng = experiment_lib.make_engine(
+                    cfg, loss_fn=loss_fn, mob_model=fleet.mob_model,
+                    mob_cfg=fleet.mobility, group_slots=fleet.group_slots,
+                    telemetry=telemetry)
             if engines is not None:
                 engines[key_] = eng
         traces0 = eng.traces
         ep = 0
         while ep < cfg.epochs and not stop:
             n = min(eng.chunk, cfg.epochs - ep)
-            if budget is None:
-                state, mstate, key, _ = eng.run(state, mstate, key, lr,
-                                                data, counts, n)
-            else:
-                state, mstate, key, _ = eng.run(state, mstate, key, lr,
-                                                data, counts, n, budget)
+            with span("dispatch"):
+                if telemetry:
+                    state, mstate, key, _, metrics = eng.run(
+                        state, mstate, key, lr, data, counts, n, budget,
+                        metrics)
+                elif budget is None:
+                    state, mstate, key, _ = eng.run(state, mstate, key, lr,
+                                                    data, counts, n)
+                else:
+                    state, mstate, key, _ = eng.run(state, mstate, key, lr,
+                                                    data, counts, n, budget)
             ep += n
             # evaluate on the cadence AND at the terminal epoch: a tail
             # chunk shorter than eval_every (epochs not a multiple, or an
@@ -217,11 +292,17 @@ def _drive(rs: ResolvedScenario, fleet: Fleet, *,
                 stop = evaluate(ep - 1)
         traces = eng.traces - traces0
     elif engine == "legacy":
-        epoch_fn, counter = experiment_lib.make_epoch_fn(
-            cfg, loss_fn=loss_fn, group_slots=fleet.group_slots)
-        sim = jax.jit(functools.partial(fleet.mob_model.simulate_epoch,
-                                        cfg=fleet.mobility,
-                                        seconds=cfg.dfl.epoch_seconds))
+        with span("compile"):
+            epoch_fn, counter = experiment_lib.make_epoch_fn(
+                cfg, loss_fn=loss_fn, group_slots=fleet.group_slots,
+                telemetry=telemetry)
+            sim = jax.jit(functools.partial(fleet.mob_model.simulate_epoch,
+                                            cfg=fleet.mobility,
+                                            seconds=cfg.dfl.epoch_seconds))
+        if telemetry:
+            metrics = metrics_lib.init_metrics(cfg.dfl.num_agents,
+                                               cfg.dfl.tau_max + 1)
+            accumulate = jax.jit(metrics_lib.accumulate)
         for ep in range(cfg.epochs):
             # deterministic partner selection keeps the historical key stream
             if cfg.partner_sample == "lowest-id":
@@ -229,10 +310,17 @@ def _drive(rs: ResolvedScenario, fleet: Fleet, *,
                 k3 = None
             else:
                 key, k1, k2, k3 = jax.random.split(key, 4)
-            mstate, met, dur = sim(mstate, k1)
-            partners = partners_from_contacts(
-                met, cfg.max_partners, sample=cfg.partner_sample, key=k3)
-            state, _ = epoch_fn(state, partners, dur, data, counts, k2, lr)
+            with span("dispatch"):
+                mstate, met, dur = sim(mstate, k1)
+                partners = partners_from_contacts(
+                    met, cfg.max_partners, sample=cfg.partner_sample, key=k3)
+                if telemetry:
+                    state, _, xstats = epoch_fn(state, partners, dur, data,
+                                                counts, k2, lr)
+                    metrics = accumulate(metrics, state, partners, xstats)
+                else:
+                    state, _ = epoch_fn(state, partners, dur, data, counts,
+                                        k2, lr)
             if (ep + 1) % cfg.eval_every == 0 or (ep + 1) == cfg.epochs:
                 if evaluate(ep):
                     break
@@ -240,13 +328,74 @@ def _drive(rs: ResolvedScenario, fleet: Fleet, *,
     else:
         raise ValueError(f"unknown engine {engine!r}")
 
+    wall_s = time.perf_counter() - t0
+    phase_s: Dict[str, float] = {}
+    telem: Optional[Dict[str, Any]] = None
+    if telemetry:
+        events.emit("compile", traces=traces)
+        events.emit("run_end", best_acc=best,
+                    final_acc=acc_hist[-1] if acc_hist else 0.0,
+                    wall_s=wall_s)
+        phase_s = spans.totals()
+        telem = _assemble_telemetry(
+            metrics=metrics, spans=spans, events=events,
+            epochs_hist=epochs_hist, disp_hist=disp_hist,
+            contacts_at_eval=contacts_at_eval)
+
     return RunResult(
         scenario=scenario, config_hash=scenario.content_hash(),
         engine=engine, epoch=epochs_hist, acc=acc_hist, lr=lr_hist,
         cache_num=cache_num_hist, cache_age=cache_age_hist,
         best_acc=best, best_epoch=best_epoch + 1,
         final_acc=acc_hist[-1] if acc_hist else 0.0,
-        traces=traces, wall_s=time.time() - t0)
+        traces=traces, wall_s=wall_s, phase_s=phase_s, telemetry=telem)
+
+
+def _assemble_telemetry(*, metrics, spans, events, epochs_hist, disp_hist,
+                        contacts_at_eval) -> Dict[str, Any]:
+    """Reduce the run's accumulators into the ``RunResult.telemetry``
+    dict: on-device fleet metrics summary, per-eval accuracy dispersion,
+    encounter-rate drift (contacts per epoch within each eval window,
+    from the cumulative contact counter read at eval points), span
+    aggregates and the structured event stream."""
+    fleet_summary = (metrics_lib.summarize(metrics)
+                     if metrics is not None else None)
+    drift: List[float] = []
+    if contacts_at_eval and epochs_hist:
+        prev_c, prev_ep = 0.0, 0
+        for c, ep in zip(contacts_at_eval, epochs_hist):
+            n = max(ep - prev_ep, 1)
+            drift.append((c - prev_c) / n)
+            prev_c, prev_ep = c, ep
+    return {
+        "schema": events_lib.SCHEMA_VERSION,
+        "fleet": fleet_summary,
+        "eval": {"epoch": list(epochs_hist),
+                 "acc_std": list(disp_hist["acc_std"]),
+                 "acc_min": list(disp_hist["acc_min"]),
+                 "acc_max": list(disp_hist["acc_max"]),
+                 "contacts_per_epoch": drift},
+        "spans": spans.summary(),
+        "events": events.to_dicts(),
+    }
+
+
+def telemetry_line(result: RunResult) -> str:
+    """One-line human summary of a run's telemetry (quickstart / CLI)."""
+    t = result.telemetry
+    if not t:
+        return "telemetry: off"
+    f = t.get("fleet") or {}
+    util = f.get("budget_utilization")
+    util_s = f"{util:.0%}" if util is not None else "n/a"
+    phases = " ".join(f"{k}={v:.2f}s"
+                      for k, v in sorted(result.phase_s.items()))
+    return (f"telemetry: staleness {f.get('staleness_mean', 0.0):.2f} "
+            f"(p95 {f.get('staleness_p95', 0)}) "
+            f"reach {f.get('reach_fraction', 0.0):.0%} "
+            f"admitted/epoch {f.get('admitted_per_epoch', 0.0):.1f} "
+            f"budget-util {util_s} "
+            f"events {len(t.get('events', []))}; {phases}")
 
 
 # ---------------------------------------------------------------------------
@@ -260,7 +409,7 @@ class SweepCell:
 
     def to_dict(self) -> Dict[str, Any]:
         r = self.result
-        return {
+        out = {
             "overrides": {k: _encode(v) for k, v in self.overrides.items()},
             "config_hash": r.config_hash,
             "best_acc": r.best_acc, "final_acc": r.final_acc,
@@ -270,6 +419,23 @@ class SweepCell:
             "epochs_run": r.epoch[-1] if r.epoch else 0,
             "traces": r.traces, "wall_s": r.wall_s,
         }
+        if r.telemetry is not None:
+            out["telemetry"] = _cell_telemetry(r.telemetry)
+        return out
+
+
+#: per-cell telemetry summary columns carried into sweep/bench artifacts
+_CELL_TELEMETRY_KEYS = ("staleness_mean", "staleness_p95", "spread_mean",
+                        "reach_fraction", "admitted_per_epoch",
+                        "budget_utilization", "contacts_per_epoch")
+
+
+def _cell_telemetry(telem: Mapping[str, Any]) -> Dict[str, Any]:
+    """The compact per-cell telemetry record for sweep tables: the fleet
+    summary columns a dashboard plots per grid point (staleness vs
+    accuracy, budget-utilization frontier), not the full event stream."""
+    fleet = telem.get("fleet") or {}
+    return {k: fleet.get(k) for k in _CELL_TELEMETRY_KEYS}
 
 
 @dataclasses.dataclass
@@ -358,7 +524,7 @@ def sweep(base: Scenario, axes: Mapping[str, Sequence[Any]], *,
                    if k not in TRACED_AXES]
     traced_axes = [(k, list(v)) for k, v in axes.items() if k in TRACED_AXES]
     cells: List[SweepCell] = []
-    t0 = time.time()
+    t0 = time.perf_counter()
     # traced budget mode keeps a budget axis from splitting engines
     budget_axis = "dfl.transfer_budget" in axes
     # bounded LRU engine cache: cells that differ only in traced knobs —
@@ -391,7 +557,7 @@ def sweep(base: Scenario, axes: Mapping[str, Sequence[Any]], *,
     engine_traces = {f"engine{idx}": t for idx, t in enumerate(retired)}
     return SweepResult(base=base, axes={k: list(v) for k, v in axes.items()},
                        cells=cells, engine_traces=engine_traces,
-                       wall_s=time.time() - t0)
+                       wall_s=time.perf_counter() - t0)
 
 
 class _EngineCache(collections.OrderedDict):

@@ -243,6 +243,7 @@ class Scenario:
     engine: str = "fused"             # fused | legacy
     verbose: bool = False
     record_cache_stats: bool = False
+    telemetry: bool = False           # fleet observability (repro.telemetry)
 
     # -- serialization ------------------------------------------------------
 
@@ -250,6 +251,7 @@ class Scenario:
         return {"name": self.name, "engine": self.engine,
                 "verbose": self.verbose,
                 "record_cache_stats": self.record_cache_stats,
+                "telemetry": self.telemetry,
                 "experiment": _encode(self.experiment)}
 
     @classmethod
@@ -268,8 +270,9 @@ class Scenario:
     def content_hash(self) -> str:
         """Stable provenance hash of what the run *computes*: the
         experiment spec + engine choice. Presentation-only fields
-        (``name``, ``verbose``, ``record_cache_stats``) are excluded, so
-        a preset, a spec file, and a verbose CLI run of the same
+        (``name``, ``verbose``, ``record_cache_stats``, ``telemetry`` —
+        observability never changes the model trajectory) are excluded,
+        so a preset, a spec file, and a verbose CLI run of the same
         experiment all report the same hash."""
         canon = json.dumps({"experiment": _encode(self.experiment),
                             "engine": self.engine},

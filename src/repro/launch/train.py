@@ -131,6 +131,8 @@ def scenario_from_args(args, dest_to_path: dict):
     else:
         base = api.Scenario().with_overrides(_CLI_BASE_OVERRIDES)
     base = dataclasses.replace(base, verbose=True)
+    if args.telemetry or args.telemetry_out:
+        base = dataclasses.replace(base, telemetry=True)
     return base.with_overrides(collect_overrides(args, dest_to_path))
 
 
@@ -145,6 +147,13 @@ def run_fleet(args, dest_to_path: dict) -> dict:
     print(f"\nbest acc {result.best_acc:.4f} "
           f"final {result.final_acc:.4f} in {result.wall_s:.1f}s "
           f"[config {result.config_hash}]")
+    if result.telemetry is not None:
+        print(api.telemetry_line(result))
+        if args.telemetry_out:
+            from repro.telemetry import events as events_lib
+            events_lib.write_jsonl(args.telemetry_out,
+                                   result.telemetry["events"])
+            print(f"telemetry events -> {args.telemetry_out}")
     return result.to_dict()
 
 
@@ -231,6 +240,13 @@ def build_parser():
                     help="score knob for the chosen policy, repeatable "
                          "(e.g. --policy-param mobility_bias=8); "
                          "shorthand for --set dfl.policy_params=...")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="enable fleet telemetry (staleness/spread/traffic "
+                         "metrics, phase spans, structured events); "
+                         "bit-exact with a non-telemetry run")
+    ap.add_argument("--telemetry-out", default="", metavar="PATH",
+                    help="write the structured run-event stream as JSONL "
+                         "(implies --telemetry)")
     dest_to_path = _add_generated_flags(ap)
     # pod args
     ap.add_argument("--arch", choices=cfg_registry.ARCH_IDS,

@@ -1,0 +1,34 @@
+"""Fleet observability: on-device metrics, host-side spans, run events.
+
+Two halves, glued together by ``repro.fl.runner``:
+
+- :mod:`repro.telemetry.metrics` — fixed-shape on-device accumulators
+  (:class:`FleetMetrics`) that ride the fused engine's ``lax.fori_loop``
+  carry: cache-staleness histogram, model-spread/reachability, gossip
+  traffic + budget utilization, encounter counters. Reduced on device,
+  shipped to host as a handful of scalars/small arrays at run end.
+- :mod:`repro.telemetry.spans` / :mod:`repro.telemetry.events` —
+  ``perf_counter``-based phase spans (build/engine/dispatch/eval) and a
+  structured, schema-validated JSONL run-event stream
+  (:class:`RunEvent`).
+
+Telemetry is gated by ``Scenario.telemetry``; the zero-telemetry path is
+bit-exact with the untelemetered engine (pinned by
+``tests/test_telemetry.py``), and telemetry-on fused runs keep the
+1-trace-per-(algorithm, shape) compile discipline.
+"""
+from repro.telemetry.events import (  # noqa: F401
+    EVENT_KINDS, SCHEMA_VERSION, EventLog, RunEvent, validate_event,
+    validate_events, validate_jsonl, write_jsonl)
+from repro.telemetry.metrics import (  # noqa: F401
+    ExchangeStats, FleetMetrics, accumulate, init_metrics, summarize,
+    zero_exchange_stats)
+from repro.telemetry.spans import SpanTimer  # noqa: F401
+
+__all__ = [
+    "ExchangeStats", "FleetMetrics", "accumulate", "init_metrics",
+    "summarize", "zero_exchange_stats",
+    "SpanTimer",
+    "EventLog", "RunEvent", "EVENT_KINDS", "SCHEMA_VERSION",
+    "validate_event", "validate_events", "validate_jsonl", "write_jsonl",
+]

@@ -1,0 +1,178 @@
+"""Structured run events: an append-only, schema-validated JSONL stream.
+
+Every telemetry-enabled run emits a sequence of :class:`RunEvent`
+records — run lifecycle, phase spans, engine compiles, eval points —
+timestamped on the monotonic ``perf_counter`` clock relative to run
+start and tagged with the scenario's ``content_hash`` for provenance.
+The stream rides ``RunResult.telemetry["events"]`` and can be written
+as JSON Lines via the train CLI's ``--telemetry-out`` (one event per
+line, strict RFC 8259, sorted by ``t``).
+
+Schema (``SCHEMA_VERSION``) — each line is an object with exactly:
+
+    kind   str   one of EVENT_KINDS
+    t      float seconds since run start (monotonic, >= 0; lines sorted)
+    run    str   Scenario.content_hash() of the run
+    epoch  int | null  1-based epoch the event refers to (null = run-level)
+    data   object      kind-specific payload (see KIND_REQUIRED_DATA)
+
+``validate_event`` / ``validate_events`` / ``validate_jsonl`` check a
+record, a stream, or a file against this schema and return a list of
+human-readable problems (empty = valid); ``tools/check_scenarios.py
+--telemetry`` runs that gate over a live run per algorithm.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Any, Dict, Iterable, List, Mapping, Optional
+
+SCHEMA_VERSION = "repro-telemetry-v1"
+
+EVENT_KINDS = ("run_start", "phase", "compile", "eval", "run_end")
+
+#: data keys each kind must carry (extra keys are allowed)
+KIND_REQUIRED_DATA = {
+    "run_start": ("algorithm", "engine", "num_agents", "epochs"),
+    "phase": ("name", "dur_s"),
+    "compile": ("traces",),
+    "eval": ("acc",),
+    "run_end": ("best_acc", "final_acc", "wall_s"),
+}
+
+
+@dataclasses.dataclass
+class RunEvent:
+    kind: str
+    t: float                      # seconds since run start (monotonic)
+    run: str                      # scenario content hash
+    epoch: Optional[int] = None   # 1-based; None = run-level event
+    data: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"kind": self.kind, "t": self.t, "run": self.run,
+                "epoch": self.epoch, "data": dict(self.data)}
+
+
+class EventLog:
+    """Collects RunEvents against one run's clock and hash."""
+
+    def __init__(self, run_hash: str):
+        self.run = run_hash
+        self.t0 = time.perf_counter()
+        self._events: List[RunEvent] = []
+
+    def emit(self, kind: str, *, epoch: Optional[int] = None,
+             at: Optional[float] = None, **data) -> RunEvent:
+        """Append an event; ``at`` (an absolute ``perf_counter`` reading)
+        backdates it — used for phase spans timestamped at span start."""
+        t = (time.perf_counter() if at is None else at) - self.t0
+        ev = RunEvent(kind=kind, t=max(t, 0.0), run=self.run, epoch=epoch,
+                      data=data)
+        self._events.append(ev)
+        return ev
+
+    def span_callback(self):
+        """An ``on_close`` hook for :class:`~repro.telemetry.spans
+        .SpanTimer` that mirrors every span as a ``phase`` event."""
+        def on_close(name: str, start: float, dur: float, depth: int):
+            self.emit("phase", at=start, name=name, dur_s=dur, depth=depth)
+        return on_close
+
+    def to_dicts(self) -> List[Dict[str, Any]]:
+        """The event stream as JSON-able dicts, sorted by timestamp."""
+        return [e.to_dict() for e in sorted(self._events,
+                                            key=lambda e: e.t)]
+
+    def write_jsonl(self, path: str) -> None:
+        write_jsonl(path, self.to_dicts())
+
+
+def write_jsonl(path: str, events: Iterable[Mapping[str, Any]]) -> None:
+    """Write events (dicts or RunEvents) as sorted JSON Lines."""
+    rows = [e.to_dict() if isinstance(e, RunEvent) else dict(e)
+            for e in events]
+    rows.sort(key=lambda r: r.get("t", 0.0))
+    with open(path, "w") as f:
+        for row in rows:
+            f.write(json.dumps(row, sort_keys=True, allow_nan=False) + "\n")
+
+
+# ---------------------------------------------------------------------------
+# validation
+# ---------------------------------------------------------------------------
+
+def validate_event(d: Mapping[str, Any]) -> List[str]:
+    """Problems with one event record (empty list = valid)."""
+    problems: List[str] = []
+    if not isinstance(d, Mapping):
+        return [f"event is not an object: {d!r}"]
+    missing = [k for k in ("kind", "t", "run", "epoch", "data") if k not in d]
+    if missing:
+        problems.append(f"missing key(s) {missing}")
+    kind = d.get("kind")
+    if kind not in EVENT_KINDS:
+        problems.append(f"unknown kind {kind!r}; valid: {list(EVENT_KINDS)}")
+    t = d.get("t")
+    if not isinstance(t, (int, float)) or isinstance(t, bool) or t < 0:
+        problems.append(f"t must be a non-negative number, got {t!r}")
+    if not isinstance(d.get("run"), str) or not d.get("run"):
+        problems.append(f"run must be a non-empty hash string, "
+                        f"got {d.get('run')!r}")
+    epoch = d.get("epoch")
+    if epoch is not None and (not isinstance(epoch, int)
+                              or isinstance(epoch, bool)):
+        problems.append(f"epoch must be an int or null, got {epoch!r}")
+    data = d.get("data")
+    if not isinstance(data, Mapping):
+        problems.append(f"data must be an object, got {data!r}")
+    elif kind in KIND_REQUIRED_DATA:
+        need = [k for k in KIND_REQUIRED_DATA[kind] if k not in data]
+        if need:
+            problems.append(f"{kind!r} data missing key(s) {need}")
+    return problems
+
+
+def validate_events(events: Iterable[Mapping[str, Any]]) -> List[str]:
+    """Problems across a stream: per-event schema + monotone timestamps +
+    one shared run hash."""
+    problems: List[str] = []
+    last_t = None
+    runs = set()
+    n = 0
+    for i, ev in enumerate(events):
+        n += 1
+        for p in validate_event(ev):
+            problems.append(f"event[{i}]: {p}")
+        t = ev.get("t") if isinstance(ev, Mapping) else None
+        if isinstance(t, (int, float)) and not isinstance(t, bool):
+            if last_t is not None and t < last_t:
+                problems.append(
+                    f"event[{i}]: t={t} precedes previous t={last_t} "
+                    f"(stream must be sorted by t)")
+            last_t = t
+        if isinstance(ev, Mapping):
+            runs.add(ev.get("run"))
+    if n == 0:
+        problems.append("empty event stream")
+    if len(runs) > 1:
+        problems.append(f"events carry {len(runs)} distinct run hashes: "
+                        f"{sorted(map(str, runs))}")
+    return problems
+
+
+def validate_jsonl(path: str) -> List[str]:
+    """Validate a JSONL event file (parse errors reported per line)."""
+    events: List[Mapping[str, Any]] = []
+    problems: List[str] = []
+    with open(path) as f:
+        for lineno, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                events.append(json.loads(line))
+            except json.JSONDecodeError as e:
+                problems.append(f"line {lineno}: invalid JSON ({e})")
+    return problems + validate_events(events)

@@ -1,0 +1,189 @@
+"""On-device fleet telemetry: fixed-shape accumulators for the epoch loop.
+
+The paper's experimental story is the interplay between mobility, cache
+staleness and convergence — but the raw signals (entry ages at
+aggregation time, how far each model has spread, how much a bandwidth
+budget actually admits) live deep inside the jitted epoch. The
+:class:`FleetMetrics` struct makes them observable without breaking the
+engine's compile discipline: every field is a fixed-shape array, the
+struct rides the fused engine's ``lax.fori_loop`` carry, and all
+reductions happen on device — only the final small arrays cross to host
+(``summarize``).
+
+Accumulation never touches the PRNG key stream and only *reads* the
+fleet state, so a telemetry-on run is bit-exact with telemetry-off on
+model trajectories (pinned by ``tests/test_telemetry.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class ExchangeStats:
+    """One epoch's gossip traffic, reduced over the whole fleet.
+
+    ``offered`` counts valid non-own candidate entries presented over
+    radio links (partner fresh models + partner cache entries, after the
+    staleness kick-out); ``admitted`` counts the entries that actually
+    crossed a link into retention (for a budgeted exchange: survived
+    dedup + the per-link admission cap; unbudgeted: all offered).
+    ``admitted_capped`` restricts that to links with a *finite* cap, and
+    ``link_capacity`` / ``capped_links`` total the finite per-link entry
+    capacity and the number of such links — together they give the
+    budget-utilization fraction ``admitted_capped / link_capacity``.
+    """
+    offered: jax.Array         # [] float32
+    admitted: jax.Array        # [] float32
+    admitted_capped: jax.Array # [] float32
+    link_capacity: jax.Array   # [] float32
+    capped_links: jax.Array    # [] float32
+
+
+jax.tree_util.register_dataclass(
+    ExchangeStats,
+    data_fields=["offered", "admitted", "admitted_capped", "link_capacity",
+                 "capped_links"],
+    meta_fields=[])
+
+
+def zero_exchange_stats() -> ExchangeStats:
+    z = jnp.zeros((), jnp.float32)
+    return ExchangeStats(offered=z, admitted=z, admitted_capped=z,
+                         link_capacity=z, capped_links=z)
+
+
+@dataclasses.dataclass
+class FleetMetrics:
+    """Cumulative fleet observables (fixed shapes; fori_loop-carry safe).
+
+    ``staleness_hist[b]`` counts cached entries of age ``b`` (epochs since
+    local training, clamped to the last bin) summed over agents, slots and
+    epochs — one entry-epoch per count. ``origins_seen[i, o]`` latches
+    once agent ``i`` has ever cached a model that originated at agent
+    ``o`` — the delay-tolerant model spread the paper motivates; a row's
+    popcount is that agent's reachability. Traffic fields accumulate
+    :class:`ExchangeStats`; ``contacts`` counts realized (deduped)
+    partner links per epoch.
+    """
+    epochs: jax.Array          # [] int32 — epochs accumulated
+    staleness_hist: jax.Array  # [B] float32
+    origins_seen: jax.Array    # [N, N] bool
+    offered: jax.Array         # [] float32
+    admitted: jax.Array        # [] float32
+    admitted_capped: jax.Array # [] float32
+    link_capacity: jax.Array   # [] float32
+    capped_links: jax.Array    # [] float32
+    contacts: jax.Array        # [] float32
+
+
+jax.tree_util.register_dataclass(
+    FleetMetrics,
+    data_fields=["epochs", "staleness_hist", "origins_seen", "offered",
+                 "admitted", "admitted_capped", "link_capacity",
+                 "capped_links", "contacts"],
+    meta_fields=[])
+
+
+def init_metrics(num_agents: int, bins: int) -> FleetMetrics:
+    """Zeroed accumulators; ``bins`` should cover ages ``0..tau_max``
+    (ages beyond the last bin are clamped into it)."""
+    z = jnp.zeros((), jnp.float32)
+    return FleetMetrics(
+        epochs=jnp.zeros((), jnp.int32),
+        staleness_hist=jnp.zeros((bins,), jnp.float32),
+        origins_seen=jnp.zeros((num_agents, num_agents), bool),
+        offered=z, admitted=z, admitted_capped=z, link_capacity=z,
+        capped_links=z, contacts=z)
+
+
+def accumulate(metrics: FleetMetrics, state, partners,
+               xstats: Optional[ExchangeStats] = None) -> FleetMetrics:
+    """Fold one epoch into the accumulators (jit-able, device-resident).
+
+    ``state`` is the *post-epoch* FleetState (its ``t`` has already been
+    advanced, so entry ages are measured against ``t - 1`` — the epoch
+    the aggregation actually used). ``partners`` is that epoch's [N, D]
+    contact list; ``xstats`` the exchange's traffic counters (None for
+    algorithms without a cache exchange).
+    """
+    from repro.core.gossip import valid_partner_mask  # late: avoid cycle
+
+    cache = state.cache
+    valid = cache.origin >= 0
+    t_agg = state.t - 1
+    B = metrics.staleness_hist.shape[0]
+    ages = jnp.clip(t_agg - cache.ts, 0, B - 1)
+    hist = metrics.staleness_hist + jnp.sum(
+        (ages[..., None] == jnp.arange(B)) & valid[..., None],
+        axis=(0, 1)).astype(jnp.float32)
+
+    N = metrics.origins_seen.shape[0]
+    hit = (cache.origin[:, :, None] == jnp.arange(N)) & valid[:, :, None]
+    seen = metrics.origins_seen | jnp.any(hit, axis=1)
+
+    contacts = metrics.contacts + jnp.sum(
+        valid_partner_mask(partners).astype(jnp.float32))
+
+    if xstats is None:
+        xstats = zero_exchange_stats()
+    return FleetMetrics(
+        epochs=metrics.epochs + 1,
+        staleness_hist=hist,
+        origins_seen=seen,
+        offered=metrics.offered + xstats.offered,
+        admitted=metrics.admitted + xstats.admitted,
+        admitted_capped=metrics.admitted_capped + xstats.admitted_capped,
+        link_capacity=metrics.link_capacity + xstats.link_capacity,
+        capped_links=metrics.capped_links + xstats.capped_links,
+        contacts=contacts)
+
+
+def summarize(metrics: FleetMetrics) -> Dict[str, Any]:
+    """Ship the accumulators to host and reduce to a JSON-able summary."""
+    hist = np.asarray(metrics.staleness_hist, dtype=float)
+    total = float(hist.sum())
+    bins = np.arange(hist.shape[0], dtype=float)
+    if total > 0:
+        mean_stale = float((hist * bins).sum() / total)
+        cdf = np.cumsum(hist) / total
+        p95 = int(np.searchsorted(cdf, 0.95))
+    else:
+        mean_stale, p95 = 0.0, 0
+    seen = np.asarray(metrics.origins_seen)
+    N = seen.shape[0]
+    spread = seen.sum(axis=1).astype(float)     # distinct origins per agent
+    epochs = int(metrics.epochs)
+    offered = float(metrics.offered)
+    admitted = float(metrics.admitted)
+    admitted_capped = float(metrics.admitted_capped)
+    capacity = float(metrics.link_capacity)
+    contacts = float(metrics.contacts)
+    denom = max(epochs, 1)
+    return {
+        "epochs": epochs,
+        "num_agents": int(N),
+        "staleness_hist": [int(h) for h in hist],
+        "staleness_mean": mean_stale,
+        "staleness_p95": p95,
+        "cache_entry_epochs": int(total),
+        "spread_mean": float(spread.mean()) if N else 0.0,
+        "spread_min": float(spread.min()) if N else 0.0,
+        "spread_max": float(spread.max()) if N else 0.0,
+        "reach_fraction": float(spread.mean() / N) if N else 0.0,
+        "offered": offered,
+        "admitted": admitted,
+        "denied": offered - admitted,
+        "admitted_per_epoch": admitted / denom,
+        "link_capacity": capacity,
+        "capped_links": float(metrics.capped_links),
+        "budget_utilization": (admitted_capped / capacity
+                               if capacity > 0 else None),
+        "contacts": contacts,
+        "contacts_per_epoch": contacts / denom,
+    }

@@ -1,0 +1,63 @@
+"""Nestable phase-timing spans on the monotonic ``perf_counter`` clock.
+
+A :class:`SpanTimer` is a plain host-side recorder: ``with
+timer.span("dispatch"): ...`` appends a row ``{name, start, dur_s,
+depth}`` when the block closes. ``totals()`` collapses the rows into a
+``name -> seconds`` phase breakdown (what ``RunResult.phase_s``
+carries); an ``on_close`` callback lets the runner mirror every span
+into the structured event stream without coupling the two modules.
+
+Spans nest (depth 1 = outermost); a nested span's time is counted in
+both its own name and its ancestors', so totals are per-phase wall
+times, not a partition.
+"""
+from __future__ import annotations
+
+import contextlib
+import time
+from typing import Callable, Dict, List, Optional
+
+
+class SpanTimer:
+    def __init__(self, on_close: Optional[Callable[[str, float, float, int],
+                                                   None]] = None):
+        self._rows: List[Dict] = []
+        self._depth = 0
+        self.on_close = on_close
+
+    @contextlib.contextmanager
+    def span(self, name: str):
+        start = time.perf_counter()
+        self._depth += 1
+        depth = self._depth
+        try:
+            yield self
+        finally:
+            self._depth -= 1
+            dur = time.perf_counter() - start
+            self._rows.append({"name": name, "start": start,
+                               "dur_s": dur, "depth": depth})
+            if self.on_close is not None:
+                self.on_close(name, start, dur, depth)
+
+    def rows(self) -> List[Dict]:
+        """Closed spans in completion order (inner spans close first)."""
+        return list(self._rows)
+
+    def totals(self) -> Dict[str, float]:
+        """Total seconds per span name (repeated spans sum)."""
+        out: Dict[str, float] = {}
+        for row in self._rows:
+            out[row["name"]] = out.get(row["name"], 0.0) + row["dur_s"]
+        return out
+
+    def summary(self) -> Dict[str, Dict[str, float]]:
+        """Per-name ``{"total_s", "count", "max_s"}`` aggregates."""
+        out: Dict[str, Dict[str, float]] = {}
+        for row in self._rows:
+            agg = out.setdefault(row["name"],
+                                 {"total_s": 0.0, "count": 0, "max_s": 0.0})
+            agg["total_s"] += row["dur_s"]
+            agg["count"] += 1
+            agg["max_s"] = max(agg["max_s"], row["dur_s"])
+        return out

@@ -1,0 +1,277 @@
+"""Fleet telemetry: bit-exactness of telemetry-on runs, compile
+discipline, on-device metric invariants, span/event plumbing, and the
+report tool's dashboards."""
+import dataclasses
+import importlib.util
+import json
+import os
+
+import jax.numpy as jnp
+import pytest
+
+from repro import api
+from repro.configs.base import DFLConfig, MobilityConfig
+from repro.core import rounds as rounds_lib
+from repro.fl.experiment import ExperimentConfig
+from repro.telemetry import (EventLog, SpanTimer, accumulate, init_metrics,
+                             summarize, validate_events, validate_jsonl,
+                             zero_exchange_stats)
+
+TINY = dict(
+    dfl=DFLConfig(num_agents=6, cache_size=3, tau_max=10, local_steps=2,
+                  lr=0.1, batch_size=16, epoch_seconds=10.0),
+    mobility=MobilityConfig(grid_w=4, grid_h=6),
+    epochs=4, eval_every=2, n_train=300, n_test=60, image_hw=8,
+    lr_plateau=False,
+)
+
+
+def tiny_scenario(telemetry=False, **kw):
+    merged = {**TINY, **kw}
+    return api.Scenario(experiment=ExperimentConfig(**merged),
+                        record_cache_stats=True, telemetry=telemetry)
+
+
+def _report_module():
+    path = os.path.join(os.path.dirname(__file__), "..", "tools",
+                        "report.py")
+    spec = importlib.util.spec_from_file_location("repro_report_tool", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+# ---------------------------------------------------------------------------
+# bit-exactness + compile discipline
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("algorithm", ["cached", "dfl", "cfl"])
+def test_fused_telemetry_is_bit_exact_and_single_trace(algorithm):
+    off = api.run(tiny_scenario(algorithm=algorithm))
+    on = api.run(tiny_scenario(algorithm=algorithm, telemetry=True))
+    assert on.acc == off.acc          # identical trajectory, bit for bit
+    assert on.lr == off.lr
+    assert on.cache_num == off.cache_num
+    assert on.traces == off.traces == 1
+    assert on.config_hash == off.config_hash
+    assert off.telemetry is None and off.phase_s == {}
+    assert on.telemetry is not None
+
+
+@pytest.mark.slow
+def test_legacy_engine_telemetry_is_bit_exact():
+    off = api.run(tiny_scenario().with_overrides({"engine": "legacy"}))
+    on = api.run(tiny_scenario(telemetry=True)
+                 .with_overrides({"engine": "legacy"}))
+    assert on.acc == off.acc
+    assert on.telemetry["fleet"]["epochs"] == TINY["epochs"]
+
+
+@pytest.mark.slow
+def test_record_cache_stats_reports_for_all_algorithms():
+    # the cached-only gate is lifted: dfl runs report (empty) occupancy too
+    r = api.run(tiny_scenario(algorithm="dfl"))
+    assert len(r.cache_num) == len(r.acc) == 2
+    assert all(v == 0.0 for v in r.cache_num)
+
+
+# ---------------------------------------------------------------------------
+# on-device fleet metrics
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_fleet_metrics_invariants():
+    r = api.run(tiny_scenario(telemetry=True))
+    f = r.telemetry["fleet"]
+    N, epochs = TINY["dfl"].num_agents, TINY["epochs"]
+    assert f["epochs"] == epochs and f["num_agents"] == N
+    assert sum(f["staleness_hist"]) == f["cache_entry_epochs"]
+    assert 0 <= f["staleness_mean"] <= TINY["dfl"].tau_max
+    assert f["staleness_p95"] < len(f["staleness_hist"])
+    # every agent has at least seen a model of its own origin via partners
+    assert 0 <= f["spread_min"] <= f["spread_mean"] <= f["spread_max"] <= N
+    assert 0 <= f["reach_fraction"] <= 1
+    assert f["offered"] >= f["admitted"] >= 0
+    assert f["denied"] == f["offered"] - f["admitted"]
+    assert f["contacts"] > 0
+    assert f["budget_utilization"] is None  # unbudgeted run: no capacity
+    # dispersion series covers every eval point
+    ev = r.telemetry["eval"]
+    assert len(ev["acc_std"]) == len(r.acc)
+    assert all(lo <= hi for lo, hi in zip(ev["acc_min"], ev["acc_max"]))
+    assert len(ev["contacts_per_epoch"]) == len(r.acc)
+    assert all(c >= 0 for c in ev["contacts_per_epoch"])
+
+
+@pytest.mark.slow
+def test_budgeted_run_reports_utilization():
+    r = api.run(tiny_scenario(telemetry=True).with_overrides(
+        {"dfl.transfer_budget": 1.0}))
+    f = r.telemetry["fleet"]
+    assert f["link_capacity"] > 0 and f["capped_links"] > 0
+    assert 0.0 <= f["budget_utilization"] <= 1.0
+    assert f["admitted"] <= f["offered"]
+
+
+def test_accumulate_counts_entries_and_contacts():
+    N, C, B = 4, 2, 5
+    m = init_metrics(N, B)
+    # hand-built fleet state: agent i caches a model from origin (i+1)%N
+    # with age 1, second slot empty
+    origin = jnp.stack([jnp.array([(i + 1) % N, -1]) for i in range(N)])
+    ts = jnp.full((N, C), 2, jnp.int32)
+    state = _FakeState(t=jnp.asarray(4, jnp.int32),
+                       cache=_FakeCache(origin=origin.astype(jnp.int32),
+                                        ts=ts))
+    partners = jnp.array([[1, -1], [0, -1], [3, 3], [-1, -1]], jnp.int32)
+    m = accumulate(m, state, partners, zero_exchange_stats())
+    s = summarize(m)
+    assert s["epochs"] == 1
+    assert s["cache_entry_epochs"] == N          # one valid entry per agent
+    # ages clamp into bin 1 (t_agg=3, ts=2)
+    assert s["staleness_hist"][1] == N
+    assert s["spread_mean"] == 1.0
+    # duplicate partner id (agent 2 row) deduped; padding ignored
+    assert s["contacts"] == 3.0
+
+
+@dataclasses.dataclass
+class _FakeCache:
+    origin: jnp.ndarray
+    ts: jnp.ndarray
+
+
+@dataclasses.dataclass
+class _FakeState:
+    t: jnp.ndarray
+    cache: _FakeCache
+
+
+# ---------------------------------------------------------------------------
+# spans + events
+# ---------------------------------------------------------------------------
+
+def test_span_timer_nesting_and_totals():
+    closed = []
+    timer = SpanTimer(on_close=lambda *row: closed.append(row))
+    with timer.span("outer"):
+        with timer.span("inner"):
+            pass
+        with timer.span("inner"):
+            pass
+    tot = timer.totals()
+    assert set(tot) == {"outer", "inner"}
+    assert tot["outer"] >= tot["inner"] >= 0.0
+    assert timer.summary()["inner"]["count"] == 2
+    assert [c[0] for c in closed] == ["inner", "inner", "outer"]
+    assert [c[3] for c in closed] == [2, 2, 1]   # depths
+
+
+def test_event_log_schema_and_jsonl_roundtrip(tmp_path):
+    log = EventLog("abc123")
+    log.emit("run_start", algorithm="cached", engine="fused",
+             num_agents=6, epochs=2)
+    log.emit("eval", epoch=2, acc=0.5)
+    log.emit("run_end", best_acc=0.5, final_acc=0.5, wall_s=1.0)
+    assert validate_events(log.to_dicts()) == []
+    path = tmp_path / "events.jsonl"
+    log.write_jsonl(str(path))
+    assert validate_jsonl(str(path)) == []
+    lines = path.read_text().strip().splitlines()
+    assert [json.loads(l)["kind"] for l in lines] == \
+        ["run_start", "eval", "run_end"]
+
+
+def test_event_validation_catches_bad_streams():
+    good = {"kind": "eval", "t": 1.0, "run": "abc", "epoch": 2,
+            "data": {"acc": 0.5}}
+    assert validate_events([good]) == []
+    assert validate_events([])                       # empty stream
+    assert validate_events([{**good, "kind": "nope"}])
+    assert validate_events([{**good, "t": -1.0}])
+    assert validate_events([{**good, "data": {}}])   # missing required key
+    bad_order = [dict(good, t=2.0), dict(good, t=1.0)]
+    assert any("sorted" in p for p in validate_events(bad_order))
+    two_runs = [good, dict(good, run="other", t=2.0)]
+    assert any("distinct run" in p for p in validate_events(two_runs))
+
+
+@pytest.mark.slow
+def test_run_emits_validated_event_stream():
+    r = api.run(tiny_scenario(telemetry=True))
+    events = r.telemetry["events"]
+    assert validate_events(events) == []
+    kinds = [e["kind"] for e in events]
+    assert kinds[0] == "run_start" and kinds[-1] == "run_end"
+    assert kinds.count("eval") == len(r.acc)
+    assert "compile" in kinds and "phase" in kinds
+    assert all(e["run"] == r.config_hash for e in events)
+    assert {"build", "compile", "dispatch", "eval"} <= set(r.phase_s)
+
+
+# ---------------------------------------------------------------------------
+# scenario plumbing
+# ---------------------------------------------------------------------------
+
+def test_telemetry_flag_excluded_from_content_hash():
+    assert tiny_scenario().content_hash() == \
+        tiny_scenario(telemetry=True).content_hash()
+
+
+def test_telemetry_flag_round_trips():
+    s = tiny_scenario(telemetry=True)
+    assert api.Scenario.from_json(s.to_json()) == s
+    assert s.with_overrides({"telemetry": "false"}).telemetry is False
+
+
+# ---------------------------------------------------------------------------
+# sweep + report dashboards
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_sweep_carries_telemetry_columns_and_report_renders(tmp_path):
+    base = tiny_scenario(telemetry=True)
+    sw = api.sweep(base, {"dfl.transfer_budget": [1.0, float("inf")]})
+    assert sw.retraces == 0
+    doc = sw.write_bench(str(tmp_path / "BENCH_tiny.json"), name="tiny")
+    for cell in doc["cells"]:
+        assert "telemetry" in cell
+        assert "staleness_mean" in cell["telemetry"]
+    report = _report_module()
+    md = report.render(doc)
+    assert "Budget-utilization frontier" in md
+    assert "budget util" in md
+    # finite-budget cell realized a utilization; inf cell has none
+    finite = [c for c in doc["cells"]
+              if c["overrides"]["dfl.transfer_budget"] == 1.0]
+    assert finite[0]["telemetry"]["budget_utilization"] is not None
+
+
+@pytest.mark.slow
+def test_report_renders_fresh_run_json(tmp_path):
+    r = api.run(tiny_scenario(telemetry=True))
+    path = tmp_path / "run.json"
+    path.write_text(r.to_json())
+    report = _report_module()
+    md = report.render(json.loads(path.read_text()))
+    assert "# Run report" in md
+    assert "Staleness vs accuracy" in md
+    assert "Phase times" in md
+    assert "Fleet metrics" in md
+    assert r.config_hash in md
+
+
+def test_report_renders_committed_bench_artifact():
+    path = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_budget.json")
+    if not os.path.exists(path):
+        pytest.skip("no committed BENCH_budget.json")
+    with open(path) as f:
+        doc = json.load(f)
+    report = _report_module()
+    md = report.render(doc)
+    # pre-telemetry artifact: renders without telemetry columns
+    assert "# Benchmark report" in md
+    assert "Budget-utilization frontier" in md
+    assert "| transfer_budget |" in md

@@ -1,19 +1,24 @@
 """Scenario smoke gate: every registered mobility model × {cached, dfl},
 every registered cache policy × {manhattan, trace}, bandwidth-budget-
-limited exchanges (flat and duration-derived caps), and every registered
+limited exchanges (flat and duration-derived caps), every registered
 scenario preset (``repro.api.available_presets``) — each preset must
-``resolve()`` at full size and smoke-run shrunken.
+``resolve()`` at full size and smoke-run shrunken — and one
+telemetry-enabled run per algorithm whose structured event stream must
+validate against the JSONL schema (``repro.telemetry.events``).
 
 Runs 2 tiny epochs of the full experiment loop per combination through
 the Scenario API and fails (non-zero exit) on NaN accuracy, shape
-errors, or exceptions — so a mobility/scenario/policy/budget/preset
-regression is caught in seconds without the full benchmark suite.
+errors, or exceptions — so a mobility/scenario/policy/budget/preset/
+telemetry regression is caught in seconds without the full benchmark
+suite.
 
     PYTHONPATH=src python tools/check_scenarios.py [--list] [--only SUBSTR]
+    PYTHONPATH=src python tools/check_scenarios.py --telemetry
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import math
 import os
 import sys
@@ -101,6 +106,33 @@ def check_policy(policy: str, mob_name: str, trace_path: str,
     return _run(scenario)
 
 
+def check_telemetry(algorithm: str, out_dir: str) -> Optional[str]:
+    """Telemetry smoke: a tiny telemetry-on run per algorithm; the fleet
+    metrics must cover every epoch and the event stream must round-trip
+    through JSONL and pass the ``repro-telemetry-v1`` schema gate."""
+    from repro.telemetry import events as events_lib
+    scenario = api.get_preset("paper-noniid").with_overrides({
+        **SMOKE, "algorithm": algorithm})
+    scenario = dataclasses.replace(scenario, telemetry=True)
+    result = api.run(scenario)
+    bad = [a for a in result.acc if not math.isfinite(a)]
+    if bad:
+        return f"non-finite accuracy: {result.acc}"
+    telem = result.telemetry
+    if telem is None:
+        return "telemetry-enabled run returned no telemetry"
+    fleet = telem.get("fleet") or {}
+    if fleet.get("epochs") != scenario.experiment.epochs:
+        return (f"fleet metrics cover {fleet.get('epochs')} epochs, "
+                f"expected {scenario.experiment.epochs}")
+    path = os.path.join(out_dir, f"events_{algorithm}.jsonl")
+    events_lib.write_jsonl(path, telem["events"])
+    problems = events_lib.validate_jsonl(path)
+    if problems:
+        return "; ".join(problems[:3])
+    return None
+
+
 def check_preset(name: str) -> Optional[str]:
     """Full-size resolve, then a shrunken smoke run of the preset."""
     scenario = api.get_preset(name)
@@ -136,6 +168,10 @@ def build_checks(trace_path: str) -> List[Tuple[str, Callable[[], Optional[str]]
                        check_policy(p, m, trace_path, budget_knobs=k)))
     for name in api.available_presets():
         checks.append((f"preset:{name}", lambda n=name: check_preset(n)))
+    out_dir = os.path.dirname(trace_path)
+    for algorithm in ("cached", "dfl", "cfl"):
+        checks.append((f"telemetry:{algorithm}",
+                       lambda a=algorithm: check_telemetry(a, out_dir)))
     return checks
 
 
@@ -145,12 +181,19 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help="list scenario ids without running them")
     ap.add_argument("--only", default="",
                     help="run only scenarios whose id contains SUBSTR")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="run only the telemetry smoke checks (one "
+                         "telemetry-on run per algorithm + JSONL schema "
+                         "validation)")
     args = ap.parse_args(argv)
 
     tmp = tempfile.mkdtemp(prefix="check_scenarios_")
     trace_path = os.path.join(tmp, "trace.npz")
     make_trace(trace_path)
     checks = build_checks(trace_path)
+    if args.telemetry:
+        checks = [(cid, fn) for cid, fn in checks
+                  if cid.startswith("telemetry:")]
     if args.only:
         checks = [(cid, fn) for cid, fn in checks if args.only in cid]
     if args.list:

@@ -1,0 +1,295 @@
+"""Render a run or benchmark artifact into a markdown dashboard.
+
+Consumes either a ``RunResult`` JSON (``train.py --out run.json`` /
+``RunResult.to_json``) or a sweep benchmark artifact (``BENCH_*.json``,
+schema ``sweep-v1``) and emits a self-contained markdown report:
+
+- run reports: accuracy trajectory with cache staleness at each eval
+  point (the staleness-vs-accuracy table), the phase-time breakdown from
+  the span telemetry, the on-device fleet metrics summary (staleness
+  histogram, model spread, gossip traffic, budget utilization) and the
+  structured event stream tail;
+- bench reports: per-cell results with telemetry summary columns when
+  the sweep ran telemetry-enabled, engine/retrace accounting, and — for
+  sweeps with a ``dfl.transfer_budget`` axis — the budget-utilization
+  frontier (accuracy and realized utilization per budget level).
+
+Telemetry fields are optional throughout: artifacts written before the
+telemetry subsystem (or with ``telemetry=False``) render with the
+columns they have.
+
+    PYTHONPATH=src python tools/report.py run.json [-o report.md]
+    PYTHONPATH=src python tools/report.py BENCH_budget.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any, Dict, List, Mapping, Optional, Sequence
+
+
+def _fmt(v: Any, digits: int = 4) -> str:
+    if v is None:
+        return "—"
+    if isinstance(v, bool):
+        return str(v)
+    if isinstance(v, float):
+        return f"{v:.{digits}f}"
+    if isinstance(v, Mapping):  # config-object override (e.g. mobility)
+        for key in ("model", "name"):
+            if key in v:
+                return str(v[key])
+        return "<config>"
+    return str(v)
+
+
+def _table(headers: Sequence[str], rows: Sequence[Sequence[Any]]) -> List[str]:
+    lines = ["| " + " | ".join(headers) + " |",
+             "|" + "|".join("---" for _ in headers) + "|"]
+    for row in rows:
+        lines.append("| " + " | ".join(_fmt(c) for c in row) + " |")
+    return lines
+
+
+def is_bench(doc: Mapping[str, Any]) -> bool:
+    return "cells" in doc and "axes" in doc
+
+
+# ---------------------------------------------------------------------------
+# run report
+# ---------------------------------------------------------------------------
+
+def render_run(doc: Mapping[str, Any]) -> str:
+    scenario = doc.get("scenario") or {}
+    exp = scenario.get("experiment") or {}
+    metrics = doc.get("metrics") or {}
+    telem = doc.get("telemetry")
+    name = scenario.get("name") or exp.get("model", "run")
+
+    out: List[str] = [f"# Run report: {name}", ""]
+    out.append(f"- config hash: `{doc.get('config_hash', '?')}` "
+               f"(engine `{doc.get('engine', '?')}`, algorithm "
+               f"`{exp.get('algorithm', '?')}`)")
+    out.append(f"- best acc **{_fmt(doc.get('best_acc'))}** at epoch "
+               f"{doc.get('best_epoch', '?')}; final "
+               f"{_fmt(doc.get('final_acc'))}")
+    out.append(f"- wall {_fmt(doc.get('wall_s'), 2)}s, "
+               f"{doc.get('traces', '?')} engine trace(s)")
+    out.append("")
+
+    # staleness-vs-accuracy trajectory
+    epochs = metrics.get("epoch") or []
+    if epochs:
+        tel_eval = (telem or {}).get("eval") or {}
+        headers = ["epoch", "acc", "lr"]
+        cols: List[List[Any]] = [metrics.get("acc") or [],
+                                 metrics.get("lr") or []]
+        for label, series in (("cache_num", metrics.get("cache_num")),
+                              ("cache_age", metrics.get("cache_age")),
+                              ("acc_std", tel_eval.get("acc_std")),
+                              ("acc_min", tel_eval.get("acc_min")),
+                              ("acc_max", tel_eval.get("acc_max")),
+                              ("contacts/epoch",
+                               tel_eval.get("contacts_per_epoch"))):
+            if series and len(series) == len(epochs):
+                headers.append(label)
+                cols.append(series)
+        rows = [[ep] + [c[i] for c in cols] for i, ep in enumerate(epochs)]
+        out.append("## Staleness vs accuracy")
+        out.append("")
+        out.extend(_table(headers, rows))
+        out.append("")
+
+    # phase-time breakdown
+    phase_s = doc.get("phase_s") or {}
+    if phase_s:
+        total = sum(phase_s.values())
+        out.append("## Phase times")
+        out.append("")
+        rows = [[name_, f"{secs:.3f}",
+                 f"{100.0 * secs / total:.1f}%" if total else "—"]
+                for name_, secs in sorted(phase_s.items(),
+                                          key=lambda kv: -kv[1])]
+        out.extend(_table(["phase", "seconds", "share"], rows))
+        out.append("")
+
+    # on-device fleet metrics
+    fleet = (telem or {}).get("fleet")
+    if fleet:
+        out.append("## Fleet metrics")
+        out.append("")
+        out.append(f"- staleness: mean {_fmt(fleet.get('staleness_mean'), 2)} "
+                   f"epochs, p95 {fleet.get('staleness_p95', '—')} "
+                   f"({fleet.get('cache_entry_epochs', 0)} cache "
+                   f"entry-epochs)")
+        hist = fleet.get("staleness_hist") or []
+        if hist:
+            out.append(f"- staleness histogram (age 0..{len(hist) - 1}): "
+                       f"{hist}")
+        out.append(f"- model spread: mean {_fmt(fleet.get('spread_mean'), 2)}"
+                   f" / min {_fmt(fleet.get('spread_min'), 0)} / max "
+                   f"{_fmt(fleet.get('spread_max'), 0)} origins per agent "
+                   f"(reach {_fmt(fleet.get('reach_fraction'), 3)})")
+        out.append(f"- gossip traffic: offered {_fmt(fleet.get('offered'), 0)}"
+                   f", admitted {_fmt(fleet.get('admitted'), 0)}, denied "
+                   f"{_fmt(fleet.get('denied'), 0)} "
+                   f"({_fmt(fleet.get('admitted_per_epoch'), 1)} "
+                   f"admitted/epoch)")
+        util = fleet.get("budget_utilization")
+        if util is not None:
+            out.append(f"- budget utilization: {_fmt(util, 3)} over "
+                       f"{_fmt(fleet.get('capped_links'), 0)} capped links "
+                       f"(capacity {_fmt(fleet.get('link_capacity'), 0)} "
+                       f"entries)")
+        out.append(f"- contacts: {_fmt(fleet.get('contacts'), 0)} total, "
+                   f"{_fmt(fleet.get('contacts_per_epoch'), 2)} per epoch")
+        out.append("")
+
+    # event stream tail
+    events = (telem or {}).get("events") or []
+    if events:
+        out.append("## Events")
+        out.append("")
+        out.append(f"{len(events)} events "
+                   f"(schema `{(telem or {}).get('schema', '?')}`); last 5:")
+        out.append("")
+        out.append("```json")
+        for ev in events[-5:]:
+            out.append(json.dumps(ev, sort_keys=True))
+        out.append("```")
+        out.append("")
+    return "\n".join(out).rstrip() + "\n"
+
+
+# ---------------------------------------------------------------------------
+# bench report
+# ---------------------------------------------------------------------------
+
+_TELEMETRY_COLUMNS = (("staleness_mean", "staleness"),
+                      ("reach_fraction", "reach"),
+                      ("admitted_per_epoch", "admitted/ep"),
+                      ("budget_utilization", "budget util"))
+
+
+def render_bench(doc: Mapping[str, Any]) -> str:
+    cells = doc.get("cells") or []
+    axes = doc.get("axes") or {}
+    name = doc.get("bench") or "sweep"
+
+    out: List[str] = [f"# Benchmark report: {name}", ""]
+    out.append(f"- base config `{doc.get('base_config_hash', '?')}`, "
+               f"schema `{doc.get('schema', '?')}`"
+               + (f", fast={doc['fast']}" if "fast" in doc else ""))
+    out.append(f"- {len(cells)} cells over axes "
+               f"{{{', '.join(sorted(axes))}}}; "
+               f"{doc.get('num_engines', '?')} engine(s), "
+               f"{doc.get('retraces', '?')} retrace(s), wall "
+               f"{_fmt(doc.get('wall_s'), 1)}s")
+    out.append("")
+
+    has_telem = any(c.get("telemetry") for c in cells)
+    axis_names = sorted(axes)
+    headers = axis_names + ["best_acc", "final_acc", "epochs", "wall_s"]
+    if has_telem:
+        headers += [label for _, label in _TELEMETRY_COLUMNS]
+    rows = []
+    for cell in cells:
+        ov = cell.get("overrides") or {}
+        row: List[Any] = [ov.get(a) for a in axis_names]
+        row += [cell.get("best_acc"), cell.get("final_acc"),
+                cell.get("epochs_run"), cell.get("wall_s")]
+        if has_telem:
+            tc = cell.get("telemetry") or {}
+            row += [tc.get(key) for key, _ in _TELEMETRY_COLUMNS]
+        rows.append(row)
+    out.append("## Cells")
+    out.append("")
+    out.extend(_table(headers, rows))
+    out.append("")
+
+    frontier = budget_frontier(cells)
+    if frontier:
+        out.append("## Budget-utilization frontier")
+        out.append("")
+        out.append("Best accuracy per transfer-budget level, across all "
+                   "other axis values"
+                   + (" (with realized budget utilization)"
+                      if has_telem else "") + ":")
+        out.append("")
+        headers = ["transfer_budget", "best_acc", "cells"]
+        if has_telem:
+            headers.insert(2, "budget util (best cell)")
+        rows = []
+        for budget, info in frontier:
+            row = [budget, info["best_acc"], info["cells"]]
+            if has_telem:
+                row.insert(2, info["budget_utilization"])
+            rows.append(row)
+        out.extend(_table(headers, rows))
+        out.append("")
+    return "\n".join(out).rstrip() + "\n"
+
+
+def budget_frontier(cells: Sequence[Mapping[str, Any]]
+                    ) -> List[Any]:
+    """Per transfer-budget level: the best cell's accuracy (+ realized
+    utilization when telemetry columns are present). Empty when the sweep
+    has no ``dfl.transfer_budget`` axis."""
+    levels: Dict[Any, Dict[str, Any]] = {}
+    order: List[Any] = []
+    for cell in cells:
+        ov = cell.get("overrides") or {}
+        if "dfl.transfer_budget" not in ov:
+            continue
+        budget = ov["dfl.transfer_budget"]
+        if budget not in levels:
+            levels[budget] = {"best_acc": None, "budget_utilization": None,
+                              "cells": 0}
+            order.append(budget)
+        info = levels[budget]
+        info["cells"] += 1
+        acc = cell.get("best_acc")
+        if acc is not None and (info["best_acc"] is None
+                                or acc > info["best_acc"]):
+            info["best_acc"] = acc
+            info["budget_utilization"] = (
+                (cell.get("telemetry") or {}).get("budget_utilization"))
+
+    def sort_key(b):
+        try:
+            return (0, float(b))
+        except (TypeError, ValueError):
+            return (1, str(b))
+
+    return [(b, levels[b]) for b in sorted(order, key=sort_key)]
+
+
+# ---------------------------------------------------------------------------
+# entry point
+# ---------------------------------------------------------------------------
+
+def render(doc: Mapping[str, Any]) -> str:
+    return render_bench(doc) if is_bench(doc) else render_run(doc)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("artifact", help="RunResult JSON or BENCH_*.json")
+    ap.add_argument("-o", "--out", default="",
+                    help="write markdown here (default: stdout)")
+    args = ap.parse_args(argv)
+    with open(args.artifact) as f:
+        doc = json.load(f)
+    md = render(doc)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(md)
+        print(f"report -> {args.out}")
+    else:
+        sys.stdout.write(md)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
