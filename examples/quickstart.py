@@ -48,3 +48,12 @@ print(f"best {result.best_acc:.3f} (epoch {result.best_epoch}) "
 #    gossip traffic), phase timings and a structured event stream —
 #    bit-exact with a telemetry-off run
 print(api.telemetry_line(result))
+
+# 6) city-scale fleets: shard the epoch over a device mesh (engine +
+#    mesh are Scenario fields; --engine/--mesh on the train.py CLI).
+#    On CPU, force host devices before jax starts:
+#      XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+#        PYTHONPATH=src python examples/quickstart.py
+# result = api.run(dataclasses.replace(
+#     scenario.with_overrides({"partner_sample": "lowest-id"}),
+#     engine="sharded", mesh=0))   # 0 = all visible devices

@@ -164,6 +164,15 @@ class DFLConfig:
                                     # entries per simulation step of
                                     # measured contact duration; 0 = the
                                     # link speed does not constrain
+    # sharded engine: half-width of the gossip halo window, in agents.
+    # 0 = exact mode (each shard gathers the full fleet as its candidate
+    # pool — bit-exact with the fused engine); H > 0 restricts contacts
+    # and candidates to the [row-H, row+n_local+H) index window around
+    # each shard, so per-shard contact/gossip work is O(n_local * W)
+    # instead of O(n_local * N). Spatially-banded mobility (grouped runs:
+    # contiguous index blocks = area bands) keeps the dropped contacts
+    # near zero; ignored by the fused/legacy engines.
+    shard_halo: int = 0
 
     @property
     def resolved_transfer_budget(self) -> Optional[float]:

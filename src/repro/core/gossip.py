@@ -27,7 +27,7 @@ bit-exact with the unbudgeted exchange.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Union
+from typing import Any, Dict, NamedTuple, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -37,6 +37,35 @@ from repro.policies import base as policy_base
 from repro.policies import registry as policy_registry
 from repro.policies.base import CachePolicy
 from repro.telemetry.metrics import ExchangeStats
+
+
+class ExchangePool(NamedTuple):
+    """The source side of an exchange: who the receivers can copy *from*.
+
+    The fused (dense) engine uses the identity pool — every agent sources
+    from the whole fleet, partner ids are global agent ids. The sharded
+    engine passes each shard's gathered halo window instead: ``params`` /
+    ``cache`` / ``samples`` / ``group`` hold the W window rows, ``ids``
+    maps window row -> global agent id, and partner ids in ``partners``
+    are *pool-relative* row indices. ``self_rows`` gives each receiver's
+    own row inside the pool (needed for the own-cache source coordinates
+    consumed by the phase-2 gather).
+    """
+    params: Any          # pytree, leaves [W, ...] — fresh models
+    cache: ModelCache    # leaves [W, C, ...]
+    samples: jax.Array   # [W] float32
+    group: jax.Array     # [W] int32
+    ids: jax.Array       # [W] int32 global agent id per pool row
+    self_rows: jax.Array # [n_receivers] int32 pool row of each receiver
+
+
+def identity_pool(params, cache: ModelCache, own_samples, own_group
+                  ) -> ExchangePool:
+    """Pool for the dense path: pool row index == global agent id."""
+    n = cache.ts.shape[0]
+    ids = jnp.arange(n, dtype=jnp.int32)
+    return ExchangePool(params=params, cache=cache, samples=own_samples,
+                        group=own_group, ids=ids, self_rows=ids)
 
 
 def valid_partner_mask(partners: jax.Array) -> jax.Array:
@@ -53,42 +82,47 @@ def valid_partner_mask(partners: jax.Array) -> jax.Array:
     return (partners >= 0) & ~dup
 
 
-def _candidates(cache: ModelCache, t, partners, own_ts, own_samples,
-                own_group, tau_max):
+def _candidates(cache: ModelCache, t, partners, tau_max,
+                pool: ExchangePool):
     """Build candidate metadata [N, M] and source coordinates.
 
     M = C + D*(1 + C): own cache, then per partner (own model, cache).
-    Source coordinate (agent, slot): slot C refers to the agent's own model
-    in the stacked gather array; slots 0..C-1 are its cache entries.
-    Duplicate partner ids are masked (:func:`valid_partner_mask`).
+    Source coordinate (agent, slot): slot C refers to pool row
+    ``gather_a``'s own model in the stacked gather array; slots 0..C-1 are
+    its cache entries. ``partners`` holds pool-relative row indices (equal
+    to global agent ids for the identity pool). Duplicate partner ids are
+    masked (:func:`valid_partner_mask`).
     """
     N, C = cache.ts.shape
     D = partners.shape[1]
+    W = pool.ids.shape[0]
     pvalid = valid_partner_mask(partners)
-    pidx = jnp.clip(partners, 0, N - 1)
+    pidx = jnp.clip(partners, 0, W - 1)
 
     # --- own cache entries ---
     o_ts, o_origin = cache.ts, cache.origin
     o_samples, o_group, o_arrival = cache.samples, cache.group, cache.arrival
-    o_src_a = jnp.broadcast_to(jnp.arange(N)[:, None], (N, C))
+    o_src_a = jnp.broadcast_to(pool.self_rows[:, None], (N, C))
     o_src_s = jnp.broadcast_to(jnp.arange(C)[None, :], (N, C))
 
     # --- partners' fresh models ---
-    p_ts = jnp.where(pvalid, own_ts[pidx], NEG)
-    p_origin = jnp.where(pvalid, partners, NEG)
-    p_samples = jnp.where(pvalid, own_samples[pidx], 0.0)
-    p_group = jnp.where(pvalid, own_group[pidx], NEG)
+    t32 = jnp.asarray(t, jnp.int32)
+    p_ts = jnp.where(pvalid, jnp.broadcast_to(t32, (N, D)), NEG)
+    p_origin = jnp.where(pvalid, pool.ids[pidx], NEG)
+    p_samples = jnp.where(pvalid, pool.samples[pidx], 0.0)
+    p_group = jnp.where(pvalid, pool.group[pidx], NEG)
     p_arrival = jnp.where(pvalid, t, NEG)
     p_src_a = pidx
     p_src_s = jnp.full((N, D), C, jnp.int32)
 
     # --- partners' caches ---
-    c_ts = jnp.where(pvalid[..., None], cache.ts[pidx], NEG).reshape(N, D * C)
-    c_origin = jnp.where(pvalid[..., None], cache.origin[pidx],
+    c_ts = jnp.where(pvalid[..., None], pool.cache.ts[pidx],
+                     NEG).reshape(N, D * C)
+    c_origin = jnp.where(pvalid[..., None], pool.cache.origin[pidx],
                          NEG).reshape(N, D * C)
-    c_samples = jnp.where(pvalid[..., None], cache.samples[pidx],
+    c_samples = jnp.where(pvalid[..., None], pool.cache.samples[pidx],
                           0.0).reshape(N, D * C)
-    c_group = jnp.where(pvalid[..., None], cache.group[pidx],
+    c_group = jnp.where(pvalid[..., None], pool.cache.group[pidx],
                         NEG).reshape(N, D * C)
     c_arrival = jnp.where(jnp.broadcast_to(pvalid[..., None], (N, D, C)),
                           t, NEG).reshape(N, D * C)
@@ -139,7 +173,9 @@ def link_caps(partners, durations, transfer_budget,
             raise ValueError(
                 "link_entries_per_step > 0 needs the per-pair contact "
                 "durations returned by simulate_epoch")
-        pidx = jnp.clip(partners, 0, N - 1)
+        # durations columns may be a window [n, W] (sharded engine), so
+        # clamp against the duration matrix, not the receiver count
+        pidx = jnp.clip(partners, 0, durations.shape[1] - 1)
         dur = jnp.take_along_axis(durations, pidx, axis=1)
         cap = dur.astype(jnp.float32) * link_entries_per_step
     if transfer_budget is not None:
@@ -270,7 +306,9 @@ def exchange(params, cache: ModelCache, partners, t, own_samples, own_group,
              durations: Optional[jax.Array] = None,
              transfer_budget=None,
              link_entries_per_step: float = 0.0,
-             with_stats: bool = False):
+             with_stats: bool = False,
+             pool: Optional[ExchangePool] = None,
+             rng_keys: Optional[jax.Array] = None):
     """One epoch of DTN-like cache exchange for the whole fleet.
 
     params: pytree [N, ...] (post-local-update models x̃_i(t));
@@ -295,17 +333,32 @@ def exchange(params, cache: ModelCache, partners, t, own_samples, own_group,
     admitted entry counts plus the finite link capacity, for gossip
     traffic and budget-utilization telemetry. The cache result is
     untouched by the flag.
+
+    Sharded engine hooks: ``pool`` replaces the implicit whole-fleet
+    source side with an :class:`ExchangePool` (partner ids then index pool
+    rows, and ``durations`` columns align with pool rows); ``rng_keys``
+    supplies pre-split per-receiver policy keys so the caller can split at
+    global fleet size and slice its rows (threefry streams depend on the
+    split count, so splitting at local size would diverge from the dense
+    path). Both default to the dense behaviour.
     """
     pol = policy_registry.resolve(policy)
     N, C = cache.ts.shape
     D = partners.shape[1]
-    own_ts = jnp.full((N,), t, jnp.int32)
+    if pool is None:
+        pool = identity_pool(params, cache, own_samples, own_group)
     ts, origin, samples, group, arrival, src_a, src_s = _candidates(
-        cache, t, partners, own_ts, own_samples, own_group, tau_max)
+        cache, t, partners, tau_max, pool)
 
-    if pol.needs_rng and rng is None:
-        raise ValueError(f"{pol.name} policy requires rng")
-    keys = jax.random.split(rng, N) if pol.needs_rng else None
+    if pol.needs_rng:
+        if rng_keys is not None:
+            keys = rng_keys
+        elif rng is not None:
+            keys = jax.random.split(rng, N)
+        else:
+            raise ValueError(f"{pol.name} policy requires rng")
+    else:
+        keys = None
     pparams = dict(policy_params or {})
     t_arr = jnp.asarray(t, jnp.int32)
 
@@ -358,11 +411,11 @@ def exchange(params, cache: ModelCache, partners, t, own_samples, own_group,
     else:
         sel, meta = outs
 
-    # phase 2: gather winning model weights only
+    # phase 2: gather winning model weights only (from the pool side)
     gather_a = jnp.take_along_axis(src_a, sel, axis=1)  # [N, C]
     gather_s = jnp.take_along_axis(src_s, sel, axis=1)
-    models = gather_winners(cache.models, params, gather_a, gather_s,
-                            mode=gather_mode)
+    models = gather_winners(pool.cache.models, pool.params, gather_a,
+                            gather_s, mode=gather_mode)
     new_cache = dataclasses.replace(cache, models=models, **meta.as_dict())
     if not with_stats:
         return new_cache

@@ -63,7 +63,8 @@ def count_encounters(encounters, partners):
     contacts one-for-one."""
     if encounters is None:
         return None
-    N = encounters.shape[0]
+    # columns are global agent ids even when rows are one shard's block
+    N = encounters.shape[-1]
     pvalid = gossip.valid_partner_mask(partners)
     hit = (partners[..., None] == jnp.arange(N)) & pvalid[..., None]
     return encounters + jnp.sum(hit, axis=1).astype(encounters.dtype)
@@ -399,6 +400,315 @@ def make_fleet_engine(*, algorithm: str, mob_model, mob_cfg,
         # telemetry-off: `metrics` is None (an empty pytree) both in and
         # out; drop it so existing 4-tuple callers are untouched
         return out if telemetry else out[:4]
+
+    return FleetEngine(run_epochs, chunk=chunk, donate=donate)
+
+
+# ---------------------------------------------------------------------------
+# sharded fleet-epoch engine (shard_map over the agent axis)
+# ---------------------------------------------------------------------------
+
+def _shard_map_fn():
+    """shard_map with the version-portable replication-check kwarg."""
+    import inspect
+    try:
+        from jax import shard_map as fn  # jax >= 0.5
+    except ImportError:
+        from jax.experimental.shard_map import shard_map as fn
+    sig = inspect.signature(fn).parameters
+    check_kw = ({"check_vma": False} if "check_vma" in sig
+                else {"check_rep": False})
+    return fn, check_kw
+
+
+def fleet_state_specs(state, num_agents: int, axis: str):
+    """PartitionSpec tree for a FleetState (or any fleet pytree): leaves
+    with a leading agent dimension are sharded along ``axis``, scalars
+    (``t``) replicated. Delegates to ``sharding.rules.fleet_specs``."""
+    from repro.sharding.rules import fleet_specs
+    return fleet_specs(state, num_agents, axis)
+
+
+def make_sharded_fleet_engine(*, mesh, algorithm: str, mob_model, mob_cfg,
+                              epoch_seconds: float, max_partners: int,
+                              partner_sample: str = "lowest-id",
+                              loss_fn: Callable, local_steps: int,
+                              batch_size: int, rho: float = 0.0,
+                              tau_max: int = 10, policy="lru",
+                              group_slots: Optional[jax.Array] = None,
+                              staleness_decay: float = 1.0,
+                              policy_params: Optional[dict] = None,
+                              gather_mode: str = "select",
+                              transfer_budget=None,
+                              link_entries_per_step: float = 0.0,
+                              halo: int = 0,
+                              chunk: int = 1,
+                              donate: Optional[bool] = None,
+                              telemetry: bool = False) -> FleetEngine:
+    """Fused engine sharded over the agent axis with ``shard_map``.
+
+    Each of the mesh's devices owns ``n_local = N / ndev`` index-contiguous
+    agents: their models, cache rows, data shards, and encounter rows.
+    Mobility state is O(N) and *replicated* — every shard steps the full
+    fleet's trajectory from the same keys (identical ops ⇒ identical
+    states), but only materializes its own ``[n_local, W]`` contact /
+    duration block. The dense ``[N, N]`` contact matrix never exists.
+
+    ``halo`` picks the candidate window ``W`` each shard gossips over:
+
+    * ``halo == 0`` — exact mode: ``W = N`` via an ``all_gather`` of every
+      shard's fresh models + cache (the window is the whole fleet), so
+      partner selection and the exchange see exactly the dense inputs and
+      the run is bit-exact with :func:`make_fleet_engine` (same per-agent
+      key streams: all fleet-sized key splits happen at global N and are
+      row-sliced per shard).
+    * ``halo = H > 0`` — block-sparse mode: the window is the shard's own
+      rows plus ``H`` boundary rows from each ring neighbour
+      (``lax.ppermute``), ``W = n_local + 2H``, and contacts are computed
+      against the window's columns only — per-shard contact + gossip work
+      drops from O(n_local·N) to O(n_local·W). Contacts outside the
+      window are *dropped* (documented approximation): with index-banded
+      mobility (grouped runs assign contiguous index blocks to area
+      bands) the dropped fraction is near zero, and partner order inside
+      the window is deterministic (lowest window row first). Requires
+      ``n_local + 2H < N``; otherwise the engine falls back to exact mode.
+
+    ``cfl`` averages via a ``psum`` of per-shard weighted partial sums and
+    losses via ``pmean`` — same math as the dense engine up to float
+    summation order (documented tolerance). ``partner_sample`` must be
+    ``"lowest-id"``: random sampling draws an [N, N] uniform matrix, which
+    is exactly the dense-shaped buffer this engine exists to avoid.
+
+    Telemetry accumulates per shard and psum-reduces each epoch's deltas,
+    so the replicated counters stay identical across shards while
+    ``origins_seen`` rows stay shard-local. Same
+    1-trace-per-(algorithm, shape) and donation discipline as the fused
+    engine — ``lr``, ``num_epochs`` and ``transfer_budget`` are traced.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.mobility.base import partners_from_contacts
+
+    if partner_sample != "lowest-id":
+        raise ValueError(
+            "engine='sharded' supports partner_sample='lowest-id' only: "
+            "'random' ranks contacts with a dense [N, N] uniform draw, "
+            "which defeats the block-sparse contact path")
+    if mob_model.simulate_epoch_rows is None:
+        raise ValueError(
+            f"mobility model {mob_model.name!r} has no simulate_epoch_rows; "
+            "the sharded engine needs the block-local contact variant")
+    if halo < 0:
+        raise ValueError(f"shard_halo must be >= 0, got {halo}")
+    if donate is None:
+        donate = jax.default_backend() != "cpu"
+
+    shard_map_fn, check_kw = _shard_map_fn()
+    ndev = int(mesh.devices.size)
+    axis = mesh.axis_names[0]
+
+    if algorithm == "cached":
+        from repro.policies import base as policy_base
+        from repro.policies import registry as policy_registry
+        pol = policy_registry.resolve(policy)
+        staleness_decay = policy_base.effective_staleness_decay(
+            pol, staleness_decay, policy_params)
+    elif algorithm not in ("dfl", "cfl"):
+        raise ValueError(f"unknown algorithm {algorithm!r}")
+    default_budget = transfer_budget
+
+    def run_epochs(state, mstate, key, lr, data, counts, num_epochs,
+                   transfer_budget=None, metrics=None):
+        N = state.samples.shape[0]
+        if N % ndev:
+            raise ValueError(
+                f"dfl.num_agents={N} must divide evenly over the "
+                f"{ndev}-device mesh (use --mesh to pick a divisor)")
+        n_local = N // ndev
+        full_window = halo == 0 or n_local + 2 * halo >= N
+        W = N if full_window else n_local + 2 * halo
+        tb = default_budget if transfer_budget is None else transfer_budget
+
+        rep = lambda tree: jax.tree_util.tree_map(lambda _: P(), tree)
+        st_specs = fleet_state_specs(state, N, axis)
+        data_specs = fleet_state_specs(data, N, axis)
+        counts_specs = fleet_state_specs(counts, N, axis)
+        m_specs = metrics_lib.shard_specs(axis) if metrics is not None \
+            else None
+
+        def window_tree(tree):
+            """Gather each shard's W-row candidate window (leaf-wise)."""
+            if full_window:
+                if ndev == 1:
+                    return tree
+                return jax.tree_util.tree_map(
+                    lambda x: jax.lax.all_gather(x, axis, axis=0,
+                                                 tiled=True), tree)
+            fwd = [(i, (i + 1) % ndev) for i in range(ndev)]
+            bwd = [(i, (i - 1) % ndev) for i in range(ndev)]
+
+            def leaf(x):
+                left = jax.lax.ppermute(x[-halo:], axis, fwd)
+                right = jax.lax.ppermute(x[:halo], axis, bwd)
+                return jnp.concatenate([left, x, right], axis=0)
+
+            return jax.tree_util.tree_map(leaf, tree)
+
+        def split_rows(k, row0):
+            """split at *global* fleet size, then slice this shard's rows —
+            threefry streams depend on the split count, so a local-size
+            split would diverge from the dense engine."""
+            keys = jax.random.split(k, N)
+            return jax.lax.dynamic_slice_in_dim(keys, row0, n_local, axis=0)
+
+        def epoch_body(state, mstate, key, lr, data, counts, tb, metrics):
+            dev = jax.lax.axis_index(axis)
+            row0 = dev * n_local
+            gids = row0 + jnp.arange(n_local, dtype=jnp.int32)
+            start = jnp.zeros((), jnp.int32) if full_window \
+                else (row0 - halo) % N
+            col_ids = (start + jnp.arange(W, dtype=jnp.int32)) % N
+            self_rows = (gids - start) % N
+
+            if partner_sample == "lowest-id":
+                key, k1, k2 = jax.random.split(key, 3)
+            mstate, met, dur = mob_model.simulate_epoch_rows(
+                mstate, k1, mob_cfg, epoch_seconds, row_start=row0,
+                num_rows=n_local, col_ids=col_ids)
+            partners_w = partners_from_contacts(met, max_partners,
+                                                sample=partner_sample)
+            partners_g = jnp.where(partners_w >= 0,
+                                   (start + partners_w) % N, -1)
+
+            tilde = None
+            if algorithm == "cached":
+                _, k_local, k_policy = jax.random.split(k2, 3)
+                local_keys = split_rows(k_local, row0)
+                tilde, losses = fleet_local_update(
+                    state.params, data, counts, local_keys, loss_fn=loss_fn,
+                    steps=local_steps, batch_size=batch_size, lr=lr, rho=rho)
+                encounters = count_encounters(state.encounters, partners_g)
+                pool = gossip.ExchangePool(
+                    params=window_tree(tilde),
+                    cache=window_tree(state.cache),
+                    samples=window_tree(state.samples),
+                    group=window_tree(state.group),
+                    ids=col_ids, self_rows=self_rows)
+                rng_keys = split_rows(k_policy, row0) if pol.needs_rng \
+                    else None
+                out = gossip.exchange(
+                    tilde, state.cache, partners_w, state.t, state.samples,
+                    state.group, tau_max=tau_max, policy=pol,
+                    group_slots=group_slots, rng_keys=rng_keys,
+                    encounters=encounters, policy_params=policy_params,
+                    gather_mode=gather_mode, durations=dur,
+                    transfer_budget=tb,
+                    link_entries_per_step=link_entries_per_step,
+                    with_stats=telemetry, pool=pool)
+                cache, xstats = out if telemetry else (out, None)
+                new_params = aggregate(tilde, state.samples, cache,
+                                       t=state.t, staleness_decay=
+                                       staleness_decay)
+                state = dataclasses.replace(
+                    state, params=new_params, cache=cache, t=state.t + 1,
+                    encounters=encounters)
+            elif algorithm == "dfl":
+                local_keys = split_rows(k2, row0)
+                tilde, losses = fleet_local_update(
+                    state.params, data, counts, local_keys, loss_fn=loss_fn,
+                    steps=local_steps, batch_size=batch_size, lr=lr, rho=rho)
+                pool_params = window_tree(tilde)
+                pool_samples = window_tree(state.samples)
+                first = partners_w[:, 0]
+                has = first >= 0
+                pidx = jnp.clip(first, 0, W - 1)
+                n_i = state.samples
+                n_j = jnp.where(has, pool_samples[pidx], 0.0)
+                w_i = n_i / (n_i + n_j)
+
+                def leaf(p, pool_p):
+                    pj = pool_p[pidx]
+                    w = w_i.reshape((n_local,) + (1,) * (p.ndim - 1))
+                    mixed = (w * p.astype(jnp.float32)
+                             + (1 - w) * pj.astype(jnp.float32))
+                    keep = has.reshape((n_local,) + (1,) * (p.ndim - 1))
+                    return jnp.where(keep, mixed,
+                                     p.astype(jnp.float32)).astype(p.dtype)
+
+                new_params = jax.tree_util.tree_map(leaf, tilde, pool_params)
+                state = dataclasses.replace(state, params=new_params,
+                                            t=state.t + 1)
+                xstats = None
+            else:  # cfl
+                local_keys = split_rows(k2, row0)
+                tilde, losses = fleet_local_update(
+                    state.params, data, counts, local_keys, loss_fn=loss_fn,
+                    steps=local_steps, batch_size=batch_size, lr=lr, rho=rho)
+                total = jax.lax.psum(jnp.sum(state.samples), axis)
+                w = state.samples / total
+
+                def leaf(p):
+                    wexp = w.reshape((n_local,) + (1,) * (p.ndim - 1))
+                    part = jnp.sum(wexp * p.astype(jnp.float32), axis=0)
+                    avg = jax.lax.psum(part, axis)
+                    return jnp.broadcast_to(avg, p.shape).astype(p.dtype)
+
+                new_params = jax.tree_util.tree_map(leaf, tilde)
+                state = dataclasses.replace(state, params=new_params,
+                                            t=state.t + 1)
+                xstats = None
+
+            loss = jax.lax.pmean(jnp.mean(losses), axis)
+            if telemetry:
+                new_m = metrics_lib.accumulate(metrics, state, partners_g,
+                                               xstats)
+
+                def fold(old, new):
+                    # replicated counters: add the psum of per-shard deltas
+                    return old + jax.lax.psum(new - old, axis)
+
+                metrics = metrics_lib.FleetMetrics(
+                    epochs=new_m.epochs,              # +1, already global
+                    staleness_hist=fold(metrics.staleness_hist,
+                                        new_m.staleness_hist),
+                    origins_seen=new_m.origins_seen,  # row-local latch
+                    offered=fold(metrics.offered, new_m.offered),
+                    admitted=fold(metrics.admitted, new_m.admitted),
+                    admitted_capped=fold(metrics.admitted_capped,
+                                         new_m.admitted_capped),
+                    link_capacity=fold(metrics.link_capacity,
+                                       new_m.link_capacity),
+                    capped_links=fold(metrics.capped_links,
+                                      new_m.capped_links),
+                    contacts=fold(metrics.contacts, new_m.contacts))
+            return state, mstate, key, loss, metrics
+
+        def sharded_body(state, mstate, key, lr, data, counts, num_epochs,
+                         tb, metrics):
+            losses0 = jnp.full((chunk,), jnp.nan, jnp.float32)
+
+            def body(i, carry):
+                state, mstate, key, losses, metrics = carry
+                state, mstate, key, loss, metrics = epoch_body(
+                    state, mstate, key, lr, data, counts, tb, metrics)
+                losses = jax.lax.dynamic_update_index_in_dim(
+                    losses, loss, i, 0)
+                return state, mstate, key, losses, metrics
+
+            out = jax.lax.fori_loop(
+                0, jnp.minimum(num_epochs, chunk), body,
+                (state, mstate, key, losses0, metrics))
+            return out if telemetry else out[:4]
+
+        in_specs = (st_specs, rep(mstate), P(), P(), data_specs,
+                    counts_specs, P(), rep(tb), m_specs)
+        out_specs = (st_specs, rep(mstate), P(), P())
+        if telemetry:
+            out_specs = out_specs + (m_specs,)
+        fn = shard_map_fn(sharded_body, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, **check_kw)
+        return fn(state, mstate, key, lr, data, counts, num_epochs, tb,
+                  metrics)
 
     return FleetEngine(run_epochs, chunk=chunk, donate=donate)
 

@@ -98,6 +98,31 @@ def make_engine(cfg: ExperimentConfig, *, loss_fn: Callable, mob_model,
         telemetry=telemetry)
 
 
+def make_sharded_engine(cfg: ExperimentConfig, *, mesh, loss_fn: Callable,
+                        mob_model, mob_cfg, group_slots=None,
+                        gather_mode: str = "select",
+                        chunk: Optional[int] = None,
+                        donate: Optional[bool] = None,
+                        telemetry: bool = False):
+    """Build the shard_map fleet engine over an agent mesh
+    (``launch.mesh.make_fleet_mesh``); ``cfg.dfl.shard_halo`` picks exact
+    (0) vs block-sparse halo gossip."""
+    return rounds_lib.make_sharded_fleet_engine(
+        mesh=mesh, algorithm=cfg.algorithm, mob_model=mob_model,
+        mob_cfg=mob_cfg, epoch_seconds=cfg.dfl.epoch_seconds,
+        max_partners=cfg.max_partners, partner_sample=cfg.partner_sample,
+        loss_fn=loss_fn, local_steps=cfg.dfl.local_steps,
+        batch_size=cfg.dfl.batch_size, rho=cfg.dfl.rho,
+        tau_max=cfg.dfl.tau_max, policy=cfg.dfl.policy,
+        group_slots=group_slots, staleness_decay=cfg.dfl.staleness_decay,
+        policy_params=dict(cfg.dfl.policy_params), gather_mode=gather_mode,
+        transfer_budget=cfg.dfl.resolved_transfer_budget,
+        link_entries_per_step=cfg.dfl.link_entries_per_step,
+        halo=cfg.dfl.shard_halo,
+        chunk=cfg.eval_every if chunk is None else chunk, donate=donate,
+        telemetry=telemetry)
+
+
 def run_experiment(cfg: ExperimentConfig, *, verbose: bool = False,
                    record_cache_stats: bool = False,
                    engine: str = "fused") -> Dict:

@@ -103,17 +103,19 @@ class RunResult:
 
 def _engine_key(rs: ResolvedScenario, chunk: int, traced_budget: bool,
                 telemetry: bool = False):
-    """Everything that forces a distinct fused engine: static trace
-    bindings + array shapes. Traced scalars (lr, epoch budget, and — in
-    traced-budget mode — the transfer budget) are zeroed out so sweeps
-    over them share one engine. ``telemetry`` is a static binding (the
-    metrics carry changes the trace), so telemetry-on and -off cells
-    never share an engine."""
+    """Everything that forces a distinct fused/sharded engine: static
+    trace bindings + array shapes. Traced scalars (lr, epoch budget, and
+    — in traced-budget mode — the transfer budget) are zeroed out so
+    sweeps over them share one engine. ``telemetry`` is a static binding
+    (the metrics carry changes the trace), so telemetry-on and -off cells
+    never share an engine; so are the engine kind and mesh size (a
+    ``mesh`` axis sweeps device counts as one engine per count)."""
     cfg = rs.experiment
     dfl_static = dataclasses.replace(
         cfg.dfl, lr=0.0,
         transfer_budget=0.0 if traced_budget else cfg.dfl.transfer_budget)
-    return (cfg.algorithm, cfg.distribution, cfg.num_groups,
+    return (rs.scenario.engine, rs.scenario.mesh,
+            cfg.algorithm, cfg.distribution, cfg.num_groups,
             cfg.max_partners, cfg.partner_sample, cfg.n_train, cfg.n_test,
             rs.model_cfg, rs.mobility, dfl_static, chunk, traced_budget,
             telemetry)
@@ -198,7 +200,7 @@ def _drive(rs: ResolvedScenario, fleet: Fleet, *,
                                          "acc_max": []}
     contacts_at_eval: List[float] = []
     metrics = None
-    if telemetry and engine == "fused":
+    if telemetry and engine in ("fused", "sharded"):
         metrics = metrics_lib.init_metrics(cfg.dfl.num_agents,
                                            cfg.dfl.tau_max + 1)
     best, best_epoch = -1.0, 0
@@ -258,15 +260,24 @@ def _drive(rs: ResolvedScenario, fleet: Fleet, *,
     span = (spans.span if spans is not None
             else (lambda name: contextlib.nullcontext()))
     traces = 0
-    if engine == "fused":
+    if engine in ("fused", "sharded"):
         key_ = _engine_key(rs, cfg.eval_every, traced_budget, telemetry)
         eng = None if engines is None else engines.get(key_)
         if eng is None:
             with span("compile"):
-                eng = experiment_lib.make_engine(
-                    cfg, loss_fn=loss_fn, mob_model=fleet.mob_model,
-                    mob_cfg=fleet.mobility, group_slots=fleet.group_slots,
-                    telemetry=telemetry)
+                if engine == "sharded":
+                    from repro.launch import mesh as mesh_lib
+                    eng = experiment_lib.make_sharded_engine(
+                        cfg,
+                        mesh=mesh_lib.make_fleet_mesh(scenario.mesh or None),
+                        loss_fn=loss_fn, mob_model=fleet.mob_model,
+                        mob_cfg=fleet.mobility,
+                        group_slots=fleet.group_slots, telemetry=telemetry)
+                else:
+                    eng = experiment_lib.make_engine(
+                        cfg, loss_fn=loss_fn, mob_model=fleet.mob_model,
+                        mob_cfg=fleet.mobility,
+                        group_slots=fleet.group_slots, telemetry=telemetry)
             if engines is not None:
                 engines[key_] = eng
         traces0 = eng.traces

@@ -44,7 +44,7 @@ from repro.policies import registry as policy_registry
 
 ALGORITHMS = ("cached", "dfl", "cfl")
 DISTRIBUTIONS = ("iid", "noniid", "dirichlet", "grouped")
-ENGINES = ("fused", "legacy")
+ENGINES = ("fused", "legacy", "sharded")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -240,7 +240,8 @@ class Scenario:
     experiment: ExperimentConfig = dataclasses.field(
         default_factory=ExperimentConfig)
     name: str = ""
-    engine: str = "fused"             # fused | legacy
+    engine: str = "fused"             # fused | legacy | sharded
+    mesh: int = 0                     # sharded: device count (0 = all visible)
     verbose: bool = False
     record_cache_stats: bool = False
     telemetry: bool = False           # fleet observability (repro.telemetry)
@@ -249,6 +250,7 @@ class Scenario:
 
     def to_dict(self) -> Dict[str, Any]:
         return {"name": self.name, "engine": self.engine,
+                "mesh": self.mesh,
                 "verbose": self.verbose,
                 "record_cache_stats": self.record_cache_stats,
                 "telemetry": self.telemetry,
@@ -271,7 +273,9 @@ class Scenario:
         """Stable provenance hash of what the run *computes*: the
         experiment spec + engine choice. Presentation-only fields
         (``name``, ``verbose``, ``record_cache_stats``, ``telemetry`` —
-        observability never changes the model trajectory) are excluded,
+        observability never changes the model trajectory) are excluded;
+        so is ``mesh``, which is device *placement* — the math is fixed
+        by the spec (``dfl.shard_halo`` lives in the experiment),
         so a preset, a spec file, and a verbose CLI run of the same
         experiment all report the same hash."""
         canon = json.dumps({"experiment": _encode(self.experiment),
@@ -377,6 +381,20 @@ class Scenario:
             raise ValueError(
                 f"ExperimentConfig.epochs={cfg.epochs} and "
                 f"eval_every={cfg.eval_every} must both be positive")
+        if self.mesh < 0:
+            raise ValueError(f"Scenario.mesh={self.mesh} must be >= 0 "
+                             "(0 = all visible devices)")
+        if cfg.dfl.shard_halo < 0:
+            raise ValueError(
+                f"DFLConfig.shard_halo={cfg.dfl.shard_halo} must be >= 0")
+        if self.engine == "sharded" and cfg.partner_sample != "lowest-id":
+            raise ValueError(
+                "Scenario.engine='sharded' requires "
+                "ExperimentConfig.partner_sample='lowest-id' (got "
+                f"{cfg.partner_sample!r}): randomized partner draws key the "
+                "PRNG per contact *row*, which is not reproducible across "
+                "shard layouts — set partner_sample='lowest-id' or use "
+                "engine='fused'")
         policy, policy_params = _resolve_policy_setup(cfg)
         mob_cfg = cfg.mobility
         if cfg.distribution == "grouped" and mob_cfg.num_bands != cfg.num_groups:
@@ -387,9 +405,94 @@ class Scenario:
         model_cfg: CNNConfig = PAPER_CONFIGS[cfg.model]
         if cfg.image_hw:
             model_cfg = dataclasses.replace(model_cfg, image_hw=cfg.image_hw)
+        _check_fleet_memory(self, model_cfg)
         return ResolvedScenario(
             scenario=self, policy=policy, policy_params=policy_params,
             mobility=mob_cfg, mob_model=mob_model, model_cfg=model_cfg)
+
+
+def _fleet_memory_estimate(scenario: "Scenario", model_cfg) -> Dict[str, float]:
+    """Rough device-memory footprint (bytes) of the resolved fleet.
+
+    Sized from the dominant working sets, per term so the error can name
+    the knob that moves it: per-agent model copies (params + aggregation
+    scratch), the model cache ``[N, C, ...]`` (with exchange scratch), and
+    the quadratic arrays — contact/duration blocks ``[rows, W]`` (the
+    window ``W`` shrinks under the sharded engine's halo gossip) plus the
+    ``[N, N]`` encounter counts (and the telemetry origin latch).
+    Parameter count comes from ``jax.eval_shape`` on the model init —
+    no FLOPs, exact shapes.
+    """
+    cfg = scenario.experiment
+    N, C = cfg.dfl.num_agents, cfg.dfl.cache_size
+    shapes = jax.eval_shape(lambda k: cnn_lib.init_params(model_cfg, k),
+                            jax.random.PRNGKey(0))
+    p_floats = sum(int(np.prod(l.shape))
+                   for l in jax.tree_util.tree_leaves(shapes))
+    halo = cfg.dfl.shard_halo
+    if scenario.engine == "sharded":
+        ndev = scenario.mesh or jax.device_count()
+        n_local = max(1, N // max(ndev, 1))
+        full = halo == 0 or n_local + 2 * halo >= N
+        W = N if full else n_local + 2 * halo
+    else:
+        W = N
+    return {
+        "param_floats": float(p_floats),
+        # params + aggregation scratch (tilde / grads) per agent
+        "models": 3.0 * N * p_floats * 4,
+        # cache [N, C, ...] + candidate/pool scratch during the exchange
+        "cache": 4.0 * N * C * p_floats * 4,
+        # met (bool) + durations (f32) contact blocks over the window
+        "contacts": float(N) * W * 5,
+        # per-pair encounter counts (f32) + telemetry origin latch (bool)
+        "quadratic": float(N) * N * (5 if scenario.telemetry else 4),
+    }
+
+
+def _check_fleet_memory(scenario: "Scenario", model_cfg) -> None:
+    """Fail fast, with the knobs named, instead of an opaque XLA OOM.
+
+    The budget is ``REPRO_FLEET_MEM_GB`` when set (``0`` disables the
+    check) and ~80% of physical RAM otherwise.
+    """
+    import os
+
+    env = os.environ.get("REPRO_FLEET_MEM_GB", "").strip()
+    if env:
+        try:
+            limit_gb = float(env)
+        except ValueError:
+            raise ValueError(
+                f"REPRO_FLEET_MEM_GB={env!r} is not a number") from None
+        if limit_gb <= 0:
+            return
+    else:
+        try:
+            limit_gb = 0.8 * (os.sysconf("SC_PHYS_PAGES")
+                              * os.sysconf("SC_PAGE_SIZE")) / 2**30
+        except (ValueError, OSError, AttributeError):
+            return  # platform without sysconf: skip the guard
+    est = _fleet_memory_estimate(scenario, model_cfg)
+    total_gb = (est["models"] + est["cache"] + est["contacts"]
+                + est["quadratic"]) / 2**30
+    if total_gb <= limit_gb:
+        return
+    cfg = scenario.experiment
+    raise ValueError(
+        f"estimated fleet memory ~{total_gb:.1f} GiB exceeds the "
+        f"{limit_gb:.1f} GiB budget before tracing "
+        f"(dfl.num_agents={cfg.dfl.num_agents}, "
+        f"dfl.cache_size={cfg.dfl.cache_size}, "
+        f"model={cfg.model!r} ~{int(est['param_floats']):,} params; "
+        f"models ~{est['models'] / 2**30:.1f} + cache "
+        f"~{est['cache'] / 2**30:.1f} + contact window "
+        f"~{est['contacts'] / 2**30:.1f} + per-pair counts "
+        f"~{est['quadratic'] / 2**30:.1f} GiB). Reduce dfl.num_agents / "
+        "dfl.cache_size, or switch to engine='sharded' with mesh=<devices> "
+        "and dfl.shard_halo=<H> so contact blocks cover an "
+        "(N/devices + 2H)-wide window instead of all N columns. Set "
+        "REPRO_FLEET_MEM_GB to override the budget (0 disables this check).")
 
 
 def _resolve_policy_setup(cfg: ExperimentConfig):

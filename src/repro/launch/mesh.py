@@ -25,3 +25,22 @@ def make_debug_mesh(devices: int = 8, *, multi_pod: bool = False):
         assert devices % 2 == 0
         return jax.make_mesh((2, devices // 4, 2), ("pod", "data", "model"))
     return jax.make_mesh((devices // 2, 2), ("data", "model"))
+
+
+def make_fleet_mesh(num_devices=None):
+    """1-D mesh over the ``agents`` axis for the sharded fleet engine.
+
+    Uses the first ``num_devices`` visible devices (None/0 = all), so on a
+    CPU container ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+    makes meshes of 1/2/4/8 forced host devices sweepable in one process.
+    """
+    import numpy as np
+
+    devs = jax.devices()
+    n = num_devices or len(devs)
+    if n > len(devs):
+        raise ValueError(
+            f"mesh={n} devices requested but only {len(devs)} visible "
+            "(on CPU, force more with "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+    return jax.sharding.Mesh(np.asarray(devs[:n]), ("agents",))

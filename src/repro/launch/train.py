@@ -99,6 +99,12 @@ def _add_generated_flags(ap: argparse.ArgumentParser) -> dict:
         cls = DFLConfig if path.startswith("dfl.") else MobilityConfig
         add(flag, path, typing.get_type_hints(cls)[leaf],
             f"alias for --set {path}=VALUE")
+    # Scenario-level run knobs (not ExperimentConfig fields)
+    add("engine", "engine", str,
+        "fleet engine: fused (default) | legacy | sharded")
+    add("mesh", "mesh", int,
+        "sharded engine device count (0 = all visible; on CPU force "
+        "devices with XLA_FLAGS=--xla_force_host_platform_device_count=N)")
     return dest_to_path
 
 

@@ -41,6 +41,13 @@ class MobilityModel:
     positions: Callable[..., Any]
     contacts_now: Callable[..., Any]
     simulate_epoch: Callable[..., Any]
+    # block-local variant for the sharded fleet engine: same trajectory as
+    # simulate_epoch (mobility state is replicated per shard), but only the
+    # [num_rows, len(col_ids)] contact/duration block for the shard's agent
+    # rows against a window of candidate columns is materialized —
+    # simulate_epoch_rows(state, key, cfg, seconds, row_start=, num_rows=,
+    # col_ids=) -> (state, met, dur). None = model has no block variant.
+    simulate_epoch_rows: Optional[Callable[..., Any]] = None
 
 
 # ---------------------------------------------------------------------------
@@ -52,6 +59,23 @@ def contacts_from_positions(pos: jax.Array, comm_range: float) -> jax.Array:
     d2 = jnp.sum((pos[:, None] - pos[None, :]) ** 2, axis=-1)
     within = d2 <= comm_range ** 2
     return within & ~jnp.eye(pos.shape[0], dtype=bool)
+
+
+def contacts_block_from_positions(pos: jax.Array, comm_range: float,
+                                  row_start: jax.Array, num_rows: int,
+                                  col_ids: jax.Array) -> jax.Array:
+    """[num_rows, W] bool contact block: fleet rows [row_start,
+    row_start+num_rows) against the ``col_ids`` ([W] global agent ids)
+    columns. Elementwise identical to the matching slice of
+    :func:`contacts_from_positions` (same distance arithmetic), so the
+    sharded engine's full-window mode stays bit-exact with the dense path.
+    """
+    rows = jax.lax.dynamic_slice(pos, (row_start, 0), (num_rows, pos.shape[1]))
+    cols = jnp.take(pos, col_ids, axis=0)
+    d2 = jnp.sum((rows[:, None] - cols[None, :]) ** 2, axis=-1)
+    within = d2 <= comm_range ** 2
+    row_ids = row_start + jnp.arange(num_rows, dtype=col_ids.dtype)
+    return within & (col_ids[None, :] != row_ids[:, None])
 
 
 def band_limits_y(cfg: MobilityConfig, band: jax.Array
@@ -137,6 +161,43 @@ def generic_simulate_epoch(step_fn: Callable, contacts_fn: Callable
     return simulate_epoch
 
 
+def generic_simulate_epoch_rows(step_fn: Callable, positions_fn: Callable
+                                ) -> Callable:
+    """Block-local counterpart of :func:`generic_simulate_epoch`.
+
+    Advances the full (replicated) mobility state exactly like the dense
+    scan — same key split, same step order — but only accumulates the
+    ``[num_rows, W]`` contact/duration block of the shard's agent rows
+    against the ``col_ids`` candidate window, so per-shard contact cost is
+    O(num_rows * W) instead of O(N^2). With ``col_ids = arange(N)`` the
+    block is the exact row slice of the dense matrices.
+    """
+
+    def simulate_epoch_rows(state, key, cfg: MobilityConfig, seconds: float,
+                            *, row_start, num_rows: int, col_ids):
+        n_steps = max(1, int(seconds / cfg.step_seconds))
+        keys = jax.random.split(key, n_steps)
+        col_ids = jnp.asarray(col_ids, jnp.int32)
+        W = col_ids.shape[0]
+
+        def body(carry, k):
+            st, met, dur = carry
+            st = step_fn(st, k, cfg)
+            now = contacts_block_from_positions(
+                positions_fn(st, cfg), cfg.comm_range, row_start, num_rows,
+                col_ids)
+            met = met | now
+            dur = dur + now.astype(jnp.int32)
+            return (st, met, dur), None
+
+        met0 = jnp.zeros((num_rows, W), bool)
+        dur0 = jnp.zeros((num_rows, W), jnp.int32)
+        (state, met, dur), _ = jax.lax.scan(body, (state, met0, dur0), keys)
+        return state, met, dur
+
+    return simulate_epoch_rows
+
+
 # ---------------------------------------------------------------------------
 # partner selection under a radio budget
 # ---------------------------------------------------------------------------
@@ -151,10 +212,13 @@ def partners_from_contacts(met: jax.Array, max_partners: int, *,
     permutes each row's contacts with ``key`` before capping at D, so no
     agent is systematically starved under a radio budget — the fairer
     default for non-grid models.
+
+    ``met`` may be the square [N, N] matrix or a row block [n, W] (sharded
+    engine); partner ids index the *columns* of ``met`` either way.
     """
-    N = met.shape[0]
+    W = met.shape[1]
     if sample == "lowest-id":
-        rank = jnp.where(met, jnp.arange(N, dtype=jnp.float32)[None, :],
+        rank = jnp.where(met, jnp.arange(W, dtype=jnp.float32)[None, :],
                          jnp.inf)
     elif sample == "random":
         if key is None:

@@ -22,7 +22,7 @@ import jax.numpy as jnp
 from repro.configs.base import MobilityConfig
 from repro.mobility.base import (
     MobilityModel, advance_toward, contacts_from_positions,
-    generic_simulate_epoch)
+    generic_simulate_epoch, generic_simulate_epoch_rows)
 from repro.mobility.registry import register
 
 
@@ -128,7 +128,9 @@ def contacts_now(state: CommunityState, cfg: MobilityConfig) -> jax.Array:
 
 
 simulate_epoch = generic_simulate_epoch(step, contacts_now)
+simulate_epoch_rows = generic_simulate_epoch_rows(step, positions)
 
 MODEL = register(MobilityModel(
     name="community", init=init_community, step=step, positions=positions,
-    contacts_now=contacts_now, simulate_epoch=simulate_epoch))
+    contacts_now=contacts_now, simulate_epoch=simulate_epoch,
+    simulate_epoch_rows=simulate_epoch_rows))

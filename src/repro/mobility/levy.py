@@ -18,7 +18,7 @@ import jax.numpy as jnp
 from repro.configs.base import MobilityConfig
 from repro.mobility.base import (
     MobilityModel, band_limits_y, contacts_from_positions, default_band,
-    generic_simulate_epoch)
+    generic_simulate_epoch, generic_simulate_epoch_rows)
 from repro.mobility.registry import register
 from repro.mobility.waypoint import _sample_point
 
@@ -100,7 +100,9 @@ def contacts_now(state: LevyState, cfg: MobilityConfig) -> jax.Array:
 
 
 simulate_epoch = generic_simulate_epoch(step, contacts_now)
+simulate_epoch_rows = generic_simulate_epoch_rows(step, positions)
 
 MODEL = register(MobilityModel(
     name="levy_walk", init=init_levy, step=step, positions=positions,
-    contacts_now=contacts_now, simulate_epoch=simulate_epoch))
+    contacts_now=contacts_now, simulate_epoch=simulate_epoch,
+    simulate_epoch_rows=simulate_epoch_rows))

@@ -25,7 +25,7 @@ import jax.numpy as jnp
 from repro.configs.base import MobilityConfig
 from repro.mobility.base import (  # noqa: F401  (re-exported for back-compat)
     MobilityModel, contacts_from_positions, generic_simulate_epoch,
-    make_bands, partners_from_contacts)
+    generic_simulate_epoch_rows, make_bands, partners_from_contacts)
 from repro.mobility.registry import register
 
 # direction encoding: 0=+x (E), 1=+y (N), 2=-x (W), 3=-y (S)
@@ -153,8 +153,10 @@ def contacts_now(state: MobilityState, cfg: MobilityConfig) -> jax.Array:
 
 # one epoch of simulation; returns the union contact matrix over sub-steps
 simulate_epoch = generic_simulate_epoch(step, contacts_now)
+simulate_epoch_rows = generic_simulate_epoch_rows(step, positions)
 
 
 MODEL = register(MobilityModel(
     name="manhattan", init=init_mobility, step=step, positions=positions,
-    contacts_now=contacts_now, simulate_epoch=simulate_epoch))
+    contacts_now=contacts_now, simulate_epoch=simulate_epoch,
+    simulate_epoch_rows=simulate_epoch_rows))

@@ -152,6 +152,35 @@ def simulate_epoch(state: TraceState, key, cfg: MobilityConfig,
     return state, met, dur
 
 
+def simulate_epoch_rows(state: TraceState, key, cfg: MobilityConfig,
+                        seconds: float, *, row_start, num_rows: int, col_ids):
+    """Block-local replay for the sharded engine: the [num_rows, W] slice
+    of each frame (rows ``row_start..`` against ``col_ids`` columns), same
+    read-frame-then-advance order as :func:`simulate_epoch`."""
+    frames = cfg.trace_frames_per_epoch or max(
+        1, int(seconds / cfg.step_seconds))
+    col_ids = jnp.asarray(col_ids, jnp.int32)
+    W = col_ids.shape[0]
+
+    def body(carry, _):
+        st, met, dur = carry
+        frame = contacts_now(st, cfg)
+        rows = jax.lax.dynamic_slice(
+            frame, (row_start, 0), (num_rows, frame.shape[1]))
+        now = jnp.take(rows, col_ids, axis=1)
+        met = met | now
+        dur = dur + now.astype(jnp.int32)
+        st = step(st, None, cfg)
+        return (st, met, dur), None
+
+    met0 = jnp.zeros((num_rows, W), bool)
+    dur0 = jnp.zeros((num_rows, W), jnp.int32)
+    (state, met, dur), _ = jax.lax.scan(body, (state, met0, dur0), None,
+                                        length=frames)
+    return state, met, dur
+
+
 MODEL = register(MobilityModel(
     name="trace", init=init_trace, step=step, positions=positions,
-    contacts_now=contacts_now, simulate_epoch=simulate_epoch))
+    contacts_now=contacts_now, simulate_epoch=simulate_epoch,
+    simulate_epoch_rows=simulate_epoch_rows))

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 from repro.configs.base import MobilityConfig
 from repro.mobility.base import (
     MobilityModel, advance_toward, band_limits_y, contacts_from_positions,
-    default_band, generic_simulate_epoch)
+    default_band, generic_simulate_epoch, generic_simulate_epoch_rows)
 from repro.mobility.registry import register
 
 
@@ -96,8 +96,10 @@ def contacts_now(state: WaypointState, cfg: MobilityConfig) -> jax.Array:
 
 
 simulate_epoch = generic_simulate_epoch(step, contacts_now)
+simulate_epoch_rows = generic_simulate_epoch_rows(step, positions)
 
 MODEL = register(MobilityModel(
     name="random_waypoint", init=init_waypoint, step=step,
     positions=positions, contacts_now=contacts_now,
-    simulate_epoch=simulate_epoch))
+    simulate_epoch=simulate_epoch,
+    simulate_epoch_rows=simulate_epoch_rows))

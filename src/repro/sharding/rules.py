@@ -151,6 +151,22 @@ def param_specs(cfg: ModelConfig, params, rules: ShardingRules):
         treedef, [specs[path_str(kp)] for kp, x in flat])
 
 
+def fleet_specs(tree, num_agents: int, axis: str = "agents"):
+    """Agent-axis PartitionSpec tree for DFL fleet pytrees (the sharded
+    fleet engine's 1-D ``agents`` mesh): leaves with a leading
+    [num_agents] dimension shard along ``axis``; everything else — scalars
+    like ``FleetState.t``, replicated mobility state — stays replicated.
+    Fleet leaves are always agent-leading ([N], [N, C, ...], [N, N]), so
+    the leading-dim test is exact for FleetState/data/counts trees."""
+
+    def spec_for(x):
+        if getattr(x, "ndim", 0) >= 1 and x.shape[0] == num_agents:
+            return P(axis, *([None] * (x.ndim - 1)))
+        return P()
+
+    return jax.tree_util.tree_map(spec_for, tree)
+
+
 def batch_specs(cfg: ModelConfig, batch, rules: ShardingRules):
     """Batch dim over "data"; sequence/replicated otherwise."""
     d = rules.data_axis

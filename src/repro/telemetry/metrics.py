@@ -123,7 +123,9 @@ def accumulate(metrics: FleetMetrics, state, partners,
         (ages[..., None] == jnp.arange(B)) & valid[..., None],
         axis=(0, 1)).astype(jnp.float32)
 
-    N = metrics.origins_seen.shape[0]
+    # columns span the whole fleet even when the rows are one shard's
+    # agents (sharded engine), so size the origin id range off the last axis
+    N = metrics.origins_seen.shape[-1]
     hit = (cache.origin[:, :, None] == jnp.arange(N)) & valid[:, :, None]
     seen = metrics.origins_seen | jnp.any(hit, axis=1)
 
@@ -142,6 +144,21 @@ def accumulate(metrics: FleetMetrics, state, partners,
         link_capacity=metrics.link_capacity + xstats.link_capacity,
         capped_links=metrics.capped_links + xstats.capped_links,
         contacts=contacts)
+
+
+def shard_specs(axis: str) -> FleetMetrics:
+    """PartitionSpec tree for the sharded fleet engine: ``origins_seen``
+    rows follow the agent axis, every other accumulator is replicated
+    (the engine psum-reduces each epoch's per-shard deltas, so the
+    replicated copies stay identical). Shape-based spec inference is not
+    safe here — ``staleness_hist`` is [bins] and bins can collide with a
+    shard-divisible fleet size."""
+    from jax.sharding import PartitionSpec as P
+    rep = P()
+    return FleetMetrics(epochs=rep, staleness_hist=rep,
+                        origins_seen=P(axis, None), offered=rep,
+                        admitted=rep, admitted_capped=rep, link_capacity=rep,
+                        capped_links=rep, contacts=rep)
 
 
 def summarize(metrics: FleetMetrics) -> Dict[str, Any]:

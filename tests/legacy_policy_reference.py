@@ -106,9 +106,11 @@ def legacy_exchange(params, cache, partners, t, own_samples, own_group, *,
                     tau_max, policy="lru", group_slots=None, rng=None,
                     gather_mode="select"):
     N, C = cache.ts.shape
-    own_ts = jnp.full((N,), t, jnp.int32)
+    # current _candidates sources candidates from an ExchangePool; the
+    # identity pool reproduces the pre-refactor dense semantics exactly
+    pool = gossip.identity_pool(params, cache, own_samples, own_group)
     ts, origin, samples, group, arrival, src_a, src_s = gossip._candidates(
-        cache, t, partners, own_ts, own_samples, own_group, tau_max)
+        cache, t, partners, tau_max, pool)
 
     if policy == "lru":
         sel_fn = functools.partial(select_lru, capacity=C)

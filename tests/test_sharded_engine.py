@@ -1,0 +1,216 @@
+"""Sharded fleet engine (shard_map over the ``agents`` axis):
+equivalence with the single-device fused engine, the single-trace
+discipline under sharding, Scenario-level validation/memory guards, and
+a forced-host-device smoke for real multi-shard execution.
+
+Multi-device cases run in a subprocess because
+``--xla_force_host_platform_device_count`` must enter XLA_FLAGS before
+jax initializes; everything else runs on the in-process single device
+(a 1-device mesh exercises the full shard_map path, windowing and
+collectives included).
+
+Tolerances: cached/dfl under the sharded engine are bit-exact with the
+fused engine by construction (per-agent keys are generated at global N
+and sliced, gossip candidates differ only in integer indexing); the
+accuracy comparison still uses the engine-test atol=2e-3 to absorb eval
+FP noise under the budgeted path. cfl averages via a psum of per-shard
+partial sums, so its FP summation order differs by design — same atol.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro import api
+from repro.configs.base import DFLConfig, MobilityConfig
+from repro.fl.experiment import build_fleet, make_sharded_engine
+from repro.fl.scenario import ExperimentConfig
+from repro.launch.mesh import make_fleet_mesh
+
+FAST = dict(
+    dfl=DFLConfig(num_agents=6, cache_size=3, tau_max=10, local_steps=2,
+                  lr=0.1, batch_size=16, epoch_seconds=30.0),
+    mobility=MobilityConfig(grid_w=4, grid_h=6),
+    epochs=4,
+    eval_every=2,
+    n_train=400,
+    n_test=100,
+    image_hw=12,
+    lr_plateau=False,
+)
+
+MOBILITIES = {
+    "manhattan": MobilityConfig(grid_w=4, grid_h=6),
+    "community": MobilityConfig(model="community", area_w=300.0,
+                                area_h=300.0),
+}
+
+
+def _scenario(algorithm="cached", mobility="manhattan", **kw):
+    merged = {**FAST, "mobility": MOBILITIES[mobility], **kw}
+    exp = ExperimentConfig(algorithm=algorithm, **merged)
+    return api.Scenario(experiment=exp)
+
+
+# ---------------------------------------------------------------------------
+# sharded (1-device mesh) vs fused: same trajectory
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("algorithm", ["cached", "dfl", "cfl"])
+@pytest.mark.parametrize("mobility", ["manhattan", "community"])
+def test_sharded_matches_fused_trajectory(algorithm, mobility):
+    base = _scenario(algorithm, mobility)
+    fused = api.run(dataclasses.replace(base, engine="fused",
+                                        record_cache_stats=True))
+    sharded = api.run(dataclasses.replace(base, engine="sharded", mesh=1,
+                                          record_cache_stats=True))
+    assert fused.epoch == sharded.epoch
+    np.testing.assert_allclose(fused.acc, sharded.acc, atol=2e-3)
+    np.testing.assert_allclose(fused.cache_num, sharded.cache_num,
+                               atol=1e-5)
+    np.testing.assert_allclose(fused.cache_age, sharded.cache_age,
+                               atol=1e-4)
+    assert fused.traces == 1
+    assert sharded.traces == 1
+
+
+@pytest.mark.slow
+def test_sharded_budgeted_telemetry_matches_fused():
+    """The budget admission path + telemetry counters reduce to the same
+    global values under sharding (psum-folded per epoch)."""
+    base = _scenario("cached", dfl=dataclasses.replace(
+        FAST["dfl"], transfer_budget=2.0, link_entries_per_step=0.1))
+    base = dataclasses.replace(base, telemetry=True)
+    fused = api.run(dataclasses.replace(base, engine="fused"))
+    sharded = api.run(dataclasses.replace(base, engine="sharded", mesh=1))
+    np.testing.assert_allclose(fused.acc, sharded.acc, atol=2e-3)
+    ff, sf = fused.telemetry["fleet"], sharded.telemetry["fleet"]
+    for k in ("epochs", "staleness_hist", "offered", "admitted",
+              "link_capacity", "capped_links", "contacts", "spread_mean",
+              "reach_fraction"):
+        assert ff[k] == sf[k], f"telemetry {k}: fused {ff[k]} != {sf[k]}"
+
+
+# ---------------------------------------------------------------------------
+# compile discipline under sharding
+# ---------------------------------------------------------------------------
+
+def test_sharded_engine_single_trace():
+    """lr + epoch budget + transfer budget stay traced: one trace total."""
+    cfg = _scenario("cached").experiment
+    (model_cfg, state, data, counts, _tb, mstate,
+     group_slots, mob_model, mob_cfg) = build_fleet(cfg)
+    from repro.models import cnn as cnn_lib
+    loss_fn = lambda p, b: cnn_lib.loss_fn(p, model_cfg, b["images"],
+                                           b["labels"])
+    eng = make_sharded_engine(cfg, mesh=make_fleet_mesh(1), loss_fn=loss_fn,
+                              mob_model=mob_model, mob_cfg=mob_cfg,
+                              group_slots=group_slots, chunk=2)
+    key = jax.random.PRNGKey(3)
+    state, mstate, key, losses = eng.run(state, mstate, key, 0.1, data,
+                                         counts, 2)
+    assert eng.traces == 1
+    assert np.isfinite(np.asarray(losses)).all()
+    state, mstate, key, losses = eng.run(state, mstate, key, 0.05, data,
+                                         counts, 1)
+    assert eng.traces == 1
+    losses = np.asarray(losses)
+    assert np.isfinite(losses[0]) and np.isnan(losses[1])
+
+
+# ---------------------------------------------------------------------------
+# validation / guards
+# ---------------------------------------------------------------------------
+
+def test_sharded_rejects_random_partner_sample():
+    s = dataclasses.replace(_scenario("cached"), engine="sharded")
+    s = s.with_overrides({"partner_sample": "random"})
+    with pytest.raises(ValueError, match="partner_sample"):
+        s.resolve()
+
+
+def test_sharded_builder_validation():
+    cfg = _scenario("cached").experiment
+    (model_cfg, state, data, counts, _tb, mstate,
+     group_slots, mob_model, mob_cfg) = build_fleet(cfg)
+    from repro.models import cnn as cnn_lib
+    loss_fn = lambda p, b: cnn_lib.loss_fn(p, model_cfg, b["images"],
+                                           b["labels"])
+    with pytest.raises(ValueError, match="halo"):
+        make_sharded_engine(
+            dataclasses.replace(cfg, dfl=dataclasses.replace(
+                cfg.dfl, shard_halo=-1)),
+            mesh=make_fleet_mesh(1), loss_fn=loss_fn,
+            mob_model=mob_model, mob_cfg=mob_cfg)
+    with pytest.raises(ValueError, match="lowest-id"):
+        make_sharded_engine(
+            dataclasses.replace(cfg, partner_sample="random"),
+            mesh=make_fleet_mesh(1), loss_fn=loss_fn,
+            mob_model=mob_model, mob_cfg=mob_cfg)
+    with pytest.raises(ValueError, match="visible"):
+        make_fleet_mesh(jax.device_count() + 64)
+
+
+def test_memory_guard_names_the_knobs(monkeypatch):
+    monkeypatch.setenv("REPRO_FLEET_MEM_GB", "0.001")
+    with pytest.raises(ValueError) as e:
+        _scenario("cached").resolve()
+    msg = str(e.value)
+    for needle in ("dfl.num_agents", "dfl.cache_size", "sharded",
+                   "REPRO_FLEET_MEM_GB"):
+        assert needle in msg
+    monkeypatch.setenv("REPRO_FLEET_MEM_GB", "0")
+    _scenario("cached").resolve()          # 0 disables the guard
+
+
+# ---------------------------------------------------------------------------
+# real multi-shard execution (forced host devices; subprocess)
+# ---------------------------------------------------------------------------
+
+_SUBPROCESS_PROG = textwrap.dedent("""
+    import dataclasses
+    import jax
+    assert jax.device_count() == 4, jax.device_count()
+    from repro import api
+    from repro.configs.base import DFLConfig, MobilityConfig
+    from repro.fl.scenario import ExperimentConfig
+
+    exp = ExperimentConfig(
+        algorithm="{algorithm}",
+        dfl=DFLConfig(num_agents=8, cache_size=3, tau_max=10, local_steps=2,
+                      lr=0.1, batch_size=16, epoch_seconds=30.0,
+                      shard_halo={halo}),
+        mobility=MobilityConfig(grid_w=4, grid_h=6),
+        epochs=4, eval_every=2, n_train=400, n_test=100, image_hw=12,
+        lr_plateau=False)
+    base = api.Scenario(experiment=exp)
+    fused = api.run(dataclasses.replace(base, engine="fused"))
+    sharded = api.run(dataclasses.replace(base, engine="sharded", mesh=4))
+    assert sharded.traces == 1, sharded.traces
+    d = max(abs(a - b) for a, b in zip(fused.acc, sharded.acc))
+    if {halo} == 0:
+        assert d <= 2e-3, (fused.acc, sharded.acc)   # exact window mode
+    print("OK", d)
+""")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("algorithm,halo", [("cached", 0), ("dfl", 0),
+                                            ("cfl", 0), ("cached", 2)])
+def test_sharded_multi_device_subprocess(algorithm, halo):
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4")
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src")]
+        + env.get("PYTHONPATH", "").split(os.pathsep))
+    prog = _SUBPROCESS_PROG.format(algorithm=algorithm, halo=halo)
+    proc = subprocess.run([sys.executable, "-c", prog], env=env,
+                          capture_output=True, text=True, timeout=1200)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    assert proc.stdout.startswith("OK"), proc.stdout

@@ -14,6 +14,7 @@ suite.
 
     PYTHONPATH=src python tools/check_scenarios.py [--list] [--only SUBSTR]
     PYTHONPATH=src python tools/check_scenarios.py --telemetry
+    PYTHONPATH=src python tools/check_scenarios.py --sharded
 """
 from __future__ import annotations
 
@@ -30,6 +31,15 @@ from typing import Callable, List, Optional, Tuple
 import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# --sharded cross-checks the shard_map engine on real multi-device
+# layouts; forced host devices must enter XLA_FLAGS before jax (imported
+# transitively by repro.api below) initializes its backend.
+if "--sharded" in sys.argv[1:]:
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in _flags:
+        os.environ["XLA_FLAGS"] = (
+            _flags + " --xla_force_host_platform_device_count=4").strip()
 
 from repro import api  # noqa: E402
 from repro.mobility import registry  # noqa: E402
@@ -133,6 +143,35 @@ def check_telemetry(algorithm: str, out_dir: str) -> Optional[str]:
     return None
 
 
+def check_sharded(algorithm: str) -> Optional[str]:
+    """Sharded-engine cross-check: the shard_map engine over every
+    visible device (``mesh=0``; 4 forced host devices under ``--sharded``,
+    the in-process single device in the default list) must reproduce the
+    single-device fused trajectory and hold the 1-trace discipline."""
+    import jax
+    overrides = {
+        **SMOKE, "algorithm": algorithm,
+        # lowest-id partner draws are the sharded engine's contract;
+        # 8 agents divide every forced-host-device mesh (1/2/4)
+        "partner_sample": "lowest-id", "dfl.num_agents": 8,
+        "mobility.grid_w": 4, "mobility.grid_h": 6,
+    }
+    base = api.Scenario().with_overrides(overrides)
+    fused = api.run(base)
+    sharded = api.run(dataclasses.replace(base, engine="sharded", mesh=0))
+    if sharded.traces != 1:
+        return f"sharded engine traced {sharded.traces}x, expected 1"
+    bad = [a for a in sharded.acc if not math.isfinite(a)]
+    if bad:
+        return f"non-finite accuracy: {sharded.acc}"
+    delta = max(abs(a - b) for a, b in zip(fused.acc, sharded.acc))
+    if delta > 2e-3:
+        return (f"sharded({jax.device_count()} devices) diverges from "
+                f"fused: max|Δacc|={delta:.2e} "
+                f"(fused {fused.acc} vs sharded {sharded.acc})")
+    return None
+
+
 def check_preset(name: str) -> Optional[str]:
     """Full-size resolve, then a shrunken smoke run of the preset."""
     scenario = api.get_preset(name)
@@ -172,6 +211,9 @@ def build_checks(trace_path: str) -> List[Tuple[str, Callable[[], Optional[str]]
     for algorithm in ("cached", "dfl", "cfl"):
         checks.append((f"telemetry:{algorithm}",
                        lambda a=algorithm: check_telemetry(a, out_dir)))
+    for algorithm in ("cached", "dfl", "cfl"):
+        checks.append((f"sharded:{algorithm}",
+                       lambda a=algorithm: check_sharded(a)))
     return checks
 
 
@@ -185,6 +227,11 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help="run only the telemetry smoke checks (one "
                          "telemetry-on run per algorithm + JSONL schema "
                          "validation)")
+    ap.add_argument("--sharded", action="store_true",
+                    help="run only the sharded-engine cross-checks, under "
+                         "4 forced host devices (one shard_map run per "
+                         "algorithm, compared against the single-device "
+                         "fused engine)")
     args = ap.parse_args(argv)
 
     tmp = tempfile.mkdtemp(prefix="check_scenarios_")
@@ -194,6 +241,9 @@ def main(argv: Optional[List[str]] = None) -> int:
     if args.telemetry:
         checks = [(cid, fn) for cid, fn in checks
                   if cid.startswith("telemetry:")]
+    if args.sharded:
+        checks = [(cid, fn) for cid, fn in checks
+                  if cid.startswith("sharded:")]
     if args.only:
         checks = [(cid, fn) for cid, fn in checks if args.only in cid]
     if args.list:

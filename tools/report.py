@@ -10,9 +10,11 @@ schema ``sweep-v1``) and emits a self-contained markdown report:
   histogram, model spread, gossip traffic, budget utilization) and the
   structured event stream tail;
 - bench reports: per-cell results with telemetry summary columns when
-  the sweep ran telemetry-enabled, engine/retrace accounting, and — for
-  sweeps with a ``dfl.transfer_budget`` axis — the budget-utilization
-  frontier (accuracy and realized utilization per budget level).
+  the sweep ran telemetry-enabled, engine/retrace accounting, for sweeps
+  with a ``dfl.transfer_budget`` axis the budget-utilization frontier
+  (accuracy and realized utilization per budget level), and — when the
+  artifact carries ``extra.scaling`` (the fleet-scale bench) — the
+  sharded-engine epochs/s-vs-devices scaling table.
 
 Telemetry fields are optional throughout: artifacts written before the
 telemetry subsystem (or with ``telemetry=False``) render with the
@@ -227,6 +229,25 @@ def render_bench(doc: Mapping[str, Any]) -> str:
                 row.insert(2, info["budget_utilization"])
             rows.append(row)
         out.extend(_table(headers, rows))
+        out.append("")
+
+    scaling = (doc.get("extra") or {}).get("scaling") or []
+    if scaling:
+        out.append("## Sharded-engine scaling (epochs/s vs devices)")
+        out.append("")
+        out.append("Fixed fleet, compile-free dispatch throughput per "
+                   "device-mesh size (block-sparse halo gossip: each shard "
+                   "computes contacts against its window columns only):")
+        out.append("")
+        cols = [("devices", "devices"), ("num_agents", "N"),
+                ("halo", "halo"), ("window", "window cols"),
+                ("epochs_per_s", "epochs/s"),
+                ("speedup_vs_1dev", "speedup vs 1 dev"),
+                ("traces", "traces")]
+        cols = [(k, label) for k, label in cols
+                if any(k in r for r in scaling)]
+        rows = [[r.get(k) for k, _ in cols] for r in scaling]
+        out.extend(_table([label for _, label in cols], rows))
         out.append("")
     return "\n".join(out).rstrip() + "\n"
 
