@@ -57,3 +57,8 @@ print(api.telemetry_line(result))
 # result = api.run(dataclasses.replace(
 #     scenario.with_overrides({"partner_sample": "lowest-id"}),
 #     engine="sharded", mesh=0))   # 0 = all visible devices
+
+# 7) hacking on the engines/policies/mobility models? gate your change
+#    statically first — trace discipline, PRNG hygiene, protocol/shard
+#    contracts (rule catalog: docs/ANALYSIS.md):
+#      python tools/analyze.py src/

@@ -1,0 +1,33 @@
+"""repro.analysis — static analysis for the repo's JAX discipline.
+
+Two halves behind one findings vocabulary (see ``docs/ANALYSIS.md``):
+
+- :mod:`repro.analysis.linter` — pure-AST rules RPR001–RPR005 (PRNG key
+  reuse, retrace hazards, donation-after-use, host syncs in hot paths,
+  dead code). Importing it never imports jax.
+- :mod:`repro.analysis.contracts` — ``jax.eval_shape`` contract
+  verifiers RPR101–RPR105 (mobility/policy protocols, shard-spec
+  coverage, engine run contract, engine-cache key completeness). Zero
+  FLOPs: everything is checked abstractly.
+
+``tools/analyze.py`` is the CLI; the tier-1 gate lives in
+``tests/test_analysis.py`` (the repo ships analyzer-clean).
+"""
+from repro.analysis.findings import (  # noqa: F401
+    BASELINE_SCHEMA, SCHEMA, Finding, apply_baseline, load_baseline,
+    to_document, write_baseline)
+from repro.analysis.linter import (  # noqa: F401
+    DEFAULT_TRACED_AXES, RULES, Suppressions, lint_paths, lint_source)
+
+__all__ = [
+    "Finding", "SCHEMA", "BASELINE_SCHEMA", "RULES",
+    "DEFAULT_TRACED_AXES", "Suppressions", "lint_paths", "lint_source",
+    "verify_all", "to_document", "write_baseline", "load_baseline",
+    "apply_baseline",
+]
+
+
+def verify_all(select=None, root=None):
+    """Run the contract verifiers (lazy import: needs jax)."""
+    from repro.analysis import contracts
+    return contracts.verify_all(select=select, root=root)

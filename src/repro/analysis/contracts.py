@@ -1,0 +1,656 @@
+"""Abstract contract verifier: ``jax.eval_shape`` checks, zero FLOPs.
+
+Where the linter (``repro.analysis.linter``) reads source text, this half
+*traces* the registered subsystems abstractly and checks the protocol
+contracts the runtime tests only catch slowly:
+
+RPR101  mobility protocol — every registered model's ``simulate_epoch``
+        returns ``(state, [N,N] bool, [N,N] int32)`` with the state
+        treedef preserved, and every ``simulate_epoch_rows`` returns the
+        matching ``[num_rows, W]`` block dtypes/shapes (``row_start``
+        traced, so the block variant stays shard-compatible).
+RPR102  cache-policy protocol — every registered policy's ``priority``
+        returns ``(key [M] int32|float32, keep [M] bool)`` given exactly
+        the context its ``needs_*`` flags declare, and ``retain``
+        truncates to ``[capacity]`` with metadata structure preserved.
+RPR103  shard-spec coverage — ``sharding.rules.fleet_specs`` covers a
+        real ``FleetState`` pytree exactly (agent-leading leaves sharded,
+        everything else replicated, no leaf missed) and
+        ``telemetry.metrics.shard_specs`` mirrors the ``FleetMetrics``
+        structure field-for-field.
+RPR104  engine run contract — fused and sharded engines for every
+        algorithm return ``(state, mstate, key, losses [chunk] f32)``
+        with the fleet-state structure unchanged (donation and shard_map
+        cannot silently alter the carry).
+RPR105  engine-cache key — ``fl.runner._engine_key`` changes for every
+        static binding the engine closes over, and does NOT change for
+        traced scalars (lr, epochs, seed), so sweeps neither retrace nor
+        wrongly share an engine. Also pins the linter's literal
+        ``DEFAULT_TRACED_AXES`` equal to ``api.TRACED_AXES``.
+
+Every check is wrapped so a violation becomes a :class:`Finding`
+anchored at the offending callable's def line, not a crashed run.
+"""
+from __future__ import annotations
+
+from typing import Callable, Iterable, List, Optional
+
+from repro.analysis.findings import Finding
+
+CONTRACT_RULES = {
+    "RPR101": "mobility protocol contract",
+    "RPR102": "cache-policy protocol contract",
+    "RPR103": "shard-spec pytree coverage",
+    "RPR104": "engine run contract",
+    "RPR105": "engine-cache key completeness",
+}
+
+
+def _loc(fn: Callable) -> tuple:
+    """(path, line) of a callable for finding anchors."""
+    code = getattr(fn, "__code__", None)
+    if code is None:  # partial / builtin — fall back to the module file
+        mod = getattr(fn, "__module__", "")
+        return (mod or "<unknown>", 0)
+    return (code.co_filename, code.co_firstlineno)
+
+
+def _finding(rule: str, fn: Optional[Callable], message: str,
+             hint: str) -> Finding:
+    path, line = _loc(fn) if fn is not None else ("<registry>", 0)
+    return Finding(rule=rule, path=path, line=line, message=message,
+                   hint=hint)
+
+
+# ---------------------------------------------------------------------------
+# RPR101 — mobility models
+# ---------------------------------------------------------------------------
+
+def _mobility_state(name: str, model, cfg, key, num_agents: int):
+    import numpy as np
+    if name == "trace":
+        from repro.mobility import trace as trace_lib
+        frames = np.zeros((4, num_agents, num_agents), bool)
+        frames[:, 0, 1] = frames[:, 1, 0] = True
+        return trace_lib.init_from_contacts(frames)
+    return model.init(key, num_agents, cfg)
+
+
+def verify_mobility(num_agents: int = 6) -> List[Finding]:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.base import MobilityConfig
+    from repro.mobility import registry
+
+    findings: List[Finding] = []
+    key = jax.random.PRNGKey(0)
+    rows_sigs = {}   # name -> (met dtype, dur dtype) for cross-model drift
+    for name in registry.available():
+        model = registry.get_model(name)
+        cfg = MobilityConfig(model=name, trace_frames_per_epoch=2)
+        try:
+            state = _mobility_state(name, model, cfg, key, num_agents)
+        except Exception as e:  # pragma: no cover - init itself broken
+            findings.append(_finding(
+                "RPR101", model.init,
+                f"mobility model '{name}': init failed abstractly: {e}",
+                "init(key, num_agents, cfg) must build a state pytree"))
+            continue
+
+        # --- dense simulate_epoch -> (state, [N,N] bool, [N,N] int32) ---
+        try:
+            out = jax.eval_shape(
+                lambda s, k: model.simulate_epoch(s, k, cfg, 4.0),
+                state, key)
+        except Exception as e:
+            findings.append(_finding(
+                "RPR101", model.simulate_epoch,
+                f"mobility model '{name}': simulate_epoch does not trace: "
+                f"{e}",
+                "signature must be (state, key, cfg, seconds)"))
+            continue
+        if not (isinstance(out, tuple) and len(out) == 3):
+            findings.append(_finding(
+                "RPR101", model.simulate_epoch,
+                f"mobility model '{name}': simulate_epoch returned "
+                f"{type(out).__name__}, expected a 3-tuple "
+                "(state, met, dur)",
+                "return (state, [N,N] bool union, [N,N] int32 durations)"))
+            continue
+        new_state, met, dur = out
+        td_in = jax.tree_util.tree_structure(state)
+        td_out = jax.tree_util.tree_structure(new_state)
+        if td_in != td_out:
+            findings.append(_finding(
+                "RPR101", model.simulate_epoch,
+                f"mobility model '{name}': simulate_epoch changed the "
+                f"state treedef ({td_in} -> {td_out})",
+                "the state pytree must round-trip unchanged"))
+        checks = ((met, (num_agents, num_agents), jnp.bool_, "met"),
+                  (dur, (num_agents, num_agents), jnp.int32, "dur"))
+        for arr, shape, dtype, label in checks:
+            if tuple(arr.shape) != shape or arr.dtype != dtype:
+                findings.append(_finding(
+                    "RPR101", model.simulate_epoch,
+                    f"mobility model '{name}': simulate_epoch {label} is "
+                    f"{arr.dtype}{list(arr.shape)}, expected "
+                    f"{jnp.dtype(dtype).name}{list(shape)}",
+                    "met must be [N,N] bool, dur [N,N] int32"))
+
+        # --- block-local simulate_epoch_rows ----------------------------
+        if model.simulate_epoch_rows is None:
+            findings.append(_finding(
+                "RPR101", model.simulate_epoch,
+                f"mobility model '{name}': no simulate_epoch_rows — the "
+                "sharded engine cannot run this model",
+                "wire generic_simulate_epoch_rows(step, positions) or a "
+                "bespoke block variant"))
+            continue
+        num_rows, W = 3, 4
+        col_ids = jnp.arange(W, dtype=jnp.int32)
+        row_start = jnp.zeros((), jnp.int32)   # traced: shard-compatible
+        try:
+            rout = jax.eval_shape(
+                lambda s, k, rs, ci: model.simulate_epoch_rows(
+                    s, k, cfg, 4.0, row_start=rs, num_rows=num_rows,
+                    col_ids=ci),
+                state, key, row_start, col_ids)
+        except Exception as e:
+            findings.append(_finding(
+                "RPR101", model.simulate_epoch_rows,
+                f"mobility model '{name}': simulate_epoch_rows does not "
+                f"trace with a traced row_start: {e}",
+                "signature must be (state, key, cfg, seconds, *, "
+                "row_start, num_rows, col_ids) with row_start traced "
+                "(use dynamic_slice, not static indexing)"))
+            continue
+        if not (isinstance(rout, tuple) and len(rout) == 3):
+            findings.append(_finding(
+                "RPR101", model.simulate_epoch_rows,
+                f"mobility model '{name}': simulate_epoch_rows returned "
+                f"{type(rout).__name__}, expected (state, met, dur)",
+                "match the generic_simulate_epoch_rows contract"))
+            continue
+        _, rmet, rdur = rout
+        for arr, dtype, label in ((rmet, jnp.bool_, "met"),
+                                  (rdur, jnp.int32, "dur")):
+            if tuple(arr.shape) != (num_rows, W) or arr.dtype != dtype:
+                findings.append(_finding(
+                    "RPR101", model.simulate_epoch_rows,
+                    f"mobility model '{name}': simulate_epoch_rows "
+                    f"{label} is {arr.dtype}{list(arr.shape)}, expected "
+                    f"{jnp.dtype(dtype).name}[{num_rows}, {W}]",
+                    "the block must be [num_rows, len(col_ids)]"))
+        rows_sigs[name] = (str(rmet.dtype), str(rdur.dtype))
+    if len(set(rows_sigs.values())) > 1:
+        findings.append(_finding(
+            "RPR101", None,
+            "simulate_epoch_rows block dtypes drift across models: "
+            + ", ".join(f"{n}={s}" for n, s in sorted(rows_sigs.items())),
+            "all registered models must agree on (bool, int32) blocks"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# RPR102 — cache policies
+# ---------------------------------------------------------------------------
+
+def verify_policies(num_candidates: int = 7, capacity: int = 4,
+                    num_agents: int = 6) -> List[Finding]:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.cache import CacheMeta
+    from repro.policies import registry
+    from repro.policies.base import PolicyContext, retain
+
+    findings: List[Finding] = []
+    M = num_candidates
+    meta = CacheMeta(
+        ts=jnp.arange(M, dtype=jnp.int32),
+        origin=jnp.where(jnp.arange(M) < M - 1,
+                         jnp.arange(M, dtype=jnp.int32) % num_agents,
+                         -1).astype(jnp.int32),
+        samples=jnp.full((M,), 8.0, jnp.float32),
+        group=jnp.zeros((M,), jnp.int32),
+        arrival=jnp.arange(M, dtype=jnp.int32))
+    key = jax.random.PRNGKey(0)
+    for name in registry.available():
+        policy = registry.get_policy(name)
+        ctx = PolicyContext(
+            t=jnp.asarray(5, jnp.int32), capacity=capacity,
+            rng=key if policy.needs_rng else None,
+            group_slots=(jnp.asarray([2, 2], jnp.int32)
+                         if policy.needs_group_slots else None),
+            encounters=(jnp.ones((num_agents,), jnp.float32)
+                        if policy.needs_encounters else None),
+            params={})
+        valid = meta.origin >= 0
+        try:
+            out = jax.eval_shape(
+                lambda m, v: policy.priority(m, ctx, v), meta, valid)
+        except Exception as e:
+            findings.append(_finding(
+                "RPR102", policy.priority,
+                f"cache policy '{name}': priority does not trace with "
+                f"its declared context (needs_rng={policy.needs_rng}, "
+                f"needs_group_slots={policy.needs_group_slots}, "
+                f"needs_encounters={policy.needs_encounters}): {e}",
+                "priority(meta, ctx, valid) must use only the context "
+                "its needs_* flags request"))
+            continue
+        if not (isinstance(out, tuple) and len(out) == 2):
+            findings.append(_finding(
+                "RPR102", policy.priority,
+                f"cache policy '{name}': priority returned "
+                f"{type(out).__name__}, expected (key, keep)",
+                "return (score [M] int32|float32, keep [M] bool)"))
+            continue
+        score, keep = out
+        if tuple(score.shape) != (M,) or score.dtype not in (
+                jnp.int32, jnp.float32):
+            findings.append(_finding(
+                "RPR102", policy.priority,
+                f"cache policy '{name}': priority key is "
+                f"{score.dtype}{list(score.shape)}, expected int32[{M}] "
+                f"or float32[{M}]",
+                "the sort score must be per-candidate, int32 or float32"))
+        if tuple(keep.shape) != (M,) or keep.dtype != jnp.bool_:
+            findings.append(_finding(
+                "RPR102", policy.priority,
+                f"cache policy '{name}': priority keep mask is "
+                f"{keep.dtype}{list(keep.shape)}, expected bool[{M}]",
+                "keep must be a per-candidate bool mask"))
+        # the shared retain engine must truncate to [capacity]
+        try:
+            sel, meta_sel = jax.eval_shape(
+                lambda m: retain(m, policy, ctx), meta)
+        except Exception as e:
+            findings.append(_finding(
+                "RPR102", policy.priority,
+                f"cache policy '{name}': retain() fails abstractly: {e}",
+                "the policy must compose with policies.base.retain"))
+            continue
+        if tuple(sel.shape) != (capacity,):
+            findings.append(_finding(
+                "RPR102", policy.priority,
+                f"cache policy '{name}': retain sel is "
+                f"{list(sel.shape)}, expected [{capacity}]",
+                "retain must truncate to ctx.capacity"))
+        if jax.tree_util.tree_structure(meta_sel) \
+                != jax.tree_util.tree_structure(meta):
+            findings.append(_finding(
+                "RPR102", policy.priority,
+                f"cache policy '{name}': retain changed the CacheMeta "
+                "structure",
+                "retain must return metadata with the input treedef"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# RPR103 — shard-spec pytree coverage
+# ---------------------------------------------------------------------------
+
+def verify_spec_coverage(num_agents: int = 6) -> List[Finding]:
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.rounds import init_fleet
+    from repro.sharding.rules import fleet_specs
+    from repro.telemetry import metrics as metrics_lib
+
+    findings: List[Finding] = []
+    axis = "agents"
+
+    # --- fleet_specs over a real FleetState --------------------------------
+    template = {"w": jnp.zeros((3,), jnp.float32),
+                "b": jnp.zeros((), jnp.float32)}
+    state = jax.eval_shape(
+        lambda: init_fleet(template, num_agents, 2,
+                           jnp.ones((num_agents,), jnp.float32)))
+    specs = fleet_specs(state, num_agents, axis)
+    s_leaves, s_def = jax.tree_util.tree_flatten(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    x_leaves, x_def = jax.tree_util.tree_flatten(state)
+    if s_def != x_def or len(s_leaves) != len(x_leaves):
+        findings.append(_finding(
+            "RPR103", fleet_specs,
+            f"fleet_specs does not cover the FleetState pytree: "
+            f"{len(x_leaves)} leaves vs {len(s_leaves)} specs",
+            "every FleetState leaf needs exactly one PartitionSpec"))
+        return findings
+    for leaf, spec in zip(x_leaves, s_leaves):
+        if not isinstance(spec, P):
+            findings.append(_finding(
+                "RPR103", fleet_specs,
+                f"fleet_specs produced a non-PartitionSpec leaf: "
+                f"{spec!r}",
+                "specs must be jax.sharding.PartitionSpec"))
+            continue
+        agent_leading = leaf.ndim >= 1 and leaf.shape[0] == num_agents
+        want = P(axis, *([None] * (leaf.ndim - 1))) if agent_leading \
+            else P()
+        if spec != want:
+            findings.append(_finding(
+                "RPR103", fleet_specs,
+                f"fleet_specs gave {spec} to a "
+                f"{leaf.dtype}{list(leaf.shape)} leaf, expected {want}",
+                "agent-leading leaves shard on the agent axis; "
+                "everything else replicates"))
+
+    # --- telemetry shard_specs mirrors FleetMetrics ------------------------
+    m_template = jax.eval_shape(
+        lambda: metrics_lib.init_metrics(num_agents, 11))
+    try:
+        m_specs = metrics_lib.shard_specs(axis)
+    except TypeError as e:
+        findings.append(_finding(
+            "RPR103", metrics_lib.shard_specs,
+            f"shard_specs no longer matches the FleetMetrics fields: {e}",
+            "add a PartitionSpec for every FleetMetrics field"))
+        return findings
+    ms_leaves, ms_def = jax.tree_util.tree_flatten(
+        m_specs, is_leaf=lambda x: isinstance(x, P))
+    mt_leaves, mt_def = jax.tree_util.tree_flatten(m_template)
+    if ms_def != mt_def or len(ms_leaves) != len(mt_leaves):
+        findings.append(_finding(
+            "RPR103", metrics_lib.shard_specs,
+            f"shard_specs structure drifts from init_metrics: "
+            f"{len(mt_leaves)} metric leaves vs {len(ms_leaves)} specs",
+            "shard_specs must build the same FleetMetrics structure"))
+        return findings
+    for leaf, spec in zip(mt_leaves, ms_leaves):
+        if not isinstance(spec, P):
+            findings.append(_finding(
+                "RPR103", metrics_lib.shard_specs,
+                f"shard_specs produced a non-PartitionSpec leaf: "
+                f"{spec!r}",
+                "every FleetMetrics field needs an explicit spec"))
+            continue
+        is_origins = leaf.ndim == 2 and \
+            leaf.shape == (num_agents, num_agents)
+        want = P(axis, None) if is_origins else P()
+        if spec != want:
+            findings.append(_finding(
+                "RPR103", metrics_lib.shard_specs,
+                f"shard_specs gave {spec} to a "
+                f"{leaf.dtype}{list(leaf.shape)} metrics leaf, expected "
+                f"{want}",
+                "only origins_seen rows follow the agent axis; the "
+                "psum-reduced accumulators replicate"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# RPR104 — engine run contract (fused + sharded, every algorithm)
+# ---------------------------------------------------------------------------
+
+def _toy_setup(num_agents: int = 4):
+    import jax.numpy as jnp
+
+    from repro.core.rounds import init_fleet
+
+    template = {"w": jnp.zeros((3,), jnp.float32)}
+    state = init_fleet(template, num_agents, 2,
+                       jnp.full((num_agents,), 8.0, jnp.float32))
+    data = {"x": jnp.zeros((num_agents, 8, 3), jnp.float32),
+            "y": jnp.zeros((num_agents, 8), jnp.float32)}
+    counts = jnp.full((num_agents,), 8, jnp.int32)
+
+    def loss_fn(params, batch):
+        pred = batch["x"] @ params["w"]
+        return jnp.mean((pred - batch["y"]) ** 2)
+
+    return state, data, counts, loss_fn
+
+
+def _toy_config(algorithm: str, num_agents: int = 4):
+    from repro.configs.base import DFLConfig, MobilityConfig
+    from repro.fl.scenario import ExperimentConfig
+
+    return ExperimentConfig(
+        algorithm=algorithm,
+        dfl=DFLConfig(num_agents=num_agents, cache_size=2, local_steps=1,
+                      batch_size=4, epoch_seconds=4.0),
+        mobility=MobilityConfig(model="random_waypoint"),
+        max_partners=2, eval_every=2, n_train=32, n_test=8)
+
+
+def verify_engines(num_agents: int = 4, chunk: int = 2) -> List[Finding]:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.fl import experiment as experiment_lib
+    from repro.launch.mesh import make_fleet_mesh
+    from repro.mobility import registry as mob_registry
+
+    findings: List[Finding] = []
+    state, data, counts, loss_fn = _toy_setup(num_agents)
+    key = jax.random.PRNGKey(0)
+    mob_model = mob_registry.get_model("random_waypoint")
+    mesh = make_fleet_mesh(1)
+    for algorithm in ("cached", "dfl", "cfl"):
+        cfg = _toy_config(algorithm, num_agents)
+        mob_cfg = cfg.mobility
+        mstate = mob_model.init(key, num_agents, mob_cfg)
+        builders = {
+            "fused": lambda: experiment_lib.make_engine(
+                cfg, loss_fn=loss_fn, mob_model=mob_model,
+                mob_cfg=mob_cfg, chunk=chunk, donate=False),
+            "sharded": lambda: experiment_lib.make_sharded_engine(
+                cfg, mesh=mesh, loss_fn=loss_fn, mob_model=mob_model,
+                mob_cfg=mob_cfg, chunk=chunk, donate=False),
+        }
+        for kind, build in builders.items():
+            anchor = experiment_lib.make_engine if kind == "fused" \
+                else experiment_lib.make_sharded_engine
+            try:
+                eng = build()
+                out = jax.eval_shape(
+                    eng.run, state, mstate, key,
+                    jnp.asarray(0.1, jnp.float32), data, counts,
+                    jnp.asarray(chunk, jnp.int32))
+            except Exception as e:
+                findings.append(_finding(
+                    "RPR104", anchor,
+                    f"{kind} engine ({algorithm}): run does not trace "
+                    f"abstractly: {e}",
+                    "run(state, mstate, key, lr, data, counts, "
+                    "num_epochs) must trace for every algorithm"))
+                continue
+            if not (isinstance(out, (tuple, list)) and len(out) == 4):
+                findings.append(_finding(
+                    "RPR104", anchor,
+                    f"{kind} engine ({algorithm}): run returned "
+                    f"{len(out) if isinstance(out, (tuple, list)) else type(out).__name__}"
+                    " values, expected (state, mstate, key, losses)",
+                    "telemetry-off engines return the 4-tuple contract"))
+                continue
+            new_state, _, _, losses = out
+            in_shapes = [(tuple(x.shape), str(x.dtype))
+                         for x in jax.tree_util.tree_leaves(state)]
+            out_shapes = [(tuple(x.shape), str(x.dtype))
+                          for x in jax.tree_util.tree_leaves(new_state)]
+            if jax.tree_util.tree_structure(new_state) \
+                    != jax.tree_util.tree_structure(state) \
+                    or in_shapes != out_shapes:
+                findings.append(_finding(
+                    "RPR104", anchor,
+                    f"{kind} engine ({algorithm}): run changed the "
+                    "FleetState structure or leaf shapes/dtypes",
+                    "the fleet-state carry must round-trip unchanged "
+                    "(donation relies on matching buffers)"))
+            if tuple(losses.shape) != (chunk,) \
+                    or losses.dtype != jnp.float32:
+                findings.append(_finding(
+                    "RPR104", anchor,
+                    f"{kind} engine ({algorithm}): losses is "
+                    f"{losses.dtype}{list(losses.shape)}, expected "
+                    f"float32[{chunk}]",
+                    "losses must be the [chunk] per-epoch mean-loss "
+                    "buffer (NaN past num_epochs)"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# RPR105 — engine-cache key completeness
+# ---------------------------------------------------------------------------
+
+#: static knobs the engines close over; each entry perturbs a resolved
+#: scenario and must flip the engine-cache key. (field-path, new value)
+_STATIC_KNOBS = [
+    ("algorithm", "dfl"),
+    ("distribution", "iid"),
+    ("num_groups", 5),
+    ("max_partners", 7),
+    ("partner_sample", "random"),
+    ("n_train", 1234),
+    ("n_test", 321),
+    ("dfl.num_agents", 12),
+    ("dfl.cache_size", 3),
+    ("dfl.tau_max", 4),
+    ("dfl.local_steps", 2),
+    ("dfl.batch_size", 16),
+    ("dfl.rho", 0.5),
+    ("dfl.epoch_seconds", 60.0),
+    ("dfl.policy", "fifo"),
+    ("dfl.policy_params", (("gamma", 0.5),)),
+    ("dfl.staleness_decay", 0.9),
+    ("dfl.link_entries_per_step", 2.0),
+    ("dfl.shard_halo", 1),
+    ("mobility.model", "levy_walk"),
+    ("mobility.comm_range", 42.0),
+]
+
+#: traced scalars — perturbing these must NOT flip the key
+_TRACED_KNOBS = [("dfl.lr", 0.5), ("epochs", 99), ("seed", 7)]
+
+
+def _replace_path(cfg, path: str, value):
+    import dataclasses as _dc
+    if "." in path:
+        head, field = path.split(".", 1)
+        sub = _dc.replace(getattr(cfg, head), **{field: value})
+        return _dc.replace(cfg, **{head: sub})
+    return _dc.replace(cfg, **{path: value})
+
+
+def verify_engine_key() -> List[Finding]:
+    import dataclasses as _dc
+
+    from repro.fl import runner as runner_lib
+    from repro.fl.scenario import Scenario
+
+    findings: List[Finding] = []
+    key_fn = runner_lib._engine_key
+    base_rs = Scenario().resolve()
+    base = key_fn(base_rs, chunk=2, traced_budget=False)
+
+    def rs_with(cfg):
+        # thread the perturbation into both the experiment and the
+        # *resolved* mobility config (the key reads rs.mobility)
+        sc = _dc.replace(base_rs.scenario, experiment=cfg)
+        return _dc.replace(base_rs, scenario=sc, mobility=cfg.mobility)
+
+    for path, value in _STATIC_KNOBS:
+        cfg = _replace_path(base_rs.experiment, path, value)
+        if key_fn(rs_with(cfg), chunk=2, traced_budget=False) == base:
+            findings.append(_finding(
+                "RPR105", key_fn,
+                f"engine-cache key ignores static binding '{path}' — "
+                "two scenarios differing only in it would share one "
+                "compiled engine",
+                "add the field to _engine_key's tuple"))
+    for path, value in _TRACED_KNOBS:
+        cfg = _replace_path(base_rs.experiment, path, value)
+        if key_fn(rs_with(cfg), chunk=2, traced_budget=False) != base:
+            findings.append(_finding(
+                "RPR105", key_fn,
+                f"engine-cache key changes with traced scalar '{path}' "
+                "— sweeps over it would rebuild engines needlessly",
+                "zero the traced scalar out of the key (see dfl_static)"))
+    # traced-budget mode: transfer_budget becomes a traced scalar
+    base_tb = key_fn(base_rs, chunk=2, traced_budget=True)
+    cfg = _replace_path(base_rs.experiment, "dfl.transfer_budget", 3.0)
+    if key_fn(rs_with(cfg), chunk=2, traced_budget=True) != base_tb:
+        findings.append(_finding(
+            "RPR105", key_fn,
+            "engine-cache key changes with dfl.transfer_budget in "
+            "traced-budget mode — the budget sweep would retrace",
+            "zero transfer_budget out of the key when traced_budget"))
+    if key_fn(rs_with(cfg), chunk=2, traced_budget=False) == base:
+        findings.append(_finding(
+            "RPR105", key_fn,
+            "engine-cache key ignores dfl.transfer_budget in static "
+            "mode — budget cells would wrongly share an engine",
+            "keep transfer_budget in the key when not traced"))
+    # engine kind / mesh / chunk / telemetry are static bindings too
+    sc_engine = _dc.replace(base_rs.scenario, engine="sharded")
+    if key_fn(_dc.replace(base_rs, scenario=sc_engine), chunk=2,
+              traced_budget=False) == base:
+        findings.append(_finding(
+            "RPR105", key_fn,
+            "engine-cache key ignores the engine kind",
+            "fused and sharded engines must never share a cache slot"))
+    if key_fn(base_rs, chunk=3, traced_budget=False) == base:
+        findings.append(_finding(
+            "RPR105", key_fn,
+            "engine-cache key ignores the chunk size",
+            "chunk sets the losses-buffer shape; include it"))
+    if key_fn(base_rs, chunk=2, traced_budget=False,
+              telemetry=True) == base:
+        findings.append(_finding(
+            "RPR105", key_fn,
+            "engine-cache key ignores the telemetry flag",
+            "the metrics carry changes the trace; include telemetry"))
+
+    # linter's literal traced-axes set must match the runtime's
+    from repro.analysis.linter import DEFAULT_TRACED_AXES
+    if DEFAULT_TRACED_AXES != runner_lib.TRACED_AXES:
+        findings.append(_finding(
+            "RPR105", key_fn,
+            "analysis.linter.DEFAULT_TRACED_AXES drifts from "
+            f"api.TRACED_AXES: {sorted(DEFAULT_TRACED_AXES)} vs "
+            f"{sorted(runner_lib.TRACED_AXES)}",
+            "keep the linter's literal copy in sync with "
+            "fl.runner.TRACED_AXES"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+_VERIFIERS = {
+    "RPR101": lambda: verify_mobility(),
+    "RPR102": lambda: verify_policies(),
+    "RPR103": lambda: verify_spec_coverage(),
+    "RPR104": lambda: verify_engines(),
+    "RPR105": lambda: verify_engine_key(),
+}
+
+
+def verify_all(select: Optional[Iterable[str]] = None,
+               root: Optional[str] = None) -> List[Finding]:
+    """Run the contract verifiers (all, or the selected rule ids).
+
+    ``root`` rewrites absolute finding paths to be relative to it, so
+    findings match the linter's path style.
+    """
+    import os
+
+    rules = set(select) if select else set(CONTRACT_RULES)
+    findings: List[Finding] = []
+    for rule in sorted(rules & set(CONTRACT_RULES)):
+        findings.extend(_VERIFIERS[rule]())
+    if root:
+        root = os.path.abspath(root)
+        for f in findings:
+            if os.path.isabs(f.path):
+                try:
+                    f.path = os.path.relpath(f.path, root)
+                except ValueError:
+                    pass
+    return findings

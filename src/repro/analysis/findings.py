@@ -1,0 +1,109 @@
+"""Finding objects shared by the AST linter and the contract verifier.
+
+A :class:`Finding` is one diagnostic: rule id, file:line, a one-line
+message and a fix hint. Findings are JSON-able (``to_dict``) and carry a
+line-independent ``fingerprint`` so a baseline file keeps matching after
+unrelated edits shift line numbers.
+
+Baselines are plain JSON: ``{"schema": "repro-analysis-baseline-v1",
+"fingerprints": [...]}``. ``apply_baseline`` marks (not drops) matching
+findings, so ``--json`` output still shows what the baseline is hiding.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, Iterable, List, Sequence
+
+SCHEMA = "repro-analysis-v1"
+BASELINE_SCHEMA = "repro-analysis-baseline-v1"
+
+
+@dataclasses.dataclass
+class Finding:
+    rule: str                 # "RPR001" .. "RPR005", "RPR1xx" (contracts)
+    path: str                 # file the finding is anchored to
+    line: int                 # 1-based; 0 = file/registry-level finding
+    message: str
+    hint: str = ""
+    suppressed: bool = False  # matched a `# repro: allow=<rule>` comment
+    reason: str = ""          # the suppression justification text
+    baselined: bool = False   # matched a --baseline fingerprint
+
+    @property
+    def fingerprint(self) -> str:
+        """Line-independent identity used by baseline files."""
+        return f"{self.rule}:{self.path}:{self.message}"
+
+    @property
+    def active(self) -> bool:
+        """True when the finding should fail the gate."""
+        return not (self.suppressed or self.baselined)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "message": self.message, "hint": self.hint,
+                "suppressed": self.suppressed, "reason": self.reason,
+                "baselined": self.baselined,
+                "fingerprint": self.fingerprint}
+
+    def format(self) -> str:
+        mark = ""
+        if self.suppressed:
+            mark = f" [suppressed: {self.reason or 'no reason given'}]"
+        elif self.baselined:
+            mark = " [baselined]"
+        loc = f"{self.path}:{self.line}" if self.line else self.path
+        text = f"{loc}: {self.rule} {self.message}{mark}"
+        if self.hint and not (self.suppressed or self.baselined):
+            text += f"\n    hint: {self.hint}"
+        return text
+
+
+def to_document(findings: Sequence[Finding], *, wall_s: float = 0.0
+                ) -> Dict[str, Any]:
+    """The ``--json`` artifact (and what ``tools/report.py`` renders)."""
+    active = [f for f in findings if f.active]
+    per_rule: Dict[str, int] = {}
+    for f in active:
+        per_rule[f.rule] = per_rule.get(f.rule, 0) + 1
+    return {
+        "schema": SCHEMA,
+        "findings": [f.to_dict() for f in findings],
+        "counts": {
+            "total": len(findings),
+            "active": len(active),
+            "suppressed": sum(f.suppressed for f in findings),
+            "baselined": sum(f.baselined for f in findings),
+            "per_rule": dict(sorted(per_rule.items())),
+        },
+        "wall_s": round(wall_s, 3),
+    }
+
+
+def write_baseline(path: str, findings: Iterable[Finding]) -> None:
+    """Record every *active* finding's fingerprint as accepted debt."""
+    doc = {"schema": BASELINE_SCHEMA,
+           "fingerprints": sorted({f.fingerprint for f in findings
+                                   if f.active})}
+    with open(path, "w") as fh:
+        json.dump(doc, fh, indent=1, sort_keys=True)
+        fh.write("\n")
+
+
+def load_baseline(path: str) -> List[str]:
+    with open(path) as fh:
+        doc = json.load(fh)
+    if doc.get("schema") != BASELINE_SCHEMA:
+        raise ValueError(f"{path}: not a {BASELINE_SCHEMA} baseline file")
+    return list(doc.get("fingerprints", []))
+
+
+def apply_baseline(findings: Sequence[Finding],
+                   fingerprints: Iterable[str]) -> List[Finding]:
+    """Mark findings whose fingerprint the baseline accepts."""
+    known = set(fingerprints)
+    for f in findings:
+        if f.fingerprint in known:
+            f.baselined = True
+    return list(findings)

@@ -1,0 +1,948 @@
+"""AST linter for the JAX footguns this repo actually has (RPR001-005).
+
+Pure-``ast`` analysis — importing this module never imports jax, so
+``tools/analyze.py --no-contracts`` stays sub-second. The rules encode
+the repo's hard-won discipline (see ``docs/ANALYSIS.md`` for the
+catalog and rationale):
+
+RPR001  PRNG key reuse — a key consumed twice without a ``split`` /
+        reassignment between uses, including single keys captured by
+        closures passed to ``lax.scan`` / ``fori_loop`` /
+        ``while_loop`` (each iteration would redraw the same stream).
+RPR002  retrace hazards — config fields named in the traced-axes set
+        (``dfl.lr``, ``dfl.transfer_budget``, ``epochs``) read as
+        static closures inside jitted code or engine builders, and
+        ``if`` / ``while`` on tracer-typed values (function parameters
+        of jitted / loop-body functions). Shape-derived scalars
+        (``x.shape[0]``, ``len(x)``) and ``is None`` tests are static
+        and exempt.
+RPR003  donation-after-use — reading a variable that was passed at a
+        ``donate_argnums`` position of a donating jit call after that
+        call, without rebinding it first (the buffer may be invalid).
+RPR004  host-device sync in hot paths (``core/``, ``kernels/``, the
+        engine loop in ``fl/runner.py``, ``telemetry/metrics.py``):
+        ``.item()`` / ``.tolist()``, ``float()`` / ``int()`` /
+        ``bool()`` on non-constant values, ``np.asarray`` /
+        ``np.array``, ``jax.device_get``. Shape arithmetic
+        (``x.shape[...]``, ``len(x)``) is static and exempt.
+RPR005  dead code — unused imports (``# noqa`` re-exports, ``__all__``
+        members and ``TYPE_CHECKING`` blocks are respected) and
+        unreachable statements (code after return/raise/break/continue,
+        ``if False:`` bodies).
+
+Suppressions: ``# repro: allow=RPR004 <why>`` on the finding's line,
+on the line directly above it, or on a ``def`` line (covers the whole
+function). The justification text is mandatory in spirit and carried
+into the finding.
+"""
+from __future__ import annotations
+
+import ast
+import io
+import os
+import re
+import tokenize
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.findings import Finding
+
+#: rule id -> one-line description (the catalog lives in docs/ANALYSIS.md)
+RULES: Dict[str, str] = {
+    "RPR001": "PRNG key reuse",
+    "RPR002": "retrace hazard",
+    "RPR003": "donation after use",
+    "RPR004": "host-device sync in a hot path",
+    "RPR005": "dead code / unused import",
+}
+
+#: dotted config paths the engines treat as traced scalars. Kept literal
+#: here so the linter never imports jax; the contract verifier
+#: (``repro.analysis.contracts``) pins it equal to
+#: ``repro.fl.runner.TRACED_AXES``.
+DEFAULT_TRACED_AXES = frozenset({"dfl.lr", "dfl.transfer_budget", "epochs"})
+
+#: names that read like experiment configs (for the 1-component traced
+#: axis ``epochs``, which would otherwise match any ``.epochs`` attr)
+_CONFIG_NAMES = frozenset({"cfg", "config", "scenario", "experiment",
+                           "exp", "rs"})
+
+#: RPR004 scope: path fragments of the jit-hot files (normalized to "/")
+HOT_PATH_PARTS = ("core/", "kernels/", "fl/runner.py",
+                  "telemetry/metrics.py")
+
+#: jax.random callees that do NOT consume a key's stream position
+#: (fold_in derives an independent stream; the constructors create keys)
+_NONCONSUMING = frozenset({"fold_in", "PRNGKey", "key", "key_data",
+                           "wrap_key_data", "key_impl", "clone"})
+
+_LOOP_COMBINATORS = {
+    "jax.lax.scan": (0,), "jax.lax.fori_loop": (2,),
+    "jax.lax.while_loop": (0, 1), "jax.lax.cond": (1, 2),
+    "jax.lax.switch": (1,),
+}
+_TRACING_TRANSFORMS = ("jax.jit", "jax.vmap", "jax.pmap", "jax.grad",
+                       "jax.value_and_grad")
+
+#: attributes of array values that are static at trace time
+_STATIC_ATTRS = frozenset({"shape", "ndim", "dtype", "size"})
+
+_SUPPRESS_RE = re.compile(r"#\s*repro:\s*allow=([A-Za-z0-9_,]+)\s*(.*)")
+_NOQA_RE = re.compile(r"#\s*noqa\b", re.IGNORECASE)
+
+
+# ---------------------------------------------------------------------------
+# shared AST utilities
+# ---------------------------------------------------------------------------
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` Attribute/Name chain -> ``"a.b.c"``, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _alias_map(tree: ast.Module) -> Dict[str, str]:
+    """Import-alias resolution: ``jnp`` -> ``jax.numpy``, ``np`` ->
+    ``numpy``, ``lax`` -> ``jax.lax`` (from-imports), etc."""
+    aliases: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.asname:
+                    aliases[a.asname] = a.name
+                else:
+                    head = a.name.split(".")[0]
+                    aliases[head] = head
+        elif isinstance(node, ast.ImportFrom) and node.module \
+                and not node.level:
+            for a in node.names:
+                if a.name != "*":
+                    aliases[a.asname or a.name] = f"{node.module}.{a.name}"
+    return aliases
+
+
+def _canon(dotted: Optional[str], aliases: Dict[str, str]) -> Optional[str]:
+    if dotted is None:
+        return None
+    head, _, rest = dotted.partition(".")
+    base = aliases.get(head, head)
+    return f"{base}.{rest}" if rest else base
+
+
+def _call_name(node: ast.Call, aliases: Dict[str, str]) -> Optional[str]:
+    return _canon(_dotted(node.func), aliases)
+
+
+def _target_names(target: ast.AST) -> List[str]:
+    """Bare names bound by an assignment target (tuples flattened)."""
+    if isinstance(target, ast.Name):
+        return [target.id]
+    if isinstance(target, (ast.Tuple, ast.List)):
+        out: List[str] = []
+        for elt in target.elts:
+            out.extend(_target_names(elt))
+        return out
+    if isinstance(target, ast.Starred):
+        return _target_names(target.value)
+    return []
+
+
+def _functions(tree: ast.Module) -> List[ast.FunctionDef]:
+    return [n for n in ast.walk(tree)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+
+
+def _own_statements(body: Sequence[ast.stmt]) -> Iterable[ast.stmt]:
+    """The statements of a block, nested function bodies excluded."""
+    for stmt in body:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            continue
+        yield stmt
+
+
+def _walk_shallow(node: ast.AST) -> Iterable[ast.AST]:
+    """ast.walk that does not descend into nested function/class defs."""
+    stack = [node]
+    while stack:
+        n = stack.pop()
+        yield n
+        for child in ast.iter_child_nodes(n):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.ClassDef, ast.Lambda)):
+                continue
+            stack.append(child)
+
+
+# ---------------------------------------------------------------------------
+# suppression comments
+# ---------------------------------------------------------------------------
+
+class Suppressions:
+    """``# repro: allow=RPRnnn[,RPRmmm] why`` comments of one file.
+
+    Matching order: the finding's own line, the line directly above, or
+    a ``def``-line comment covering the whole function body."""
+
+    def __init__(self, src: str, tree: Optional[ast.Module]):
+        self.line_rules: Dict[int, Set[str]] = {}
+        self.line_reason: Dict[int, str] = {}
+        self.noqa_lines: Set[int] = set()
+        try:
+            tokens = list(tokenize.generate_tokens(
+                io.StringIO(src).readline))
+        except (tokenize.TokenError, IndentationError):
+            tokens = []
+        for tok in tokens:
+            if tok.type != tokenize.COMMENT:
+                continue
+            if _NOQA_RE.search(tok.string):
+                self.noqa_lines.add(tok.start[0])
+            m = _SUPPRESS_RE.search(tok.string)
+            if m:
+                rules = {r.strip().upper() for r in m.group(1).split(",")
+                         if r.strip()}
+                line = tok.start[0]
+                self.line_rules.setdefault(line, set()).update(rules)
+                self.line_reason[line] = m.group(2).strip()
+        # def-scoped: a suppression on the def line (or a decorator line)
+        # covers the function body
+        self.ranges: List[Tuple[int, int, Set[str], str]] = []
+        for fn in _functions(tree) if tree is not None else []:
+            # the def line, decorator lines, or the line directly above
+            # the def/first decorator all scope to the whole function
+            head = [fn.lineno] + [d.lineno for d in fn.decorator_list]
+            head.append(min(head) - 1)
+            for line in head:
+                if line in self.line_rules:
+                    self.ranges.append(
+                        (fn.lineno, fn.end_lineno or fn.lineno,
+                         self.line_rules[line],
+                         self.line_reason.get(line, "")))
+
+    def match(self, rule: str, line: int) -> Optional[str]:
+        """The justification text when (rule, line) is suppressed."""
+        for cand in (line, line - 1):
+            if rule in self.line_rules.get(cand, ()):
+                return self.line_reason.get(cand, "") or "(no reason)"
+        for start, end, rules, reason in self.ranges:
+            if rule in rules and start <= line <= end:
+                return reason or "(no reason)"
+        return None
+
+
+# ---------------------------------------------------------------------------
+# RPR001 — PRNG key reuse
+# ---------------------------------------------------------------------------
+
+def _key_consumptions(stmt: ast.stmt, aliases: Dict[str, str]
+                      ) -> List[Tuple[str, int]]:
+    """(name, line) for every bare-Name key consumed by a jax.random
+    call inside ``stmt`` (nested defs excluded)."""
+    out: List[Tuple[str, int]] = []
+    for node in _walk_shallow(stmt):
+        if not isinstance(node, ast.Call):
+            continue
+        name = _call_name(node, aliases)
+        if not name or not name.startswith("jax.random."):
+            continue
+        if name.rsplit(".", 1)[1] in _NONCONSUMING:
+            continue
+        if node.args and isinstance(node.args[0], ast.Name):
+            out.append((node.args[0].id, node.lineno))
+    return out
+
+
+def _assigned_names(stmt: ast.stmt) -> List[str]:
+    if isinstance(stmt, ast.Assign):
+        out: List[str] = []
+        for t in stmt.targets:
+            out.extend(_target_names(t))
+        return out
+    if isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+        return _target_names(stmt.target)
+    if isinstance(stmt, ast.For):
+        return _target_names(stmt.target)
+    if isinstance(stmt, ast.With):
+        out = []
+        for item in stmt.items:
+            if item.optional_vars is not None:
+                out.extend(_target_names(item.optional_vars))
+        return out
+    return []
+
+
+def _scan_key_block(body: Sequence[ast.stmt], consumed: Dict[str, int],
+                    aliases: Dict[str, str],
+                    hits: Set[Tuple[str, int, int]]) -> None:
+    """Linear abstract scan: flag a second consumption of a key name
+    with no rebinding in between. ``hits`` dedupes loop double-passes."""
+    for stmt in _own_statements(body):
+        if isinstance(stmt, ast.If):
+            for node in _walk_shallow(stmt.test):
+                pass  # consumptions in the test are handled below
+            for name, line in _key_consumptions_expr(stmt.test, aliases):
+                _consume(name, line, consumed, hits)
+            before = dict(consumed)
+            _scan_key_block(stmt.body, consumed, aliases, hits)
+            other = dict(before)
+            _scan_key_block(stmt.orelse, other, aliases, hits)
+            for name, line in other.items():  # union of branch outcomes
+                consumed.setdefault(name, line)
+            continue
+        if isinstance(stmt, (ast.For, ast.While)):
+            if isinstance(stmt, ast.While):
+                for name, line in _key_consumptions_expr(stmt.test, aliases):
+                    _consume(name, line, consumed, hits)
+            # two passes catch a consume-without-rebind across iterations
+            for _ in range(2):
+                for t in _assigned_names(stmt):
+                    consumed.pop(t, None)
+                _scan_key_block(stmt.body, consumed, aliases, hits)
+            _scan_key_block(stmt.orelse, consumed, aliases, hits)
+            continue
+        if isinstance(stmt, ast.Try):
+            _scan_key_block(stmt.body, consumed, aliases, hits)
+            for handler in stmt.handlers:
+                _scan_key_block(handler.body, consumed, aliases, hits)
+            _scan_key_block(stmt.orelse, consumed, aliases, hits)
+            _scan_key_block(stmt.finalbody, consumed, aliases, hits)
+            continue
+        if isinstance(stmt, ast.With):
+            for name, line in _key_consumptions(stmt, aliases):
+                _consume(name, line, consumed, hits)
+            for t in _assigned_names(stmt):
+                consumed.pop(t, None)
+            _scan_key_block(stmt.body, consumed, aliases, hits)
+            continue
+        # plain statement: consumptions first, then rebindings clear
+        for name, line in _key_consumptions(stmt, aliases):
+            _consume(name, line, consumed, hits)
+        for t in _assigned_names(stmt):
+            consumed.pop(t, None)
+
+
+def _key_consumptions_expr(expr: ast.expr, aliases: Dict[str, str]
+                           ) -> List[Tuple[str, int]]:
+    wrapper = ast.Expr(value=expr)
+    return _key_consumptions(wrapper, aliases)
+
+
+def _consume(name: str, line: int, consumed: Dict[str, int],
+             hits: Set[Tuple[str, int, int]]) -> None:
+    if name in consumed:
+        hits.add((name, consumed[name], line))
+    else:
+        consumed[name] = line
+
+
+def _single_key_names(fn_body: Sequence[ast.stmt],
+                      aliases: Dict[str, str]) -> Set[str]:
+    """Names bound to a *single* PRNG key in this scope: PRNGKey /
+    fold_in results, or elements of a tuple-unpacked split. A plain
+    ``keys = split(k, n)`` binds a key *array* (safe to capture and
+    index per-iteration) and is excluded."""
+    out: Set[str] = set()
+    for stmt in fn_body:
+        for node in _walk_shallow(stmt):
+            if not isinstance(node, ast.Assign):
+                continue
+            val = node.value
+            if not isinstance(val, ast.Call):
+                continue
+            name = _call_name(val, aliases)
+            if not name or not name.startswith("jax.random."):
+                continue
+            kind = name.rsplit(".", 1)[1]
+            for t in node.targets:
+                if kind in ("PRNGKey", "key", "fold_in") \
+                        and isinstance(t, ast.Name):
+                    out.add(t.id)
+                elif kind == "split" and isinstance(t, (ast.Tuple, ast.List)):
+                    out.update(_target_names(t))
+    return out
+
+
+def _loop_body_functions(fn: ast.FunctionDef, aliases: Dict[str, str]
+                         ) -> List[ast.AST]:
+    """Nested functions / lambdas passed as loop-combinator bodies."""
+    named: Set[str] = set()
+    inline: List[ast.AST] = []
+    for node in _walk_shallow(ast.Module(body=list(fn.body),
+                                         type_ignores=[])):
+        if not isinstance(node, ast.Call):
+            continue
+        cname = _call_name(node, aliases)
+        positions = _LOOP_COMBINATORS.get(cname or "")
+        if not positions:
+            continue
+        for pos in positions:
+            if pos < len(node.args):
+                arg = node.args[pos]
+                if isinstance(arg, ast.Name):
+                    named.add(arg.id)
+                elif isinstance(arg, (ast.Lambda,)):
+                    inline.append(arg)
+    for stmt in fn.body:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and stmt.name in named:
+            inline.append(stmt)
+    # also catch bodies defined anywhere within fn (e.g. inside an if)
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and node is not fn and node.name in named \
+                and node not in inline:
+            inline.append(node)
+    return inline
+
+
+def check_rpr001(tree: ast.Module, aliases: Dict[str, str], path: str
+                 ) -> List[Finding]:
+    findings: List[Finding] = []
+    scopes: List[Tuple[Sequence[ast.stmt], Optional[ast.FunctionDef]]] = \
+        [(tree.body, None)]
+    scopes += [(fn.body, fn) for fn in _functions(tree)]
+    for body, fn in scopes:
+        hits: Set[Tuple[str, int, int]] = set()
+        _scan_key_block(body, {}, aliases, hits)
+        for name, first, second in sorted(hits, key=lambda h: h[2]):
+            findings.append(Finding(
+                rule="RPR001", path=path, line=second,
+                message=(f"PRNG key '{name}' consumed again without a "
+                         f"split (first used at line {first})"),
+                hint="split/fold_in the key (or rebind it from split) "
+                     "between uses; identical keys draw identical "
+                     "streams"))
+        if fn is None:
+            continue
+        # keys captured by closures passed to lax loop combinators
+        key_names = _single_key_names(fn.body, aliases)
+        key_names.update(a.arg for a in fn.args.args
+                         if a.arg in ("key", "rng"))
+        for body_fn in _loop_body_functions(fn, aliases):
+            params = {a.arg for a in body_fn.args.args} \
+                if hasattr(body_fn, "args") else set()
+            inner = body_fn.body if isinstance(body_fn, ast.Lambda) \
+                else ast.Module(body=list(body_fn.body), type_ignores=[])
+            # names rebound inside the body (e.g. carry unpacking) are
+            # locals, not captures of the enclosing key
+            if not isinstance(inner, ast.expr):
+                for node in ast.walk(inner):
+                    if isinstance(node, ast.stmt):
+                        params.update(_assigned_names(node))
+            for node in ast.walk(inner):
+                if not isinstance(node, ast.Call):
+                    continue
+                cname = _call_name(node, aliases)
+                if not cname or not cname.startswith("jax.random."):
+                    continue
+                if cname.rsplit(".", 1)[1] in _NONCONSUMING:
+                    continue
+                if node.args and isinstance(node.args[0], ast.Name):
+                    kname = node.args[0].id
+                    if kname in key_names and kname not in params:
+                        findings.append(Finding(
+                            rule="RPR001", path=path, line=node.lineno,
+                            message=(f"PRNG key '{kname}' captured by a "
+                                     "loop-body closure: every iteration "
+                                     "draws from the same key"),
+                            hint="fold_in the loop index, or thread the "
+                                 "key through the scan/fori carry"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# RPR002 — retrace hazards
+# ---------------------------------------------------------------------------
+
+_BUILDER_RE = re.compile(r"^make_.*(engine|epoch|step|fn)", re.IGNORECASE)
+
+
+def _is_jit_decorator(dec: ast.expr, aliases: Dict[str, str]) -> bool:
+    name = _canon(_dotted(dec), aliases)
+    if name in _TRACING_TRANSFORMS:
+        return True
+    if isinstance(dec, ast.Call):
+        cname = _call_name(dec, aliases)
+        if cname in _TRACING_TRANSFORMS:
+            return True
+        if cname == "functools.partial" and dec.args:
+            return _canon(_dotted(dec.args[0]), aliases) \
+                in _TRACING_TRANSFORMS
+    return False
+
+
+def _jit_connected(tree: ast.Module, aliases: Dict[str, str]
+                   ) -> List[ast.FunctionDef]:
+    """Functions whose bodies are traced: @jax.jit-decorated, wrapped by
+    a same-module ``jax.jit(f, ...)`` / ``jax.vmap(f)`` call, passed as
+    a lax loop-combinator body, or nested inside an engine/epoch builder
+    (``make_*engine*`` etc. — those closures become the jitted engine).
+    """
+    marked: List[ast.FunctionDef] = []
+    wrapped_names: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            cname = _call_name(node, aliases)
+            if cname in _TRACING_TRANSFORMS and node.args \
+                    and isinstance(node.args[0], ast.Name):
+                wrapped_names.add(node.args[0].id)
+            positions = _LOOP_COMBINATORS.get(cname or "")
+            if positions:
+                for pos in positions:
+                    if pos < len(node.args) \
+                            and isinstance(node.args[pos], ast.Name):
+                        wrapped_names.add(node.args[pos].id)
+    for fn in _functions(tree):
+        if any(_is_jit_decorator(d, aliases) for d in fn.decorator_list):
+            marked.append(fn)
+        elif fn.name in wrapped_names:
+            marked.append(fn)
+    # nested defs inside engine builders
+    for fn in _functions(tree):
+        if _BUILDER_RE.match(fn.name):
+            for node in ast.walk(fn):
+                if isinstance(node, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)) \
+                        and node is not fn and node not in marked:
+                    marked.append(node)
+    return marked
+
+
+def _tainted_expr(expr: ast.expr, tainted: Set[str]) -> Optional[str]:
+    """The first tainted (tracer-typed) name read by ``expr`` outside a
+    static context, or None. Static contexts: ``x.shape`` / ``.ndim`` /
+    ``.dtype`` / ``.size`` attribute chains, ``len()`` / ``isinstance()``
+    calls, and ``is (not) None`` comparisons."""
+
+    def visit(node: ast.AST) -> Optional[str]:
+        if isinstance(node, ast.Attribute) and node.attr in _STATIC_ATTRS:
+            return None
+        if isinstance(node, ast.Call):
+            cname = _dotted(node.func)
+            if cname in ("len", "isinstance", "getattr", "hasattr",
+                         "type"):
+                return None
+        if isinstance(node, ast.Compare) and all(
+                isinstance(op, (ast.Is, ast.IsNot))
+                for op in node.ops):
+            return None
+        if isinstance(node, ast.Name) and node.id in tainted:
+            return node.id
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.Lambda)):
+                continue
+            hit = visit(child)
+            if hit:
+                return hit
+        return None
+
+    return visit(expr)
+
+
+def check_rpr002(tree: ast.Module, aliases: Dict[str, str], path: str,
+                 traced_axes: Iterable[str] = DEFAULT_TRACED_AXES
+                 ) -> List[Finding]:
+    findings: List[Finding] = []
+    axes = tuple(traced_axes)
+    for fn in _jit_connected(tree, aliases):
+        params = {a.arg for a in fn.args.args}
+        params.update(a.arg for a in fn.args.kwonlyargs)
+        params.update(a.arg for a in fn.args.posonlyargs)
+        assigned: Set[str] = set()
+        for stmt in ast.walk(fn):
+            for name in _assigned_names(stmt) \
+                    if isinstance(stmt, ast.stmt) else []:
+                assigned.add(name)
+
+        # (a) traced-axis config fields read as static closures
+        for node in _walk_shallow(fn):
+            dotted = _dotted(node) if isinstance(node, ast.Attribute) \
+                else None
+            if not dotted:
+                continue
+            for axis in axes:
+                if dotted == axis or dotted.endswith("." + axis):
+                    base = dotted[: -(len(axis) + 1)] \
+                        if dotted.endswith("." + axis) else ""
+                    if "." in base:
+                        continue           # only cfg-rooted chains
+                    if base and (base in params or base in assigned):
+                        continue           # threaded in, not closed over
+                    if "." not in axis and base not in _CONFIG_NAMES:
+                        continue           # `.epochs` needs a cfg-ish base
+                    findings.append(Finding(
+                        rule="RPR002", path=path, line=node.lineno,
+                        message=(f"traced-axis config field '{dotted}' "
+                                 f"closed over statically inside jitted "
+                                 f"code ('{axis}' is in TRACED_AXES)"),
+                        hint="thread it through the jitted function's "
+                             "arguments so sweeps don't retrace"))
+                    break
+
+        # (b) Python control flow on tracer-typed values
+        taint = set(params)
+        for stmt in _walk_shallow(fn):
+            if isinstance(stmt, ast.Assign):
+                if _tainted_expr(stmt.value, taint):
+                    for t in stmt.targets:
+                        taint.update(_target_names(t))
+            elif isinstance(stmt, (ast.If, ast.While)):
+                hit = _tainted_expr(stmt.test, taint)
+                if hit:
+                    kind = "while" if isinstance(stmt, ast.While) else "if"
+                    findings.append(Finding(
+                        rule="RPR002", path=path, line=stmt.lineno,
+                        message=(f"`{kind}` on tracer-typed value "
+                                 f"'{hit}' inside jitted code (traced "
+                                 "booleans cannot branch at trace time)"),
+                        hint="use jnp.where / lax.cond / lax.select, or "
+                             "derive the branch from static shape info"))
+            elif isinstance(stmt, ast.Assert):
+                hit = _tainted_expr(stmt.test, taint)
+                if hit:
+                    findings.append(Finding(
+                        rule="RPR002", path=path, line=stmt.lineno,
+                        message=(f"`assert` on tracer-typed value "
+                                 f"'{hit}' inside jitted code"),
+                        hint="use checkify or a static precondition"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# RPR003 — donation after use
+# ---------------------------------------------------------------------------
+
+def _donated_positions(call: ast.Call, aliases: Dict[str, str]
+                       ) -> Optional[Set[int]]:
+    """donate_argnums positions of a ``jax.jit(f, donate_argnums=...)``
+    call (ints collected from any literal inside the kwarg), else None."""
+    if _call_name(call, aliases) != "jax.jit":
+        return None
+    for kw in call.keywords:
+        if kw.arg in ("donate_argnums", "donate_argnames"):
+            positions = {n.value for n in ast.walk(kw.value)
+                         if isinstance(n, ast.Constant)
+                         and isinstance(n.value, int)
+                         and not isinstance(n.value, bool)}
+            return positions or None
+    return None
+
+
+def _scan_donate_block(body: Sequence[ast.stmt],
+                       donated_fns: Dict[str, Set[int]],
+                       dead: Dict[str, int],
+                       aliases: Dict[str, str],
+                       hits: Set[Tuple[str, int, int]]) -> None:
+    for stmt in _own_statements(body):
+        if isinstance(stmt, ast.If):
+            before = dict(dead)
+            _scan_donate_block(stmt.body, donated_fns, dead, aliases, hits)
+            other = dict(before)
+            _scan_donate_block(stmt.orelse, donated_fns, other, aliases,
+                               hits)
+            for name, line in other.items():
+                dead.setdefault(name, line)
+            continue
+        if isinstance(stmt, (ast.For, ast.While)):
+            for _ in range(2):
+                _scan_donate_block(stmt.body, donated_fns, dead, aliases,
+                                   hits)
+            continue
+        # 1) reads of dead names in this statement (before rebinding)
+        reads = {n.id for n in _walk_shallow(stmt)
+                 if isinstance(n, ast.Name)
+                 and isinstance(n.ctx, ast.Load)}
+        for name in sorted(reads & set(dead)):
+            hits.add((name, dead[name], stmt.lineno))
+            dead.pop(name)
+        # 2) record donating calls; 3) new donated-jit bindings
+        for node in _walk_shallow(stmt):
+            if not isinstance(node, ast.Call):
+                continue
+            positions = _donated_positions(node, aliases)
+            if positions is not None and isinstance(stmt, ast.Assign):
+                for t in stmt.targets:
+                    tname = _dotted(t)
+                    if tname:
+                        donated_fns[tname] = positions
+            fname = _dotted(node.func)
+            if fname in donated_fns:
+                for pos in donated_fns[fname]:
+                    if pos < len(node.args) \
+                            and isinstance(node.args[pos], ast.Name):
+                        dead[node.args[pos].id] = node.lineno
+        # 4) rebindings resurrect names
+        for t in _assigned_names(stmt):
+            dead.pop(t, None)
+
+
+def check_rpr003(tree: ast.Module, aliases: Dict[str, str], path: str
+                 ) -> List[Finding]:
+    findings: List[Finding] = []
+    # donated-jit bindings visible anywhere (closures call them from
+    # enclosing scopes); scope-local rebinds still override
+    global_donated: Dict[str, Set[int]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            positions = _donated_positions(node.value, aliases)
+            if positions:
+                for t in node.targets:
+                    tname = _dotted(t)
+                    if tname:
+                        global_donated[tname] = positions
+    scopes: List[Sequence[ast.stmt]] = [tree.body]
+    scopes += [fn.body for fn in _functions(tree)]
+    for body in scopes:
+        hits: Set[Tuple[str, int, int]] = set()
+        _scan_donate_block(body, dict(global_donated), {}, aliases, hits)
+        for name, donated_line, use_line in sorted(hits,
+                                                   key=lambda h: h[2]):
+            findings.append(Finding(
+                rule="RPR003", path=path, line=use_line,
+                message=(f"'{name}' read after being donated at line "
+                         f"{donated_line} (donate_argnums invalidates "
+                         "the buffer)"),
+                hint="rebind the variable from the donating call's "
+                     "result, or drop it from donate_argnums"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# RPR004 — host-device sync in hot paths
+# ---------------------------------------------------------------------------
+
+_NP_SYNC = frozenset({"numpy.asarray", "numpy.array", "jax.device_get"})
+_SYNC_METHODS = frozenset({"item", "tolist"})
+_CAST_BUILTINS = frozenset({"float", "int", "bool"})
+
+
+def is_hot_path(path: str) -> bool:
+    norm = path.replace(os.sep, "/")
+    return any(part in norm for part in HOT_PATH_PARTS)
+
+
+def _static_cast_arg(arg: ast.expr) -> bool:
+    """Casts of shape arithmetic / constants are trace-static."""
+    if isinstance(arg, ast.Constant):
+        return True
+    for node in ast.walk(arg):
+        if isinstance(node, ast.Attribute) and node.attr == "shape":
+            return True
+        if isinstance(node, ast.Call):
+            name = _dotted(node.func)
+            if name == "len":
+                return True
+    return False
+
+
+def check_rpr004(tree: ast.Module, aliases: Dict[str, str], path: str
+                 ) -> List[Finding]:
+    if not is_hot_path(path):
+        return []
+    findings: List[Finding] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if isinstance(node.func, ast.Attribute) \
+                and node.func.attr in _SYNC_METHODS and not node.args:
+            findings.append(Finding(
+                rule="RPR004", path=path, line=node.lineno,
+                message=f".{node.func.attr}() forces a device-to-host "
+                        "sync in a hot path",
+                hint="keep the reduction on device (jnp) or move the "
+                     "transfer to the eval boundary; suppress with "
+                     "`# repro: allow=RPR004 <why>` if intentional"))
+            continue
+        cname = _call_name(node, aliases)
+        if cname in _NP_SYNC and node.args \
+                and not isinstance(node.args[0], ast.Constant):
+            findings.append(Finding(
+                rule="RPR004", path=path, line=node.lineno,
+                message=f"{cname.split('.')[0]}.{cname.split('.')[-1]} "
+                        "on a (potential) device value blocks on "
+                        "transfer in a hot path",
+                hint="use jnp on device, or suppress with "
+                     "`# repro: allow=RPR004 <why>` at the host "
+                     "boundary"))
+        elif cname in _CAST_BUILTINS and len(node.args) == 1 \
+                and not _static_cast_arg(node.args[0]):
+            findings.append(Finding(
+                rule="RPR004", path=path, line=node.lineno,
+                message=f"{cname}() on a (potential) device value "
+                        "forces a host sync in a hot path",
+                hint="keep it as a jnp scalar, or suppress with "
+                     "`# repro: allow=RPR004 <why>` if this is the "
+                     "intended host boundary"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# RPR005 — dead code / unused imports
+# ---------------------------------------------------------------------------
+
+def _module_all(tree: ast.Module) -> Set[str]:
+    names: Set[str] = set()
+    for stmt in tree.body:
+        if isinstance(stmt, ast.Assign):
+            for t in stmt.targets:
+                if isinstance(t, ast.Name) and t.id == "__all__":
+                    for node in ast.walk(stmt.value):
+                        if isinstance(node, ast.Constant) \
+                                and isinstance(node.value, str):
+                            names.add(node.value)
+    return names
+
+
+def _type_checking_ranges(tree: ast.Module) -> List[Tuple[int, int]]:
+    out: List[Tuple[int, int]] = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.If):
+            dotted = _dotted(node.test)
+            if dotted in ("TYPE_CHECKING", "typing.TYPE_CHECKING"):
+                out.append((node.lineno, node.end_lineno or node.lineno))
+    return out
+
+
+def check_rpr005(tree: ast.Module, aliases: Dict[str, str], path: str,
+                 suppressions: Optional[Suppressions] = None
+                 ) -> List[Finding]:
+    findings: List[Finding] = []
+    exported = _module_all(tree)
+    tc_ranges = _type_checking_ranges(tree)
+    noqa = suppressions.noqa_lines if suppressions else set()
+
+    # --- unused imports ---------------------------------------------------
+    imports: List[Tuple[str, ast.stmt]] = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                imports.append((a.asname or a.name.split(".")[0], node))
+        elif isinstance(node, ast.ImportFrom):
+            if node.module == "__future__":
+                continue
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                imports.append((a.asname or a.name, node))
+    used: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Name) and not isinstance(node.ctx,
+                                                         ast.Store):
+            used.add(node.id)
+        elif isinstance(node, ast.Attribute):
+            pass  # the base Name is visited separately
+    for name, node in imports:
+        if name in used or name in exported or name == "_":
+            continue
+        lines = range(node.lineno, (node.end_lineno or node.lineno) + 1)
+        if any(ln in noqa for ln in lines):
+            continue  # explicit re-export convention
+        if any(start <= node.lineno <= end for start, end in tc_ranges):
+            continue  # typing-only imports live in string annotations
+        findings.append(Finding(
+            rule="RPR005", path=path, line=node.lineno,
+            message=f"unused import '{name}'",
+            hint="remove it, or mark an intentional re-export with "
+                 "`# noqa: F401`"))
+
+    # --- unreachable statements -------------------------------------------
+    def scan_block(body: Sequence[ast.stmt]) -> None:
+        terminated = False
+        for stmt in body:
+            if terminated:
+                findings.append(Finding(
+                    rule="RPR005", path=path, line=stmt.lineno,
+                    message="unreachable code (a break in control flow "
+                            "precedes it)",
+                    hint="delete it or restructure the early exit"))
+                break
+            if isinstance(stmt, (ast.Return, ast.Raise, ast.Break,
+                                 ast.Continue)):
+                terminated = True
+            if isinstance(stmt, (ast.If, ast.While)) \
+                    and isinstance(stmt.test, ast.Constant) \
+                    and not stmt.test.value and stmt.body:
+                findings.append(Finding(
+                    rule="RPR005", path=path, line=stmt.body[0].lineno,
+                    message="unreachable branch (constant-false test)",
+                    hint="delete the dead branch"))
+
+    for fn in _functions(tree):
+        scan_block(fn.body)
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.If, ast.While, ast.For)):
+                scan_block(node.body)
+                scan_block(node.orelse)
+    scan_block(tree.body)
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+_CHECKS = {
+    "RPR001": check_rpr001,
+    "RPR002": check_rpr002,
+    "RPR003": check_rpr003,
+    "RPR004": check_rpr004,
+    "RPR005": None,  # needs suppressions; dispatched explicitly below
+}
+
+
+def lint_source(src: str, path: str,
+                select: Optional[Iterable[str]] = None) -> List[Finding]:
+    """Lint one file's source text. ``select`` limits to those rule ids
+    (default: all). Suppression comments mark findings, never drop them.
+    """
+    rules = set(select) if select else set(RULES)
+    try:
+        tree = ast.parse(src)
+    except SyntaxError as e:
+        return [Finding(rule="RPR000", path=path, line=e.lineno or 0,
+                        message=f"syntax error: {e.msg}",
+                        hint="the file does not parse; fix it first")]
+    aliases = _alias_map(tree)
+    supp = Suppressions(src, tree)
+    findings: List[Finding] = []
+    for rule in sorted(rules & set(RULES)):
+        if rule == "RPR005":
+            findings.extend(check_rpr005(tree, aliases, path, supp))
+        else:
+            check = _CHECKS[rule]
+            findings.extend(check(tree, aliases, path))
+    for f in findings:
+        reason = supp.match(f.rule, f.line)
+        if reason is not None:
+            f.suppressed = True
+            f.reason = reason
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings
+
+
+def lint_paths(paths: Sequence[str],
+               select: Optional[Iterable[str]] = None) -> List[Finding]:
+    """Lint every ``.py`` file under the given files/directories."""
+    files: List[str] = []
+    for p in paths:
+        if os.path.isdir(p):
+            for root, dirs, names in os.walk(p):
+                dirs[:] = sorted(d for d in dirs
+                                 if d not in ("__pycache__", ".git"))
+                files.extend(os.path.join(root, n) for n in sorted(names)
+                             if n.endswith(".py"))
+        elif p.endswith(".py"):
+            files.append(p)
+    findings: List[Finding] = []
+    for fname in files:
+        with open(fname, encoding="utf-8") as fh:
+            src = fh.read()
+        findings.extend(lint_source(src, fname, select=select))
+    return findings

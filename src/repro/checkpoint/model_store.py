@@ -11,7 +11,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
-from typing import List, Optional
+from typing import List
 
 from repro.checkpoint.io import load_pytree, save_pytree
 

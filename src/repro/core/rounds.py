@@ -5,7 +5,6 @@ cache) and Centralized FL (server-side FedAvg).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Optional, Tuple
 
 import jax
@@ -13,10 +12,9 @@ import jax.numpy as jnp
 
 from repro.core import gossip
 from repro.core.aggregate import aggregate
-from repro.core.cache import ModelCache, evict_stale, init_cache
+from repro.core.cache import ModelCache, init_cache
 from repro.core.local_update import fleet_local_update
 from repro.telemetry import metrics as metrics_lib
-from repro.utils.tree import tree_take
 
 
 @dataclasses.dataclass
@@ -504,7 +502,7 @@ def make_sharded_fleet_engine(*, mesh, algorithm: str, mob_model, mob_cfg,
         donate = jax.default_backend() != "cpu"
 
     shard_map_fn, check_kw = _shard_map_fn()
-    ndev = int(mesh.devices.size)
+    ndev = int(mesh.devices.size)  # repro: allow=RPR004 static mesh size read once at build time, not a device value
     axis = mesh.axis_names[0]
 
     if algorithm == "cached":

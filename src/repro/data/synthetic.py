@@ -9,7 +9,6 @@ what the convergence-ordering claims need.
 """
 from __future__ import annotations
 
-from typing import Tuple
 
 import numpy as np
 

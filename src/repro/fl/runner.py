@@ -207,6 +207,7 @@ def _drive(rs: ResolvedScenario, fleet: Fleet, *,
     stop = False
     t0 = time.perf_counter()
 
+    # repro: allow=RPR004 eval boundary: scalars-only host transfer once per eval_every epochs
     def evaluate(ep):
         """Eval at 0-based epoch index ep; returns True to early-stop."""
         nonlocal lr, best, best_epoch

@@ -13,7 +13,6 @@ stalls on them. BLOCK_D is sized so a tile fits comfortably in VMEM
 """
 from __future__ import annotations
 
-import functools
 import os
 from typing import Optional
 

@@ -11,7 +11,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import cache_aggregate as _ca
 from repro.kernels import decode_attention as _da

@@ -17,7 +17,6 @@ Oracle: the pure-jnp intra-chunk math in repro.models.ssm.ssd_chunked.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -38,7 +38,6 @@ from repro.launch.mesh import make_production_mesh
 from repro.launch.roofline import (RooflineTerms, collective_bytes,
                                    extrapolate, format_row, model_flops,
                                    summarize_memory)
-from repro.models import registry as models
 from repro.sharding.rules import (ShardingRules, batch_specs,
                                   decode_state_specs, param_specs)
 

@@ -26,9 +26,8 @@ way. MODEL_FLOPS uses 6·N_active·tokens (train) / 2·N_active·tokens
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
-from typing import Dict, Optional
+from typing import Dict
 
 from repro.configs.base import InputShape, ModelConfig
 

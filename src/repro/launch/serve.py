@@ -38,14 +38,17 @@ def main() -> None:
 
     B, S = args.batch, args.prompt_len
     max_len = S + args.decode_tokens
-    batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab)}
+    # distinct streams: `key` already seeded the params above
+    k_tok, k_img, k_frames = jax.random.split(
+        jax.random.fold_in(key, 1), 3)
+    batch = {"tokens": jax.random.randint(k_tok, (B, S), 0, cfg.vocab)}
     if cfg.family == "vlm":
         batch["image_embeds"] = jax.random.normal(
-            key, (B, cfg.image_tokens, cfg.d_model),
+            k_img, (B, cfg.image_tokens, cfg.d_model),
             jnp.dtype(cfg.compute_dtype))
     if cfg.enc_dec:
         batch = {"frames": jax.random.normal(
-            key, (B, cfg.enc_context, cfg.d_model),
+            k_frames, (B, cfg.enc_context, cfg.d_model),
             jnp.dtype(cfg.compute_dtype))}
 
     t0 = time.time()

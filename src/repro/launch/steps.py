@@ -10,9 +10,8 @@ decode (decode_32k, long_500k) — one token against the KV/SSM state.
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -187,8 +187,10 @@ def run_pod(args, overrides: dict) -> dict:
                            n_seq=agents * batch_size * 4)
     toks = jnp.asarray(toks)
 
+    kinit = jax.random.split(key, agents + 1)
     params = jax.vmap(lambda k: models.init_params(cfg, k))(
-        jax.random.split(key, agents))
+        kinit[:agents])
+    key = kinit[agents]   # keep the loop's stream disjoint from init
     cache = steps_lib.init_pod_cache(
         cfg, models.init_params(cfg, key), cache_size, agents=agents)
     # same unlimited-sentinel normalization as the fleet path

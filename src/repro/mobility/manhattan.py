@@ -17,7 +17,7 @@ group-based caching case study (§5.5).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

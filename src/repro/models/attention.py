@@ -8,7 +8,6 @@ Shapes use the grouped layout to avoid materializing repeated KV heads:
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -6,7 +6,6 @@ callers provide precomputed frame embeddings [B, frames, d_model].
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

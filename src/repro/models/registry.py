@@ -7,7 +7,6 @@ from __future__ import annotations
 
 from typing import Any, Dict, Optional
 
-import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig

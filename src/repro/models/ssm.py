@@ -10,7 +10,6 @@ Head layout (ngroups=1): x: [B, S, H, P]; B/C shared across heads [B, S, N].
 """
 from __future__ import annotations
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -161,6 +161,7 @@ def shard_specs(axis: str) -> FleetMetrics:
                         capped_links=rep, contacts=rep)
 
 
+# repro: allow=RPR004 summarize IS the host boundary: small accumulators ship once per run
 def summarize(metrics: FleetMetrics) -> Dict[str, Any]:
     """Ship the accumulators to host and reduce to a JSON-able summary."""
     hist = np.asarray(metrics.staleness_hist, dtype=float)

@@ -1,0 +1,466 @@
+"""repro.analysis: rule fixtures, suppressions, baselines, and the gate.
+
+Each lint rule RPR001–RPR005 has a known-bad snippet it must flag and a
+known-good sibling it must pass; the contract rules are exercised by
+injecting deliberately broken registry entries. The final test is the
+tier-1 gate: the repo's own ``src/`` tree must be analyzer-clean.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import findings as findings_lib
+from repro.analysis import linter
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def rules_hit(src, path="src/repro/core/fixture.py", select=None):
+    return {f.rule for f in linter.lint_source(src, path, select=select)
+            if f.active}
+
+
+# ---------------------------------------------------------------------------
+# RPR001 — PRNG key reuse
+# ---------------------------------------------------------------------------
+
+BAD_KEY_REUSE = """
+import jax
+
+def sample(key, n):
+    a = jax.random.normal(key, (n,))
+    b = jax.random.uniform(key, (n,))
+    return a + b
+"""
+
+GOOD_KEY_SPLIT = """
+import jax
+
+def sample(key, n):
+    k1, k2 = jax.random.split(key)
+    a = jax.random.normal(k1, (n,))
+    b = jax.random.uniform(k2, (n,))
+    return a + b
+"""
+
+BAD_KEY_CLOSURE = """
+import jax
+
+def epoch(state, key, steps):
+    def body(i, carry):
+        noise = jax.random.normal(key, (4,))
+        return carry + noise
+    return jax.lax.fori_loop(0, steps, body, state)
+"""
+
+GOOD_KEY_CARRY = """
+import jax
+
+def epoch(state, key, steps):
+    def body(carry, k):
+        st, key = carry
+        key, sub = jax.random.split(key)
+        noise = jax.random.normal(sub, (4,))
+        return (st + noise, key), None
+    (state, key), _ = jax.lax.scan(body, (state, key), None, length=steps)
+    return state
+"""
+
+GOOD_DISCARDED_SUBKEY = """
+import jax
+
+def epoch(key):
+    _, k_local, k_policy = jax.random.split(key, 3)
+    a = jax.random.normal(k_local, (4,))
+    b = jax.random.normal(k_policy, (4,))
+    return a + b
+"""
+
+GOOD_KEY_REBOUND = """
+import jax
+
+def chain(key):
+    key, k1 = jax.random.split(key)
+    a = jax.random.normal(k1, (4,))
+    key, k2 = jax.random.split(key)
+    return a + jax.random.normal(k2, (4,))
+"""
+
+
+def test_rpr001_flags_reuse():
+    assert "RPR001" in rules_hit(BAD_KEY_REUSE)
+
+
+def test_rpr001_flags_loop_closure_capture():
+    assert "RPR001" in rules_hit(BAD_KEY_CLOSURE)
+
+
+@pytest.mark.parametrize("src", [GOOD_KEY_SPLIT, GOOD_KEY_CARRY,
+                                 GOOD_DISCARDED_SUBKEY, GOOD_KEY_REBOUND])
+def test_rpr001_passes_disciplined_keys(src):
+    assert "RPR001" not in rules_hit(src)
+
+
+# ---------------------------------------------------------------------------
+# RPR002 — retrace hazards
+# ---------------------------------------------------------------------------
+
+BAD_TRACED_AXIS_CLOSURE = """
+import jax
+
+def make_engine(cfg):
+    @jax.jit
+    def run(state):
+        return state * cfg.dfl.lr
+    return run
+"""
+
+GOOD_TRACED_AXIS_ARG = """
+import jax
+
+def make_engine(cfg):
+    @jax.jit
+    def run(state, lr):
+        return state * lr
+    return run
+"""
+
+BAD_TRACER_BRANCH = """
+import jax
+
+@jax.jit
+def clip(x, lo):
+    if x > lo:
+        return x
+    return lo
+"""
+
+GOOD_TRACER_WHERE = """
+import jax
+import jax.numpy as jnp
+
+@jax.jit
+def clip(x, lo):
+    if x.shape[0] > 4:
+        x = x[:4]
+    return jnp.where(x > lo, x, lo)
+"""
+
+
+def test_rpr002_flags_traced_axis_closure():
+    assert "RPR002" in rules_hit(BAD_TRACED_AXIS_CLOSURE)
+
+
+def test_rpr002_flags_python_branch_on_tracer():
+    assert "RPR002" in rules_hit(BAD_TRACER_BRANCH)
+
+
+@pytest.mark.parametrize("src", [GOOD_TRACED_AXIS_ARG, GOOD_TRACER_WHERE])
+def test_rpr002_passes_static_control_flow(src):
+    assert "RPR002" not in rules_hit(src)
+
+
+# ---------------------------------------------------------------------------
+# RPR003 — donation after use
+# ---------------------------------------------------------------------------
+
+BAD_DONATE_READ = """
+import jax
+
+def run(step_fn, state, key):
+    step = jax.jit(step_fn, donate_argnums=(0,))
+    new_state = step(state, key)
+    return state.params, new_state
+"""
+
+GOOD_DONATE_REBIND = """
+import jax
+
+def run(step_fn, state, key):
+    step = jax.jit(step_fn, donate_argnums=(0,))
+    state = step(state, key)
+    return state.params, state
+"""
+
+
+def test_rpr003_flags_read_after_donation():
+    assert "RPR003" in rules_hit(BAD_DONATE_READ)
+
+
+def test_rpr003_passes_rebound_donation():
+    assert "RPR003" not in rules_hit(GOOD_DONATE_REBIND)
+
+
+def test_rpr003_handles_conditional_donation():
+    src = """
+import jax
+
+def make(run_fn, donate):
+    eng = jax.jit(run_fn, donate_argnums=(0, 1) if donate else ())
+    def call(state, mstate):
+        out = eng(state, mstate)
+        return state.t, out
+    return call
+"""
+    assert "RPR003" in rules_hit(src)
+
+
+# ---------------------------------------------------------------------------
+# RPR004 — host sync in hot paths
+# ---------------------------------------------------------------------------
+
+BAD_HOT_SYNC = """
+import numpy as np
+
+def accumulate(xs):
+    total = 0.0
+    for x in xs:
+        total += float(x)
+    return np.asarray(total)
+"""
+
+
+def test_rpr004_flags_hot_path_only():
+    assert "RPR004" in rules_hit(BAD_HOT_SYNC,
+                                 path="src/repro/core/fixture.py")
+    # the same code outside core/kernels/engine files is fine
+    assert "RPR004" not in rules_hit(BAD_HOT_SYNC,
+                                     path="src/repro/launch/fixture.py")
+
+
+def test_rpr004_exempts_shape_arithmetic():
+    src = """
+def sizes(x):
+    return int(x.shape[0]), float(len(x))
+"""
+    assert "RPR004" not in rules_hit(src)
+
+
+def test_rpr004_inline_suppression():
+    src = """
+def boundary(x):
+    return float(x)  # repro: allow=RPR004 scalars only cross to host
+"""
+    fs = linter.lint_source(src, "src/repro/core/fixture.py")
+    assert any(f.rule == "RPR004" and f.suppressed for f in fs)
+    assert not any(f.active for f in fs)
+
+
+def test_rpr004_def_scoped_suppression():
+    src = """
+# repro: allow=RPR004 summarize is the host boundary
+def summarize(m):
+    return {"a": float(m.a), "b": int(m.b)}
+"""
+    fs = linter.lint_source(src, "src/repro/core/fixture.py")
+    assert sum(f.rule == "RPR004" for f in fs) == 2
+    assert not any(f.active for f in fs)
+
+
+# ---------------------------------------------------------------------------
+# RPR005 — dead code
+# ---------------------------------------------------------------------------
+
+BAD_DEAD_CODE = """
+import os
+import json
+
+def f():
+    return json.dumps({})
+    print("never")
+"""
+
+
+def test_rpr005_flags_unused_import_and_unreachable():
+    msgs = [f.message for f in linter.lint_source(
+        BAD_DEAD_CODE, "x.py") if f.rule == "RPR005"]
+    assert any("unused import 'os'" in m for m in msgs)
+    assert any("unreachable" in m for m in msgs)
+
+
+def test_rpr005_respects_noqa_and_type_checking():
+    src = """
+from typing import TYPE_CHECKING
+from repro.api import run  # noqa: F401  (re-export)
+
+if TYPE_CHECKING:
+    from repro.core.cache import CacheMeta
+
+def f(m: "CacheMeta"):
+    return m
+"""
+    assert "RPR005" not in rules_hit(src)
+
+
+# ---------------------------------------------------------------------------
+# suppression parsing + baselines
+# ---------------------------------------------------------------------------
+
+def test_suppression_carries_reason():
+    src = "x = float(y)  # repro: allow=RPR004 intentional transfer\n"
+    supp = linter.Suppressions(src, __import__("ast").parse(src))
+    assert supp.match("RPR004", 1) == "intentional transfer"
+    assert supp.match("RPR001", 1) is None
+
+
+def test_suppression_previous_line():
+    src = ("# repro: allow=RPR004,RPR005 both fine here\n"
+           "x = float(y)\n")
+    supp = linter.Suppressions(src, __import__("ast").parse(src))
+    assert supp.match("RPR004", 2) is not None
+    assert supp.match("RPR005", 2) is not None
+
+
+def test_baseline_roundtrip(tmp_path):
+    fs = linter.lint_source(BAD_KEY_REUSE, "fixture.py")
+    assert any(f.active for f in fs)
+    path = str(tmp_path / "baseline.json")
+    findings_lib.write_baseline(path, fs)
+    fs2 = linter.lint_source(BAD_KEY_REUSE, "fixture.py")
+    findings_lib.apply_baseline(fs2, findings_lib.load_baseline(path))
+    assert all(not f.active for f in fs2)
+    # a new finding is NOT covered by the old baseline
+    fs3 = linter.lint_source(BAD_DONATE_READ, "other.py")
+    findings_lib.apply_baseline(fs3, findings_lib.load_baseline(path))
+    assert any(f.active for f in fs3)
+
+
+def test_document_counts():
+    fs = linter.lint_source(BAD_KEY_REUSE, "fixture.py")
+    doc = findings_lib.to_document(fs, wall_s=0.5)
+    assert doc["schema"] == findings_lib.SCHEMA
+    assert doc["counts"]["active"] == len(fs)
+    assert doc["counts"]["per_rule"].get("RPR001", 0) >= 1
+
+
+# ---------------------------------------------------------------------------
+# contract verifier (RPR101–RPR105): clean registries + injected breakage
+# ---------------------------------------------------------------------------
+
+def test_contracts_clean_on_repo():
+    from repro.analysis import contracts
+    fs = contracts.verify_all()
+    assert fs == [], "\n".join(f.format() for f in fs)
+
+
+def test_rpr101_catches_rows_dtype_drift(monkeypatch):
+    import jax.numpy as jnp
+
+    from repro.analysis import contracts
+    from repro.mobility import base as mbase
+    from repro.mobility import registry as mreg
+
+    good = mreg.get_model("random_waypoint")
+    def bad_rows(state, key, cfg, seconds, *, row_start, num_rows,
+                 col_ids):
+        state, met, dur = good.simulate_epoch_rows(
+            state, key, cfg, seconds, row_start=row_start,
+            num_rows=num_rows, col_ids=col_ids)
+        return state, met.astype(jnp.int8), dur  # dtype drift
+    bad = mbase.MobilityModel(
+        name="random_waypoint", init=good.init, step=good.step,
+        positions=good.positions, contacts_now=good.contacts_now,
+        simulate_epoch=good.simulate_epoch, simulate_epoch_rows=bad_rows)
+    monkeypatch.setattr(mreg, "available", lambda: ["random_waypoint"])
+    monkeypatch.setattr(mreg, "get_model", lambda name: bad)
+    fs = contracts.verify_mobility()
+    assert any(f.rule == "RPR101" and "simulate_epoch_rows" in f.message
+               for f in fs)
+
+
+def test_rpr102_catches_priority_shape_drift(monkeypatch):
+    import jax.numpy as jnp
+
+    from repro.analysis import contracts
+    from repro.policies import base as pbase
+    from repro.policies import registry as preg
+
+    bad = pbase.CachePolicy(
+        "lru", lambda meta, ctx, valid: (meta.ts, jnp.zeros((), bool)))
+    monkeypatch.setattr(preg, "available", lambda: ["lru"])
+    monkeypatch.setattr(preg, "get_policy", lambda name: bad)
+    fs = contracts.verify_policies()
+    assert any(f.rule == "RPR102" and "keep mask" in f.message for f in fs)
+
+
+def test_rpr103_catches_spec_drift(monkeypatch):
+    from jax.sharding import PartitionSpec as P
+
+    from repro.analysis import contracts
+    from repro.telemetry import metrics as metrics_lib
+
+    good = metrics_lib.shard_specs
+
+    def bad_specs(axis):
+        import dataclasses
+        specs = good(axis)
+        return dataclasses.replace(specs, origins_seen=P())  # wrong axis
+    monkeypatch.setattr(metrics_lib, "shard_specs", bad_specs)
+    fs = contracts.verify_spec_coverage()
+    assert any(f.rule == "RPR103" for f in fs)
+
+
+def test_rpr104_catches_losses_shape_drift(monkeypatch):
+    from repro.analysis import contracts
+    from repro.core import rounds as rounds_lib
+
+    real = rounds_lib.make_fleet_engine
+
+    def bad_engine(**kw):
+        eng = real(**kw)
+        run = eng.run
+        class Wrapped:
+            chunk = eng.chunk
+            donate = eng.donate
+            def run(self, *args):
+                s, m, k, losses = run(*args)
+                return s, m, k, losses[:1]  # wrong losses buffer
+        return Wrapped()
+    monkeypatch.setattr(rounds_lib, "make_fleet_engine", bad_engine)
+    fs = contracts.verify_engines()
+    assert any(f.rule == "RPR104" and "losses" in f.message for f in fs)
+
+
+def test_rpr105_catches_missing_static_binding(monkeypatch):
+    from repro.analysis import contracts
+    from repro.fl import runner as runner_lib
+
+    real = runner_lib._engine_key
+
+    def bad_key(rs, chunk, traced_budget, telemetry=False):
+        key = real(rs, chunk, traced_budget, telemetry)
+        # drop the algorithm from the key: cells would share engines
+        return tuple(k for k in key if k != rs.experiment.algorithm)
+    monkeypatch.setattr(runner_lib, "_engine_key", bad_key)
+    fs = contracts.verify_engine_key()
+    assert any(f.rule == "RPR105" and "algorithm" in f.message
+               for f in fs)
+
+
+def test_traced_axes_literal_in_sync():
+    from repro.fl import runner
+    assert linter.DEFAULT_TRACED_AXES == runner.TRACED_AXES
+
+
+# ---------------------------------------------------------------------------
+# the tier-1 gate: the repo ships analyzer-clean
+# ---------------------------------------------------------------------------
+
+def test_self_run_zero_findings(tmp_path):
+    """`python tools/analyze.py src/` exits 0 with zero active findings."""
+    out = str(tmp_path / "findings.json")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tools", "analyze.py"),
+         "src", "--json", out],
+        cwd=ROOT, capture_output=True, text=True, timeout=120)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    doc = json.load(open(out))
+    assert doc["schema"] == findings_lib.SCHEMA
+    assert doc["counts"]["active"] == 0, proc.stdout
+    # every suppression in the tree carries a justification
+    for f in doc["findings"]:
+        if f["suppressed"]:
+            assert f["reason"], f

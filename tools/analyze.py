@@ -1,0 +1,108 @@
+#!/usr/bin/env python
+"""Static-analysis gate: AST linter + eval_shape contract verifier.
+
+    python tools/analyze.py src/                 # lint + contracts
+    python tools/analyze.py src/ --json out.json # machine-readable
+    python tools/analyze.py src/ --rules RPR001,RPR004
+    python tools/analyze.py src/ --no-contracts  # AST only (no jax)
+    python tools/analyze.py src/ --baseline analysis-baseline.json
+    python tools/analyze.py src/ --write-baseline analysis-baseline.json
+
+Exit code 1 when any *active* (unsuppressed, unbaselined) finding
+remains — the tier-1 gate in ``tests/test_analysis.py`` runs exactly
+this and asserts zero. Rule catalog: ``docs/ANALYSIS.md``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+
+from repro.analysis import findings as findings_lib  # noqa: E402
+from repro.analysis import linter  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="repro static analysis (linter + contract verifier)")
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files/directories to lint (default: src)")
+    ap.add_argument("--rules", default="",
+                    help="comma-separated rule ids to run (RPR001..005 "
+                         "lint, RPR101..105 contracts); default: all")
+    ap.add_argument("--json", dest="json_path", default="",
+                    help="write the findings document to this path "
+                         "('-' = stdout)")
+    ap.add_argument("--baseline", default="",
+                    help="baseline JSON of accepted fingerprints; "
+                         "matching findings don't fail the gate")
+    ap.add_argument("--write-baseline", default="",
+                    help="record current active findings as the baseline "
+                         "and exit 0")
+    ap.add_argument("--no-contracts", action="store_true",
+                    help="skip the eval_shape contract verifier "
+                         "(pure-AST run, never imports jax)")
+    ap.add_argument("-q", "--quiet", action="store_true",
+                    help="suppress per-finding text output")
+    args = ap.parse_args(argv)
+
+    t0 = time.perf_counter()
+    select = {r.strip().upper() for r in args.rules.split(",")
+              if r.strip()} or None
+    paths = args.paths or ["src"]
+
+    lint_rules = None if select is None else \
+        {r for r in select if r in linter.RULES}
+    contract_rules = None if select is None else \
+        {r for r in select if r.startswith("RPR1")}
+    run_lint = select is None or bool(lint_rules)
+    run_contracts = not args.no_contracts and (
+        select is None or bool(contract_rules))
+
+    findings = []
+    if run_lint:
+        findings.extend(linter.lint_paths(paths, select=lint_rules))
+    if run_contracts:
+        from repro.analysis import contracts
+        findings.extend(contracts.verify_all(select=contract_rules,
+                                             root=os.getcwd()))
+
+    if args.baseline:
+        findings_lib.apply_baseline(
+            findings, findings_lib.load_baseline(args.baseline))
+    if args.write_baseline:
+        findings_lib.write_baseline(args.write_baseline, findings)
+        print(f"wrote baseline with "
+              f"{sum(f.active for f in findings)} fingerprint(s) to "
+              f"{args.write_baseline}")
+        return 0
+
+    wall = time.perf_counter() - t0
+    doc = findings_lib.to_document(findings, wall_s=wall)
+    if args.json_path == "-":
+        json.dump(doc, sys.stdout, indent=1)
+        sys.stdout.write("\n")
+    elif args.json_path:
+        with open(args.json_path, "w") as fh:
+            json.dump(doc, fh, indent=1)
+            fh.write("\n")
+
+    active = [f for f in findings if f.active]
+    if not args.quiet:
+        for f in findings:
+            if f.active:
+                print(f.format())
+        counts = doc["counts"]
+        print(f"analyze: {counts['active']} finding(s) "
+              f"({counts['suppressed']} suppressed, "
+              f"{counts['baselined']} baselined) in {wall:.2f}s")
+    return 1 if active else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -188,8 +188,35 @@ def check_preset(name: str) -> Optional[str]:
     return _run(scenario.with_overrides(smoke))
 
 
+def check_analysis() -> Optional[str]:
+    """Run the static-analysis gate (tools/analyze.py --json) and fail on
+    any active (unsuppressed, unbaselined) finding."""
+    import json
+    import subprocess
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    out = os.path.join(tempfile.mkdtemp(prefix="analysis_"),
+                       "findings.json")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(root, "tools", "analyze.py"),
+         "src", "--json", out, "-q"],
+        cwd=root, capture_output=True, text=True, timeout=120)
+    try:
+        with open(out) as fh:
+            doc = json.load(fh)
+    except (OSError, ValueError):
+        return f"analyzer produced no findings JSON: {proc.stderr[-300:]}"
+    active = doc["counts"]["active"]
+    if proc.returncode or active:
+        heads = [f"{f['path']}:{f['line']} {f['rule']}"
+                 for f in doc["findings"] if f["rule"]][:5]
+        return (f"{active} active finding(s): " + "; ".join(heads))
+    return None
+
+
 def build_checks(trace_path: str) -> List[Tuple[str, Callable[[], Optional[str]]]]:
     checks: List[Tuple[str, Callable[[], Optional[str]]]] = []
+    checks.append(("analysis:static", check_analysis))
     for name in registry.available():
         for algorithm in ALGORITHMS:
             checks.append((f"mobility:{name}×{algorithm}",
@@ -232,6 +259,10 @@ def main(argv: Optional[List[str]] = None) -> int:
                          "4 forced host devices (one shard_map run per "
                          "algorithm, compared against the single-device "
                          "fused engine)")
+    ap.add_argument("--analyze", action="store_true",
+                    help="run only the static-analysis gate "
+                         "(tools/analyze.py over src/, fail on active "
+                         "findings)")
     args = ap.parse_args(argv)
 
     tmp = tempfile.mkdtemp(prefix="check_scenarios_")
@@ -244,6 +275,9 @@ def main(argv: Optional[List[str]] = None) -> int:
     if args.sharded:
         checks = [(cid, fn) for cid, fn in checks
                   if cid.startswith("sharded:")]
+    if args.analyze:
+        checks = [(cid, fn) for cid, fn in checks
+                  if cid.startswith("analysis:")]
     if args.only:
         checks = [(cid, fn) for cid, fn in checks if args.only in cid]
     if args.list:

@@ -58,6 +58,52 @@ def is_bench(doc: Mapping[str, Any]) -> bool:
     return "cells" in doc and "axes" in doc
 
 
+def is_analysis(doc: Mapping[str, Any]) -> bool:
+    return doc.get("schema") == "repro-analysis-v1"
+
+
+# ---------------------------------------------------------------------------
+# analyzer-findings report
+# ---------------------------------------------------------------------------
+
+def render_analysis(doc: Mapping[str, Any]) -> str:
+    """Markdown section for a ``tools/analyze.py --json`` artifact."""
+    counts = doc.get("counts") or {}
+    findings = doc.get("findings") or []
+    out: List[str] = ["# Static-analysis report", ""]
+    out.append(f"- {counts.get('active', 0)} active finding(s), "
+               f"{counts.get('suppressed', 0)} suppressed, "
+               f"{counts.get('baselined', 0)} baselined "
+               f"(wall {_fmt(doc.get('wall_s'), 2)}s)")
+    per_rule = counts.get("per_rule") or {}
+    if per_rule:
+        out.append("- active by rule: "
+                   + ", ".join(f"{r}×{n}" for r, n in
+                               sorted(per_rule.items())))
+    out.append("")
+    active = [f for f in findings
+              if not (f.get("suppressed") or f.get("baselined"))]
+    if active:
+        out.append("## Findings")
+        out.append("")
+        rows = [[f.get("rule"), f"{f.get('path')}:{f.get('line')}",
+                 f.get("message"), f.get("hint")] for f in active]
+        out.extend(_table(["rule", "location", "message", "hint"], rows))
+        out.append("")
+    suppressed = [f for f in findings if f.get("suppressed")]
+    if suppressed:
+        out.append("## Suppressed (justified host boundaries etc.)")
+        out.append("")
+        rows = [[f.get("rule"), f"{f.get('path')}:{f.get('line')}",
+                 f.get("reason") or "—"] for f in suppressed]
+        out.extend(_table(["rule", "location", "justification"], rows))
+        out.append("")
+    if not findings:
+        out.append("No findings — the tree is analyzer-clean.")
+        out.append("")
+    return "\n".join(out).rstrip() + "\n"
+
+
 # ---------------------------------------------------------------------------
 # run report
 # ---------------------------------------------------------------------------
@@ -291,6 +337,8 @@ def budget_frontier(cells: Sequence[Mapping[str, Any]]
 # ---------------------------------------------------------------------------
 
 def render(doc: Mapping[str, Any]) -> str:
+    if is_analysis(doc):
+        return render_analysis(doc)
     return render_bench(doc) if is_bench(doc) else render_run(doc)
 
 
