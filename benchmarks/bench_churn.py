@@ -1,0 +1,72 @@
+"""Churn-robustness study: cached vs dfl accuracy under agent churn.
+
+The paper's DTN argument is that cached models keep spreading after
+their origin drops out of contact. This study makes that measurable:
+one ``api.sweep`` over algorithm × churn fraction × cache size on the
+shared scaled-down fleet, with a staggered round-robin join/leave
+schedule (``dfl.churn_period`` epochs per cycle, each agent out of
+coverage for a ``dfl.churn_fraction`` share of it). Dead agents freeze
+and stop meeting; under ``cached`` their models still ride carriers'
+caches, under plain ``dfl`` they simply vanish from the gossip — so the
+cached-over-dfl accuracy gap should widen with the churn rate, and a
+bigger cache should buy extra robustness (more carrier slots per agent).
+
+Emits ``BENCH_churn.json`` (schema ``sweep-v1``); the per-churn-level
+per-algorithm frontier rides ``extra.churn_frontier`` and
+``tools/report.py`` renders the same frontier from the cells (the
+``dfl.churn_fraction`` axis triggers its accuracy-vs-churn section).
+Engine discipline: churn knobs are trace-static (they change the epoch
+step function), so every (algorithm, churn, cache) cell compiles its
+own engine but ``retraces`` must still be 0 — churn adds no retraces.
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_churn
+Env:  REPRO_BENCH_FAST=1 trims churn levels and cache sizes.
+"""
+from __future__ import annotations
+
+from repro import api
+
+from benchmarks.common import FAST, base_scenario, bench_out
+
+CHURN_PERIOD = 4
+CHURN_FRACTIONS = [0.0, 0.5] if FAST else [0.0, 0.25, 0.5]
+CACHE_SIZES = [5] if FAST else [3, 8]
+OUT = bench_out("BENCH_churn.json")
+
+
+def main():
+    base = base_scenario(seed=3).with_overrides(
+        {"dfl.churn_period": CHURN_PERIOD})
+    sw = api.sweep(base, {
+        "algorithm": ["cached", "dfl"],
+        "dfl.churn_fraction": CHURN_FRACTIONS,
+        "dfl.cache_size": CACHE_SIZES,
+    }, verbose=True)
+    assert sw.retraces == 0, \
+        f"churn knobs must add no retraces, got {sw.retraces}"
+
+    # per-churn-level frontier: each algorithm's best accuracy, plus the
+    # cached-over-dfl robustness gap
+    frontier = []
+    for frac in CHURN_FRACTIONS:
+        row = {"churn_fraction": frac}
+        for algo in ("cached", "dfl"):
+            cells = sw.select(algorithm=algo, dfl_churn_fraction=frac)
+            row[algo] = max(c.result.best_acc for c in cells)
+        row["gap"] = round(row["cached"] - row["dfl"], 4)
+        frontier.append(row)
+        print(f"churn={frac}: cached={row['cached']:.4f} "
+              f"dfl={row['dfl']:.4f} gap={row['gap']:+.4f}")
+
+    doc = sw.write_bench(OUT, name="churn", fast=FAST, extra={
+        "churn_period": CHURN_PERIOD,
+        "churn_frontier": frontier,
+        "gap_at_max_churn": frontier[-1]["gap"],
+    })
+    print(f"wrote BENCH_churn.json ({len(doc['cells'])} cells, "
+          f"{doc['num_engines']} engines, {doc['retraces']} retraces)")
+    return doc
+
+
+if __name__ == "__main__":
+    main()

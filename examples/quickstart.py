@@ -62,3 +62,18 @@ print(api.telemetry_line(result))
 #    statically first — trace discipline, PRNG hygiene, protocol/shard
 #    contracts (rule catalog: docs/ANALYSIS.md):
 #      python tools/analyze.py src/
+
+# 8) many scenarios? stream specs through the scenario service: it
+#    groups same-engine-key specs into waves sharing one compiled
+#    engine and emits schema-validated JSONL (repro-fleet-serve-v1).
+#    lr/epochs are traced knobs, so both specs below share one engine
+#    (the second row reports traces: 0). Same thing over stdin:
+#      echo '{"rid":"a","preset":"paper-noniid"}' | \
+#        PYTHONPATH=src python -m repro.launch.fleet_serve
+import sys
+svc = api.ScenarioService(out=sys.stdout)
+svc.submit({"rid": "base", "scenario": scenario.to_dict()})
+svc.submit({"rid": "hot-lr", "scenario": scenario.to_dict(),
+            "overrides": {"dfl.lr": 0.05}})
+summary = svc.drain()
+assert summary["retraces"] == 0, summary   # one engine, two runs

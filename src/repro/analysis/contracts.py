@@ -27,6 +27,15 @@ RPR105  engine-cache key — ``fl.runner._engine_key`` changes for every
         traced scalars (lr, epochs, seed), so sweeps neither retrace nor
         wrongly share an engine. Also pins the linter's literal
         ``DEFAULT_TRACED_AXES`` equal to ``api.TRACED_AXES``.
+RPR106  open-world contract — the churn liveness schedule traces on a
+        traced epoch counter (no retrace per epoch), ``FleetState.live``
+        exists and shards on the agent axis, churn-enabled engines keep
+        the RPR104 run contract, and the diurnal envelope gates every
+        registered mobility model (amplitude 1 silences all contacts;
+        a fully-active envelope is bit-exact with envelope-off). The
+        envelope checks run tiny *concrete* sims (4 agents, <= 4 steps)
+        — the one exception to the zero-FLOPs rule, since gating is a
+        value property eval_shape cannot see.
 
 Every check is wrapped so a violation becomes a :class:`Finding`
 anchored at the offending callable's def line, not a crashed run.
@@ -43,6 +52,7 @@ CONTRACT_RULES = {
     "RPR103": "shard-spec pytree coverage",
     "RPR104": "engine run contract",
     "RPR105": "engine-cache key completeness",
+    "RPR106": "open-world contract (churn + diurnal envelope)",
 }
 
 
@@ -520,8 +530,12 @@ _STATIC_KNOBS = [
     ("dfl.staleness_decay", 0.9),
     ("dfl.link_entries_per_step", 2.0),
     ("dfl.shard_halo", 1),
+    ("dfl.churn_period", 4),
+    ("dfl.churn_fraction", 0.25),
     ("mobility.model", "levy_walk"),
     ("mobility.comm_range", 42.0),
+    ("mobility.diurnal_amplitude", 0.5),
+    ("mobility.diurnal_period", 500.0),
 ]
 
 #: traced scalars — perturbing these must NOT flip the key
@@ -620,6 +634,154 @@ def verify_engine_key() -> List[Finding]:
 
 
 # ---------------------------------------------------------------------------
+# RPR106 — open-world contract (churn liveness + diurnal envelope)
+# ---------------------------------------------------------------------------
+
+def verify_open_world(num_agents: int = 4, chunk: int = 2) -> List[Finding]:
+    import dataclasses as _dc
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+
+    from repro.configs.base import MobilityConfig
+    from repro.core import rounds as rounds_lib
+    from repro.fl import experiment as experiment_lib
+    from repro.launch.mesh import make_fleet_mesh
+    from repro.mobility import registry as mob_registry
+    from repro.sharding.rules import fleet_specs
+
+    findings: List[Finding] = []
+    key = jax.random.PRNGKey(0)
+
+    # --- liveness schedule traces on a traced t -> [N] bool ----------------
+    try:
+        mask = jax.eval_shape(
+            lambda t: rounds_lib.liveness_mask(t, num_agents, 4, 0.25),
+            jax.ShapeDtypeStruct((), jnp.int32))
+    except Exception as e:
+        findings.append(_finding(
+            "RPR106", rounds_lib.liveness_mask,
+            f"liveness_mask does not trace on a traced epoch counter: {e}",
+            "the schedule must be closed-form int32 arithmetic on t "
+            "(no PRNG splits, no host round-trips)"))
+    else:
+        if tuple(mask.shape) != (num_agents,) or mask.dtype != jnp.bool_:
+            findings.append(_finding(
+                "RPR106", rounds_lib.liveness_mask,
+                f"liveness_mask returns {mask.dtype}{list(mask.shape)}, "
+                f"expected bool[{num_agents}]",
+                "return one bool per agent, by global agent id"))
+
+    # --- FleetState.live exists and shards on the agent axis ---------------
+    template = {"w": jnp.zeros((3,), jnp.float32)}
+    state = jax.eval_shape(
+        lambda: rounds_lib.init_fleet(
+            template, num_agents, 2, jnp.ones((num_agents,), jnp.float32)))
+    live = getattr(state, "live", None)
+    if live is None or tuple(live.shape) != (num_agents,) \
+            or live.dtype != jnp.bool_:
+        findings.append(_finding(
+            "RPR106", rounds_lib.init_fleet,
+            "init_fleet carries no bool[N] 'live' leaf — churn cannot "
+            "thread through the fleet state",
+            "FleetState.live must be an agent-leading bool mask"))
+    else:
+        spec = getattr(fleet_specs(state, num_agents, "agents"),
+                       "live", None)
+        if spec != P("agents"):
+            findings.append(_finding(
+                "RPR106", fleet_specs,
+                f"fleet_specs gives {spec} to FleetState.live, expected "
+                "P('agents')",
+                "the liveness mask is agent-leading: shard its rows"))
+
+    # --- churn-enabled engines keep the RPR104 run contract ----------------
+    toy_state, data, counts, loss_fn = _toy_setup(num_agents)
+    mob_model = mob_registry.get_model("random_waypoint")
+    mesh = make_fleet_mesh(1)
+    for algorithm in ("cached", "dfl", "cfl"):
+        cfg = _toy_config(algorithm, num_agents)
+        cfg = _dc.replace(cfg, dfl=_dc.replace(cfg.dfl, churn_period=4,
+                                               churn_fraction=0.25))
+        mstate = mob_model.init(key, num_agents, cfg.mobility)
+        builders = {
+            "fused": lambda: experiment_lib.make_engine(
+                cfg, loss_fn=loss_fn, mob_model=mob_model,
+                mob_cfg=cfg.mobility, chunk=chunk, donate=False),
+            "sharded": lambda: experiment_lib.make_sharded_engine(
+                cfg, mesh=mesh, loss_fn=loss_fn, mob_model=mob_model,
+                mob_cfg=cfg.mobility, chunk=chunk, donate=False),
+        }
+        for kind, build in builders.items():
+            anchor = experiment_lib.make_engine if kind == "fused" \
+                else experiment_lib.make_sharded_engine
+            try:
+                eng = build()
+                out = jax.eval_shape(
+                    eng.run, toy_state, mstate, key,
+                    jnp.asarray(0.1, jnp.float32), data, counts,
+                    jnp.asarray(chunk, jnp.int32))
+            except Exception as e:
+                findings.append(_finding(
+                    "RPR106", anchor,
+                    f"{kind} engine ({algorithm}) with churn enabled does "
+                    f"not trace abstractly: {e}",
+                    "churn must stay a static gate over the existing "
+                    "run(state, mstate, key, lr, data, counts, n) path"))
+                continue
+            new_state = out[0]
+            in_s = [(tuple(x.shape), str(x.dtype))
+                    for x in jax.tree_util.tree_leaves(toy_state)]
+            out_s = [(tuple(x.shape), str(x.dtype))
+                     for x in jax.tree_util.tree_leaves(new_state)]
+            if jax.tree_util.tree_structure(new_state) \
+                    != jax.tree_util.tree_structure(toy_state) \
+                    or in_s != out_s:
+                findings.append(_finding(
+                    "RPR106", anchor,
+                    f"{kind} engine ({algorithm}) with churn enabled "
+                    "changed the FleetState structure or leaf "
+                    "shapes/dtypes",
+                    "the live mask must replace FleetState.live in place, "
+                    "not grow the carry"))
+
+    # --- diurnal envelope gates every registered mobility model ------------
+    # tiny concrete sims: gating is a value property eval_shape cannot see.
+    # period = 4x the 4 s epoch span keeps the float32 envelope measurably
+    # below peak at every step time, so amplitude 1.0 must gate everything.
+    for name in mob_registry.available():
+        model = mob_registry.get_model(name)
+        base_cfg = MobilityConfig(model=name, trace_frames_per_epoch=2,
+                                  diurnal_period=16.0)
+        outs = {}
+        for amplitude in (1.0, 0.0, 1e-12):
+            cfg_m = _dc.replace(base_cfg, diurnal_amplitude=amplitude)
+            st = _mobility_state(name, model, cfg_m, key, num_agents)
+            _, met, dur = model.simulate_epoch(st, key, cfg_m, 4.0)
+            outs[amplitude] = (np.asarray(met), np.asarray(dur))
+        met1, dur1 = outs[1.0]
+        if met1.any() or dur1.sum() != 0:
+            findings.append(_finding(
+                "RPR106", model.simulate_epoch,
+                f"mobility model '{name}': diurnal amplitude 1.0 leaks "
+                f"{int(met1.sum())} contacts / {int(dur1.sum())} duration "
+                "steps — the envelope does not gate this model",
+                "mask each step's contacts with contact_envelope_active "
+                "before the union/duration accumulation"))
+        if not all(np.array_equal(a, b) for a, b
+                   in zip(outs[0.0], outs[1e-12])):
+            findings.append(_finding(
+                "RPR106", model.simulate_epoch,
+                f"mobility model '{name}': a fully-active envelope "
+                "(amplitude 1e-12) diverges from the envelope-off path",
+                "the diurnal gate must add masking only — never perturb "
+                "the key stream or trajectories"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
 # driver
 # ---------------------------------------------------------------------------
 
@@ -629,6 +791,7 @@ _VERIFIERS = {
     "RPR103": lambda: verify_spec_coverage(),
     "RPR104": lambda: verify_engines(),
     "RPR105": lambda: verify_engine_key(),
+    "RPR106": lambda: verify_open_world(),
 }
 
 

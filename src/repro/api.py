@@ -26,11 +26,13 @@ from repro.configs.base import DFLConfig, MobilityConfig  # noqa: F401
 from repro.fl.presets import (  # noqa: F401
     available_presets, get_preset, preset_doc, register_preset)
 from repro.fl.runner import (  # noqa: F401
-    TRACED_AXES, RunResult, SweepCell, SweepResult, run, sweep,
-    telemetry_line)
+    TRACED_AXES, RunResult, SweepCell, SweepResult, engine_cache_key, run,
+    sweep, telemetry_line)
 from repro.fl.scenario import (  # noqa: F401
     Fleet, ExperimentConfig, ResolvedScenario, Scenario,
     valid_override_paths)
+from repro.serve.service import (  # noqa: F401
+    SERVICE_SCHEMA, ScenarioService, validate_service_jsonl)
 from repro.telemetry import (  # noqa: F401
     FleetMetrics, SCHEMA_VERSION as TELEMETRY_SCHEMA, validate_events,
     validate_jsonl)
@@ -39,8 +41,10 @@ __all__ = [
     "DFLConfig", "MobilityConfig", "ExperimentConfig",
     "Scenario", "ResolvedScenario", "Fleet",
     "RunResult", "SweepCell", "SweepResult", "run", "sweep", "TRACED_AXES",
+    "engine_cache_key",
     "available_presets", "get_preset", "preset_doc", "register_preset",
     "valid_override_paths",
+    "ScenarioService", "SERVICE_SCHEMA", "validate_service_jsonl",
     "telemetry_line", "FleetMetrics", "TELEMETRY_SCHEMA",
     "validate_events", "validate_jsonl",
 ]

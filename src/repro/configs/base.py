@@ -173,6 +173,23 @@ class DFLConfig:
     # contiguous index blocks = area bands) keeps the dropped contacts
     # near zero; ignored by the fused/legacy engines.
     shard_halo: int = 0
+    # open-world churn: a deterministic staggered join/leave schedule.
+    # Every ``churn_period`` epochs each agent goes out of coverage for
+    # ``round(churn_fraction * churn_period)`` consecutive epochs, with
+    # per-agent phase offsets spread uniformly over the period so roughly
+    # a ``churn_fraction`` share of the fleet is away at any epoch.
+    # Dead agents don't train, never appear as realized partners, and
+    # their caches freeze — but entries they already gossiped keep
+    # spreading through live carriers (the DTN effect). 0 = closed world
+    # (every agent always live; engines are bit-exact with no churn code).
+    churn_period: int = 0           # epochs per join/leave cycle; 0 = off
+    churn_fraction: float = 0.0     # fraction of each cycle spent away
+
+    @property
+    def churn_enabled(self) -> bool:
+        """True when the join/leave schedule actually removes agents."""
+        return (self.churn_period > 0
+                and round(self.churn_fraction * self.churn_period) > 0)
 
     @property
     def resolved_transfer_budget(self) -> Optional[float]:
@@ -228,3 +245,20 @@ class MobilityConfig:
     trace_path: str = ""            # .npz with contacts [T,N,N] or edge list
     trace_frames_per_epoch: int = 0 # 0 -> int(epoch_seconds / step_seconds)
     trace_loop: bool = True         # wrap around vs hold last frame
+    # --- diurnal contact-intensity envelope (all models) ---
+    # Time-varying contact load: a simulation step at in-epoch time τ
+    # registers contacts only while the activity
+    #   g(τ) = (1 + cos(2π (τ + diurnal_phase) / diurnal_period)) / 2
+    # is at least ``diurnal_amplitude`` — a cosine day/night cycle whose
+    # duty ratio shrinks as the amplitude grows. Trajectories still
+    # advance every step (vehicles keep moving off-peak; only the radio
+    # contact process is modulated). 0 amplitude = the stationary contact
+    # process, bit-exact with the envelope-free models.
+    diurnal_period: float = 86400.0 # seconds per activity cycle
+    diurnal_amplitude: float = 0.0  # 0 = always active … →1 = peaks only
+    diurnal_phase: float = 0.0      # seconds of phase offset into the cycle
+
+    @property
+    def diurnal_enabled(self) -> bool:
+        """True when the envelope actually gates any contacts."""
+        return self.diurnal_amplitude > 0.0

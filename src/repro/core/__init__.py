@@ -6,6 +6,7 @@ from repro.core.aggregate import (  # noqa: F401
 from repro.core.gossip import exchange, gather_winners  # noqa: F401
 from repro.core.local_update import local_update, fleet_local_update  # noqa: F401
 from repro.core.rounds import (  # noqa: F401
-    FleetState, FleetEngine, init_fleet, make_epoch_step, make_fleet_engine,
-    cached_dfl_epoch, dfl_epoch, cfl_epoch, fleet_accuracy, fleet_eval,
+    FleetState, FleetEngine, init_fleet, liveness_mask, make_epoch_step,
+    make_fleet_engine, cached_dfl_epoch, dfl_epoch, cfl_epoch,
+    fleet_accuracy, fleet_eval,
 )

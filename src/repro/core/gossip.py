@@ -308,7 +308,8 @@ def exchange(params, cache: ModelCache, partners, t, own_samples, own_group,
              link_entries_per_step: float = 0.0,
              with_stats: bool = False,
              pool: Optional[ExchangePool] = None,
-             rng_keys: Optional[jax.Array] = None):
+             rng_keys: Optional[jax.Array] = None,
+             live: Optional[jax.Array] = None):
     """One epoch of DTN-like cache exchange for the whole fleet.
 
     params: pytree [N, ...] (post-local-update models x̃_i(t));
@@ -341,6 +342,14 @@ def exchange(params, cache: ModelCache, partners, t, own_samples, own_group,
     global fleet size and slice its rows (threefry streams depend on the
     split count, so splitting at local size would diverge from the dense
     path). Both default to the dense behaviour.
+
+    Open-world fleets: ``live`` ([N] bool by *global* agent id, same in
+    both engines) rides :class:`~repro.policies.base.PolicyContext` so
+    liveness-aware cache policies can score candidates by whether their
+    origin is currently in coverage. The exchange itself never consults
+    it — dead agents are excluded upstream by masking the contact matrix,
+    while entries they previously gossiped keep spreading through live
+    carriers (the DTN effect).
     """
     pol = policy_registry.resolve(policy)
     N, C = cache.ts.shape
@@ -379,7 +388,7 @@ def exchange(params, cache: ModelCache, partners, t, own_samples, own_group,
                          group=group_i, arrival=arrival_i)
         ctx = policy_base.PolicyContext(
             t=t_arr, capacity=C, rng=key_i, group_slots=group_slots,
-            encounters=enc_i, params=pparams)
+            encounters=enc_i, params=pparams, live=live)
         if with_stats:
             offered = jnp.sum(((link >= 0) & meta.valid)
                               .astype(jnp.float32))

@@ -26,10 +26,14 @@ class FleetState:
     t: jax.Array           # [] int32 — global epoch
     encounters: Any = None # [N, N] float32 — cumulative per-pair exchange
                            # counts (mobility-aware cache policies)
+    live: Any = None       # [N] bool — open-world liveness mask (this
+                           # epoch's in-coverage agents; all-True when the
+                           # churn schedule is off)
 
 jax.tree_util.register_dataclass(
     FleetState,
-    data_fields=["params", "cache", "samples", "group", "t", "encounters"],
+    data_fields=["params", "cache", "samples", "group", "t", "encounters",
+                 "live"],
     meta_fields=[])
 
 
@@ -49,7 +53,33 @@ def init_fleet(template_params, num_agents: int, cache_size: int,
                       group=jnp.asarray(group, jnp.int32),
                       t=jnp.zeros((), jnp.int32),
                       encounters=jnp.zeros((num_agents, num_agents),
-                                           jnp.float32))
+                                           jnp.float32),
+                      live=jnp.ones((num_agents,), bool))
+
+
+def liveness_mask(t, num_agents: int, period: int, fraction: float
+                  ) -> jax.Array:
+    """[N] bool — which agents are in coverage at epoch ``t``.
+
+    Deterministic staggered round-robin outages: every ``period`` epochs
+    agent i spends ``round(fraction * period)`` consecutive epochs away,
+    phase-shifted by ``(i * period) // N`` so departures spread uniformly
+    over the cycle (≈ a ``fraction`` share of the fleet is away at any
+    epoch). Pure int32 arithmetic on the traced ``t`` — no PRNG splits,
+    no retrace, and closed-form per agent so every shard of the sharded
+    engine can reconstruct the whole fleet's mask locally.
+    """
+    down = int(round(fraction * period))  # repro: allow=RPR004 static Python args (config floats), never a device value
+    phase = (jnp.arange(num_agents, dtype=jnp.int32) * period) // num_agents
+    return ((jnp.asarray(t, jnp.int32) + phase) % period) >= down
+
+
+def _freeze_dead(new_tree, old_tree, live: jax.Array):
+    """where(live, new, old) leaf-wise over agent-leading [N, ...] trees."""
+    def leaf(new, old):
+        keep = live.reshape((live.shape[0],) + (1,) * (new.ndim - 1))
+        return jnp.where(keep, new, old)
+    return jax.tree_util.tree_map(leaf, new_tree, old_tree)
 
 
 def count_encounters(encounters, partners):
@@ -83,7 +113,8 @@ def cached_dfl_epoch(state: FleetState, partners, data, counts, key, *,
                      durations: Optional[jax.Array] = None,
                      transfer_budget=None,
                      link_entries_per_step: float = 0.0,
-                     with_stats: bool = False):
+                     with_stats: bool = False,
+                     churn: bool = False):
     """One global epoch of Algorithm 1 for the whole fleet.
 
     partners: [N, D] contact lists for this epoch (-1 padded). ``policy``
@@ -94,6 +125,14 @@ def cached_dfl_epoch(state: FleetState, partners, data, counts, key, *,
 
     With ``with_stats`` (static) the exchange also reduces its traffic
     counters and the return becomes ``(state, losses, ExchangeStats)``.
+
+    With ``churn`` (static) ``state.live`` is honored: dead agents skip
+    the local update (their models freeze), their caches freeze whole —
+    no staleness eviction while out of coverage, so entries age and are
+    evicted on rejoin — and they are excluded from aggregation. The
+    caller must already have masked ``partners`` so no dead agent appears
+    as a realized partner; entries a dead agent previously gossiped keep
+    spreading through live carriers untouched (the DTN effect).
     """
     N = state.samples.shape[0]
     key, k_local, k_policy = jax.random.split(key, 3)
@@ -103,6 +142,8 @@ def cached_dfl_epoch(state: FleetState, partners, data, counts, key, *,
     tilde, losses = fleet_local_update(
         state.params, data, counts, local_keys, loss_fn=loss_fn,
         steps=local_steps, batch_size=batch_size, lr=lr, rho=rho)
+    if churn:
+        tilde = _freeze_dead(tilde, state.params, state.live)
 
     # 2) CacheUpdate: DTN-like exchange with encountered agents; the
     # realized partner contacts feed the per-pair encounter counts that
@@ -115,12 +156,17 @@ def cached_dfl_epoch(state: FleetState, partners, data, counts, key, *,
         gather_mode=gather_mode, durations=durations,
         transfer_budget=transfer_budget,
         link_entries_per_step=link_entries_per_step,
-        with_stats=with_stats)
+        with_stats=with_stats,
+        live=state.live if churn else None)
     cache, xstats = out if with_stats else (out, None)
+    if churn:
+        cache = _freeze_dead(cache, state.cache, state.live)
 
     # 3) ModelAggregation over all cached models (+ own)
     new_params = aggregate(tilde, state.samples, cache, t=state.t,
                            staleness_decay=staleness_decay)
+    if churn:
+        new_params = _freeze_dead(new_params, state.params, state.live)
 
     new_state = dataclasses.replace(state, params=new_params, cache=cache,
                                     t=state.t + 1, encounters=encounters)
@@ -135,14 +181,22 @@ def cached_dfl_epoch(state: FleetState, partners, data, counts, key, *,
 
 def dfl_epoch(state: FleetState, partners, data, counts, key, *,
               loss_fn: Callable, local_steps: int, batch_size: int, lr,
-              rho: float = 0.0) -> Tuple[FleetState, jax.Array]:
+              rho: float = 0.0, churn: bool = False
+              ) -> Tuple[FleetState, jax.Array]:
     """DeFedAvg (paper's "DFL" baseline): local update, then pairwise
-    sample-weighted averaging with the first contacted partner only."""
+    sample-weighted averaging with the first contacted partner only.
+
+    With ``churn`` (static) dead agents (``~state.live``) skip the local
+    update; the caller masks ``partners`` so they neither pick nor serve
+    as averaging partners — their models freeze until they rejoin.
+    """
     N = state.samples.shape[0]
     local_keys = jax.random.split(key, N)
     tilde, losses = fleet_local_update(
         state.params, data, counts, local_keys, loss_fn=loss_fn,
         steps=local_steps, batch_size=batch_size, lr=lr, rho=rho)
+    if churn:
+        tilde = _freeze_dead(tilde, state.params, state.live)
 
     first = partners[:, 0]
     has = first >= 0
@@ -164,14 +218,25 @@ def dfl_epoch(state: FleetState, partners, data, counts, key, *,
 
 def cfl_epoch(state: FleetState, data, counts, key, *, loss_fn: Callable,
               local_steps: int, batch_size: int, lr,
-              rho: float = 0.0) -> Tuple[FleetState, jax.Array]:
-    """Centralized FL (FedAvg): all agents aggregate on a server each epoch."""
+              rho: float = 0.0, churn: bool = False
+              ) -> Tuple[FleetState, jax.Array]:
+    """Centralized FL (FedAvg): all agents aggregate on a server each epoch.
+
+    With ``churn`` (static) only live agents contribute to (and receive)
+    the server average — out-of-coverage agents neither upload nor
+    download, so their models freeze until they rejoin.
+    """
     N = state.samples.shape[0]
     local_keys = jax.random.split(key, N)
     tilde, losses = fleet_local_update(
         state.params, data, counts, local_keys, loss_fn=loss_fn,
         steps=local_steps, batch_size=batch_size, lr=lr, rho=rho)
-    w = state.samples / jnp.sum(state.samples)
+    if churn:
+        tilde = _freeze_dead(tilde, state.params, state.live)
+        live_w = state.samples * state.live.astype(jnp.float32)
+        w = live_w / jnp.maximum(jnp.sum(live_w), 1e-9)
+    else:
+        w = state.samples / jnp.sum(state.samples)
 
     def leaf(p):
         wexp = w.reshape((N,) + (1,) * (p.ndim - 1))
@@ -179,6 +244,8 @@ def cfl_epoch(state: FleetState, data, counts, key, *, loss_fn: Callable,
         return jnp.broadcast_to(avg, p.shape).astype(p.dtype)
 
     new_params = jax.tree_util.tree_map(leaf, tilde)
+    if churn:
+        new_params = _freeze_dead(new_params, state.params, state.live)
     return dataclasses.replace(state, params=new_params, t=state.t + 1), losses
 
 
@@ -195,7 +262,8 @@ def make_epoch_step(algorithm: str, *, loss_fn: Callable, local_steps: int,
                     gather_mode: str = "select",
                     transfer_budget=None,
                     link_entries_per_step: float = 0.0,
-                    telemetry: bool = False) -> Callable:
+                    telemetry: bool = False,
+                    churn: bool = False) -> Callable:
     """Bind an algorithm's hyperparameters into a uniform per-epoch step
 
         step(state, partners, durations, data, counts, key, lr,
@@ -218,9 +286,14 @@ def make_epoch_step(algorithm: str, *, loss_fn: Callable, local_steps: int,
     ExchangeStats)`` — real gossip traffic counters for ``cached``,
     zeros for the exchange-free baselines — so the fused engine can fold
     them into its :class:`~repro.telemetry.metrics.FleetMetrics` carry.
+
+    With ``churn`` (static) the epoch honors ``state.live`` (see the
+    per-algorithm epoch functions); the caller owns computing the mask
+    and masking the contact matrix before partner selection. Off (the
+    default) emits the exact pre-churn program — bit-exact.
     """
     common = dict(loss_fn=loss_fn, local_steps=local_steps,
-                  batch_size=batch_size, rho=rho)
+                  batch_size=batch_size, rho=rho, churn=churn)
     if algorithm == "cached":
         from repro.policies import base as policy_base
         from repro.policies import registry as policy_registry
@@ -318,7 +391,9 @@ def make_fleet_engine(*, algorithm: str, mob_model, mob_cfg,
                       link_entries_per_step: float = 0.0,
                       chunk: int = 1,
                       donate: Optional[bool] = None,
-                      telemetry: bool = False) -> FleetEngine:
+                      telemetry: bool = False,
+                      churn_period: int = 0,
+                      churn_fraction: float = 0.0) -> FleetEngine:
     """Build the fused epoch engine for one (algorithm, scenario) pair.
 
     The per-epoch key discipline matches the legacy host loop exactly
@@ -339,6 +414,12 @@ def make_fleet_engine(*, algorithm: str, mob_model, mob_cfg,
     only reads state — the key discipline and model trajectory are
     bit-exact with a telemetry-off engine — and a telemetry engine still
     traces once per (algorithm, shape).
+
+    Open-world churn (``churn_period > 0``): each epoch the engine
+    computes the :func:`liveness_mask` from the traced ``state.t`` (no
+    PRNG, no retrace), masks the contact matrix so dead agents neither
+    meet nor are met, and stores the mask on ``state.live`` for the epoch
+    step. 0 (default) compiles the exact churn-free program.
     """
     from repro.mobility.base import partners_from_contacts
 
@@ -347,6 +428,7 @@ def make_fleet_engine(*, algorithm: str, mob_model, mob_cfg,
     if donate is None:
         # CPU XLA can't alias buffers; skip donation to avoid warning spam.
         donate = jax.default_backend() != "cpu"
+    churn = churn_period > 0 and round(churn_fraction * churn_period) > 0
 
     step = make_epoch_step(
         algorithm, loss_fn=loss_fn, local_steps=local_steps,
@@ -355,7 +437,7 @@ def make_fleet_engine(*, algorithm: str, mob_model, mob_cfg,
         policy_params=policy_params, gather_mode=gather_mode,
         transfer_budget=transfer_budget,
         link_entries_per_step=link_entries_per_step,
-        telemetry=telemetry)
+        telemetry=telemetry, churn=churn)
 
     def epoch_step(state, mstate, key, lr, data, counts, tb, metrics):
         if partner_sample == "lowest-id":
@@ -365,6 +447,11 @@ def make_fleet_engine(*, algorithm: str, mob_model, mob_cfg,
             key, k1, k2, k3 = jax.random.split(key, 4)
         mstate, met, dur = mob_model.simulate_epoch(mstate, k1, cfg=mob_cfg,
                                                     seconds=epoch_seconds)
+        if churn:
+            live = liveness_mask(state.t, state.samples.shape[0],
+                                 churn_period, churn_fraction)
+            met = met & live[:, None] & live[None, :]
+            state = dataclasses.replace(state, live=live)
         partners = partners_fn(met, max_partners, sample=partner_sample,
                                key=k3)
         if telemetry:
@@ -442,7 +529,9 @@ def make_sharded_fleet_engine(*, mesh, algorithm: str, mob_model, mob_cfg,
                               halo: int = 0,
                               chunk: int = 1,
                               donate: Optional[bool] = None,
-                              telemetry: bool = False) -> FleetEngine:
+                              telemetry: bool = False,
+                              churn_period: int = 0,
+                              churn_fraction: float = 0.0) -> FleetEngine:
     """Fused engine sharded over the agent axis with ``shard_map``.
 
     Each of the mesh's devices owns ``n_local = N / ndev`` index-contiguous
@@ -482,6 +571,12 @@ def make_sharded_fleet_engine(*, mesh, algorithm: str, mob_model, mob_cfg,
     ``origins_seen`` rows stay shard-local. Same
     1-trace-per-(algorithm, shape) and donation discipline as the fused
     engine — ``lr``, ``num_epochs`` and ``transfer_budget`` are traced.
+
+    Open-world churn: the :func:`liveness_mask` schedule is a closed form
+    over (epoch, global agent id), so each shard reconstructs the whole
+    fleet's mask locally — no cross-shard communication. Contact blocks
+    are masked by live rows × live window columns, and ``state.live``
+    carries the shard's own rows.
     """
     from jax.sharding import PartitionSpec as P
 
@@ -514,6 +609,7 @@ def make_sharded_fleet_engine(*, mesh, algorithm: str, mob_model, mob_cfg,
     elif algorithm not in ("dfl", "cfl"):
         raise ValueError(f"unknown algorithm {algorithm!r}")
     default_budget = transfer_budget
+    churn = churn_period > 0 and round(churn_fraction * churn_period) > 0
 
     def run_epochs(state, mstate, key, lr, data, counts, num_epochs,
                    transfer_budget=None, metrics=None):
@@ -573,6 +669,17 @@ def make_sharded_fleet_engine(*, mesh, algorithm: str, mob_model, mob_cfg,
             mstate, met, dur = mob_model.simulate_epoch_rows(
                 mstate, k1, mob_cfg, epoch_seconds, row_start=row0,
                 num_rows=n_local, col_ids=col_ids)
+            live_full = None
+            if churn:
+                # closed-form schedule: every shard rebuilds the global
+                # [N] mask locally, then masks its contact block
+                live_full = liveness_mask(state.t, N, churn_period,
+                                          churn_fraction)
+                live_rows = jax.lax.dynamic_slice_in_dim(
+                    live_full, row0, n_local)
+                live_cols = jnp.take(live_full, col_ids)
+                met = met & live_rows[:, None] & live_cols[None, :]
+                state = dataclasses.replace(state, live=live_rows)
             partners_w = partners_from_contacts(met, max_partners,
                                                 sample=partner_sample)
             partners_g = jnp.where(partners_w >= 0,
@@ -585,6 +692,8 @@ def make_sharded_fleet_engine(*, mesh, algorithm: str, mob_model, mob_cfg,
                 tilde, losses = fleet_local_update(
                     state.params, data, counts, local_keys, loss_fn=loss_fn,
                     steps=local_steps, batch_size=batch_size, lr=lr, rho=rho)
+                if churn:
+                    tilde = _freeze_dead(tilde, state.params, state.live)
                 encounters = count_encounters(state.encounters, partners_g)
                 pool = gossip.ExchangePool(
                     params=window_tree(tilde),
@@ -602,11 +711,16 @@ def make_sharded_fleet_engine(*, mesh, algorithm: str, mob_model, mob_cfg,
                     gather_mode=gather_mode, durations=dur,
                     transfer_budget=tb,
                     link_entries_per_step=link_entries_per_step,
-                    with_stats=telemetry, pool=pool)
+                    with_stats=telemetry, pool=pool, live=live_full)
                 cache, xstats = out if telemetry else (out, None)
+                if churn:
+                    cache = _freeze_dead(cache, state.cache, state.live)
                 new_params = aggregate(tilde, state.samples, cache,
                                        t=state.t, staleness_decay=
                                        staleness_decay)
+                if churn:
+                    new_params = _freeze_dead(new_params, state.params,
+                                              state.live)
                 state = dataclasses.replace(
                     state, params=new_params, cache=cache, t=state.t + 1,
                     encounters=encounters)
@@ -615,6 +729,8 @@ def make_sharded_fleet_engine(*, mesh, algorithm: str, mob_model, mob_cfg,
                 tilde, losses = fleet_local_update(
                     state.params, data, counts, local_keys, loss_fn=loss_fn,
                     steps=local_steps, batch_size=batch_size, lr=lr, rho=rho)
+                if churn:
+                    tilde = _freeze_dead(tilde, state.params, state.live)
                 pool_params = window_tree(tilde)
                 pool_samples = window_tree(state.samples)
                 first = partners_w[:, 0]
@@ -642,8 +758,14 @@ def make_sharded_fleet_engine(*, mesh, algorithm: str, mob_model, mob_cfg,
                 tilde, losses = fleet_local_update(
                     state.params, data, counts, local_keys, loss_fn=loss_fn,
                     steps=local_steps, batch_size=batch_size, lr=lr, rho=rho)
-                total = jax.lax.psum(jnp.sum(state.samples), axis)
-                w = state.samples / total
+                if churn:
+                    tilde = _freeze_dead(tilde, state.params, state.live)
+                    live_w = state.samples * state.live.astype(jnp.float32)
+                    total = jax.lax.psum(jnp.sum(live_w), axis)
+                    w = live_w / jnp.maximum(total, 1e-9)
+                else:
+                    total = jax.lax.psum(jnp.sum(state.samples), axis)
+                    w = state.samples / total
 
                 def leaf(p):
                     wexp = w.reshape((n_local,) + (1,) * (p.ndim - 1))
@@ -652,6 +774,9 @@ def make_sharded_fleet_engine(*, mesh, algorithm: str, mob_model, mob_cfg,
                     return jnp.broadcast_to(avg, p.shape).astype(p.dtype)
 
                 new_params = jax.tree_util.tree_map(leaf, tilde)
+                if churn:
+                    new_params = _freeze_dead(new_params, state.params,
+                                              state.live)
                 state = dataclasses.replace(state, params=new_params,
                                             t=state.t + 1)
                 xstats = None
@@ -721,13 +846,29 @@ def fleet_accuracy(state: FleetState, acc_fn: Callable, test_batch) -> jax.Array
     return jnp.mean(accs), accs
 
 
-def fleet_eval(state: FleetState, acc_fn: Callable, test_batch):
+def fleet_eval(state: FleetState, acc_fn: Callable, test_batch,
+               live_only: bool = False):
     """On-device fleet evaluation: (mean_acc, cache_num, cache_age) scalars.
 
     Cache occupancy / staleness stats are reduced inside the jitted eval so
     only three scalars cross the host boundary — the legacy path pulled the
     full [N, C] metadata to host every eval.
+
+    With ``live_only`` (static — churn runs only, so churn-free evals stay
+    bit-exact) the mean accuracy and cache stats average over the agents
+    in coverage this epoch (``state.live``): out-of-coverage agents'
+    frozen models shouldn't drag the fleet metric.
     """
+    if live_only:
+        lf = state.live.astype(jnp.float32)
+        _, accs = fleet_accuracy(state, acc_fn, test_batch)
+        n_live = jnp.maximum(jnp.sum(lf), 1.0)
+        acc = jnp.sum(accs * lf) / n_live
+        vf = state.cache.valid.astype(jnp.float32) * lf[:, None]
+        ages = (state.t - state.cache.ts).astype(jnp.float32)
+        cache_num = jnp.sum(vf) / n_live
+        cache_age = jnp.sum(ages * vf) / jnp.maximum(jnp.sum(vf), 1.0)
+        return acc, cache_num, cache_age
     acc, _ = fleet_accuracy(state, acc_fn, test_batch)
     vf = state.cache.valid.astype(jnp.float32)
     ages = (state.t - state.cache.ts).astype(jnp.float32)

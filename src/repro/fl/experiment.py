@@ -70,7 +70,7 @@ def make_epoch_fn(cfg: ExperimentConfig, *, loss_fn: Callable,
         policy_params=dict(cfg.dfl.policy_params), gather_mode=gather_mode,
         transfer_budget=cfg.dfl.resolved_transfer_budget,
         link_entries_per_step=cfg.dfl.link_entries_per_step,
-        telemetry=telemetry)
+        telemetry=telemetry, churn=cfg.dfl.churn_enabled)
 
     def fn(state, partners, durations, data, counts, key, lr):
         counter["traces"] += 1
@@ -95,7 +95,8 @@ def make_engine(cfg: ExperimentConfig, *, loss_fn: Callable, mob_model,
         transfer_budget=cfg.dfl.resolved_transfer_budget,
         link_entries_per_step=cfg.dfl.link_entries_per_step,
         chunk=cfg.eval_every if chunk is None else chunk, donate=donate,
-        telemetry=telemetry)
+        telemetry=telemetry, churn_period=cfg.dfl.churn_period,
+        churn_fraction=cfg.dfl.churn_fraction)
 
 
 def make_sharded_engine(cfg: ExperimentConfig, *, mesh, loss_fn: Callable,
@@ -120,7 +121,8 @@ def make_sharded_engine(cfg: ExperimentConfig, *, mesh, loss_fn: Callable,
         link_entries_per_step=cfg.dfl.link_entries_per_step,
         halo=cfg.dfl.shard_halo,
         chunk=cfg.eval_every if chunk is None else chunk, donate=donate,
-        telemetry=telemetry)
+        telemetry=telemetry, churn_period=cfg.dfl.churn_period,
+        churn_fraction=cfg.dfl.churn_fraction)
 
 
 def run_experiment(cfg: ExperimentConfig, *, verbose: bool = False,

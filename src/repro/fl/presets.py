@@ -180,6 +180,36 @@ def _trace_replay() -> Scenario:
             epochs=100))
 
 
+def _rush_hour() -> Scenario:
+    """Diurnal contact load: a cosine activity envelope over the mobility
+    clock gates contacts outside the rush-hour window. The period is 2x
+    the default 120 s epoch span, so with amplitude 0.5 the first half of
+    every epoch is rush hour and the second half radio silence — cached
+    gossip must ride out the off-peak gaps."""
+    return Scenario(
+        name="rush-hour",
+        experiment=ExperimentConfig(
+            algorithm="cached", distribution="noniid",
+            dfl=DFLConfig(),
+            mobility=MobilityConfig(diurnal_period=240.0,
+                                    diurnal_amplitude=0.5),
+            epochs=200))
+
+
+def _churn_city() -> Scenario:
+    """Open-world fleet: staggered join/leave churn (each agent out of
+    coverage 25% of every 8-epoch cycle) on the paper's Manhattan regime
+    — dead agents freeze and stop meeting, but their cached models keep
+    spreading through carriers (the DTN effect)."""
+    return Scenario(
+        name="churn-city",
+        experiment=ExperimentConfig(
+            algorithm="cached", distribution="noniid",
+            dfl=DFLConfig(churn_period=8, churn_fraction=0.25),
+            mobility=MobilityConfig(),
+            epochs=200, early_stop_patience=20))
+
+
 for _name, _factory in (
         ("paper-noniid", _paper_noniid),
         ("grouped-overlap", _grouped_overlap),
@@ -187,5 +217,7 @@ for _name, _factory in (
         ("duration-budget", _duration_budget),
         ("levy-sparse", _levy_sparse),
         ("community-grouped", _community_grouped),
-        ("trace-replay", _trace_replay)):
+        ("trace-replay", _trace_replay),
+        ("rush-hour", _rush_hour),
+        ("churn-city", _churn_city)):
     register_preset(_name, _factory, (_factory.__doc__ or "").strip())

@@ -121,6 +121,21 @@ def _engine_key(rs: ResolvedScenario, chunk: int, traced_budget: bool,
             telemetry)
 
 
+def engine_cache_key(scenario: Scenario, *,
+                     force_traced_budget: bool = False):
+    """The (hashable) engine-cache key ``run(scenario, engines=...)`` will
+    look up for this spec — the scenario service groups submitted specs by
+    it so same-key waves share one compiled engine. Two scenarios with
+    equal keys differ only in traced knobs (lr / epochs / seed-side state,
+    and the transfer budget under ``force_traced_budget``), which the
+    engine accepts per call without retracing."""
+    rs = scenario.resolve()
+    cfg = rs.experiment
+    traced_budget = force_traced_budget and cfg.algorithm == "cached"
+    return _engine_key(rs, cfg.eval_every, traced_budget,
+                       scenario.telemetry)
+
+
 def run(scenario: Scenario, *,
         engines: Optional[Dict[Any, rounds_lib.FleetEngine]] = None,
         force_traced_budget: bool = False) -> RunResult:
@@ -180,8 +195,12 @@ def _drive(rs: ResolvedScenario, fleet: Fleet, *,
     state, mstate = fleet.state, fleet.mobility_state
     data, counts, test_batch = fleet.data, fleet.counts, fleet.test_batch
     loss_fn = fleet.loss_fn()
+    # churn runs report the live-agent average (out-of-coverage agents'
+    # frozen models shouldn't drag the fleet metric); static flag, so
+    # churn-free evals compile the exact pre-churn program
     eval_fn = jax.jit(functools.partial(rounds_lib.fleet_eval,
-                                        acc_fn=fleet.acc_fn()))
+                                        acc_fn=fleet.acc_fn(),
+                                        live_only=cfg.dfl.churn_enabled))
     # dispersion stays its own jit unit so telemetry can't perturb eval
     disp_fn = (jax.jit(functools.partial(rounds_lib.fleet_dispersion,
                                          acc_fn=fleet.acc_fn()))
@@ -324,6 +343,12 @@ def _drive(rs: ResolvedScenario, fleet: Fleet, *,
                 key, k1, k2, k3 = jax.random.split(key, 4)
             with span("dispatch"):
                 mstate, met, dur = sim(mstate, k1)
+                if cfg.dfl.churn_enabled:
+                    live = rounds_lib.liveness_mask(
+                        state.t, cfg.dfl.num_agents, cfg.dfl.churn_period,
+                        cfg.dfl.churn_fraction)
+                    met = met & live[:, None] & live[None, :]
+                    state = dataclasses.replace(state, live=live)
                 partners = partners_from_contacts(
                     met, cfg.max_partners, sample=cfg.partner_sample, key=k3)
                 if telemetry:

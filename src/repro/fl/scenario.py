@@ -387,6 +387,31 @@ class Scenario:
         if cfg.dfl.shard_halo < 0:
             raise ValueError(
                 f"DFLConfig.shard_halo={cfg.dfl.shard_halo} must be >= 0")
+        if cfg.dfl.churn_period < 0:
+            raise ValueError(
+                f"DFLConfig.churn_period={cfg.dfl.churn_period} must be "
+                ">= 0 (0 = no churn)")
+        if not 0.0 <= cfg.dfl.churn_fraction < 1.0:
+            raise ValueError(
+                f"DFLConfig.churn_fraction={cfg.dfl.churn_fraction} must "
+                "be in [0, 1): 1 would take every agent out of coverage "
+                "for the whole cycle")
+        if cfg.dfl.churn_period > 0 and (
+                round(cfg.dfl.churn_fraction * cfg.dfl.churn_period)
+                >= cfg.dfl.churn_period):
+            raise ValueError(
+                f"churn_fraction={cfg.dfl.churn_fraction} rounds to the "
+                f"whole churn_period={cfg.dfl.churn_period} — every agent "
+                "would be permanently out of coverage; lower the fraction "
+                "or lengthen the period")
+        if not 0.0 <= cfg.mobility.diurnal_amplitude <= 1.0:
+            raise ValueError(
+                "MobilityConfig.diurnal_amplitude="
+                f"{cfg.mobility.diurnal_amplitude} must be in [0, 1]")
+        if cfg.mobility.diurnal_period <= 0.0:
+            raise ValueError(
+                "MobilityConfig.diurnal_period="
+                f"{cfg.mobility.diurnal_period} must be positive seconds")
         if self.engine == "sharded" and cfg.partner_sample != "lowest-id":
             raise ValueError(
                 "Scenario.engine='sharded' requires "

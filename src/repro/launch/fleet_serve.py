@@ -1,0 +1,69 @@
+"""Fleet scenario service CLI: stream Scenario specs through the run
+queue (``repro.serve.service``), batching compatible specs onto shared
+compiled engines and emitting results as JSON Lines.
+
+Input is JSONL, one spec per line (``--specs FILE``, or ``-`` for
+stdin). Each line is either a full ``Scenario.to_dict()`` payload or a
+wrapper ``{"rid": ..., "preset": NAME | "scenario": {...},
+"overrides": {dotted: value}}``. Results stream to stdout (or
+``--out``) as they complete — one ``kind=result`` line per spec plus a
+terminal ``kind=summary`` line (schema ``repro-fleet-serve-v1``); a
+malformed spec yields a structured ``status=error`` line and the queue
+keeps draining. ``--events-out`` additionally writes the service's
+``repro-telemetry-v1`` event stream (``run_queued`` / ``run_batched`` /
+``run_failed``).
+
+    echo '{"preset": "churn-city", "overrides": {"epochs": 4}}' | \
+        python -m repro.launch.fleet_serve --specs -
+
+Not to be confused with ``repro.launch.serve``, the LLM prefill/decode
+smoke demo.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.serve import service as service_lib
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.fleet_serve", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--specs", default="-",
+                    help="JSONL spec file, '-' = stdin (default)")
+    ap.add_argument("--out", default="-",
+                    help="JSONL result stream, '-' = stdout (default)")
+    ap.add_argument("--events-out", default=None, metavar="FILE",
+                    help="also write the service event stream as JSONL")
+    ap.add_argument("--max-wave", type=int, default=8,
+                    help="max same-engine runs per wave (default 8)")
+    ap.add_argument("--retries", type=int, default=1,
+                    help="re-attempts per failing run (default 1)")
+    ap.add_argument("--traced-budget", action="store_true",
+                    help="thread transfer budgets as traced scalars so "
+                         "budget-only spec variations share one engine")
+    args = ap.parse_args(argv)
+
+    out = sys.stdout if args.out == "-" else open(args.out, "w")
+    try:
+        svc = service_lib.ScenarioService(
+            out=out, max_wave=args.max_wave, retries=args.retries,
+            force_traced_budget=args.traced_budget)
+        if args.specs == "-":
+            svc.submit_lines(sys.stdin)
+        else:
+            with open(args.specs) as f:
+                svc.submit_lines(f)
+        summary = svc.drain()
+        if args.events_out:
+            svc.events.write_jsonl(args.events_out)
+    finally:
+        if out is not sys.stdout:
+            out.close()
+    return 0 if summary["runs_failed"] == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,5 +1,10 @@
-"""Serving launcher: batched prefill + autoregressive decode for any
---arch (reduced smoke variant on CPU; full config on a real mesh).
+"""LLM-serving smoke demo: batched prefill + autoregressive decode for
+any --arch (reduced smoke variant on CPU; full config on a real mesh).
+
+This exercises the *model-serving* path (prefill/decode over the model
+registry) and is unrelated to the fleet scenario service — to stream
+federated-learning Scenario specs through a run queue, use
+``python -m repro.launch.fleet_serve`` (``repro.serve.service``).
 
     python -m repro.launch.serve --arch mixtral-8x7b --batch 4 \
         --prompt-len 64 --decode-tokens 32 --use-kernel

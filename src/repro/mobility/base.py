@@ -118,6 +118,36 @@ def make_bands(num_agents: int, num_bands: int, free_per_band: int = 3,
     return band, group
 
 
+def contact_activity(cfg: MobilityConfig, tau) -> jax.Array:
+    """Diurnal activity g(τ) ∈ [0, 1] at in-epoch time ``tau`` seconds.
+
+    A raised cosine over ``diurnal_period``: 1 at the peak of the cycle,
+    0 at the trough. The envelope's phase restarts each epoch (τ is time
+    *within* the epoch), so every compiled epoch step stays identical —
+    one cycle per epoch when ``diurnal_period == epoch_seconds``.
+    """
+    period = max(float(cfg.diurnal_period), 1e-9)
+    ang = 2.0 * jnp.pi * (jnp.asarray(tau, jnp.float32)
+                          + cfg.diurnal_phase) / period
+    return 0.5 * (1.0 + jnp.cos(ang))
+
+
+def contact_envelope_active(cfg: MobilityConfig, tau) -> jax.Array:
+    """Bool: does a simulation step at in-epoch time ``tau`` register
+    contacts? Active while :func:`contact_activity` is at least the
+    configured amplitude — amplitude 0 is always active, 1 only at the
+    exact cycle peaks."""
+    return contact_activity(cfg, tau) >= cfg.diurnal_amplitude
+
+
+def epoch_step_times(cfg: MobilityConfig, n_steps: int) -> jax.Array:
+    """[n_steps] f32 — in-epoch time after each simulation step, the τ
+    the diurnal envelope is evaluated at (contacts are read *after* the
+    step advances, so step s covers time (s+1)·step_seconds)."""
+    return (jnp.arange(1, n_steps + 1, dtype=jnp.float32)
+            * cfg.step_seconds)
+
+
 def advance_toward(pos: jax.Array, dest: jax.Array, travel: jax.Array
                    ) -> Tuple[jax.Array, jax.Array]:
     """Move straight toward ``dest`` by ``travel`` meters, snapping on
@@ -143,11 +173,19 @@ def generic_simulate_epoch(step_fn: Callable, contacts_fn: Callable
     def simulate_epoch(state, key, cfg: MobilityConfig, seconds: float):
         n_steps = max(1, int(seconds / cfg.step_seconds))
         keys = jax.random.split(key, n_steps)
+        diurnal = cfg.diurnal_enabled   # static: off emits the exact
+        # pre-envelope program (same scan body, same xs — bit-exact)
 
-        def body(carry, k):
+        def body(carry, xs):
             st, met, dur = carry
+            if diurnal:
+                k, active = xs
+            else:
+                k = xs
             st = step_fn(st, k, cfg)
             now = contacts_fn(st, cfg)
+            if diurnal:
+                now = now & active
             met = met | now
             dur = dur + now.astype(jnp.int32)
             return (st, met, dur), None
@@ -155,7 +193,11 @@ def generic_simulate_epoch(step_fn: Callable, contacts_fn: Callable
         shape = jax.eval_shape(lambda s: contacts_fn(s, cfg), state).shape
         met0 = jnp.zeros(shape, bool)
         dur0 = jnp.zeros(shape, jnp.int32)
-        (state, met, dur), _ = jax.lax.scan(body, (state, met0, dur0), keys)
+        xs = keys
+        if diurnal:
+            xs = (keys, contact_envelope_active(
+                cfg, epoch_step_times(cfg, n_steps)))
+        (state, met, dur), _ = jax.lax.scan(body, (state, met0, dur0), xs)
         return state, met, dur
 
     return simulate_epoch
@@ -179,20 +221,31 @@ def generic_simulate_epoch_rows(step_fn: Callable, positions_fn: Callable
         keys = jax.random.split(key, n_steps)
         col_ids = jnp.asarray(col_ids, jnp.int32)
         W = col_ids.shape[0]
+        diurnal = cfg.diurnal_enabled   # static; mirrors the dense scan
 
-        def body(carry, k):
+        def body(carry, xs):
             st, met, dur = carry
+            if diurnal:
+                k, active = xs
+            else:
+                k = xs
             st = step_fn(st, k, cfg)
             now = contacts_block_from_positions(
                 positions_fn(st, cfg), cfg.comm_range, row_start, num_rows,
                 col_ids)
+            if diurnal:
+                now = now & active
             met = met | now
             dur = dur + now.astype(jnp.int32)
             return (st, met, dur), None
 
         met0 = jnp.zeros((num_rows, W), bool)
         dur0 = jnp.zeros((num_rows, W), jnp.int32)
-        (state, met, dur), _ = jax.lax.scan(body, (state, met0, dur0), keys)
+        xs = keys
+        if diurnal:
+            xs = (keys, contact_envelope_active(
+                cfg, epoch_step_times(cfg, n_steps)))
+        (state, met, dur), _ = jax.lax.scan(body, (state, met0, dur0), xs)
         return state, met, dur
 
     return simulate_epoch_rows

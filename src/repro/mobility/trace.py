@@ -26,7 +26,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import MobilityConfig
-from repro.mobility.base import MobilityModel
+from repro.mobility.base import (MobilityModel, contact_envelope_active,
+                                 epoch_step_times)
 from repro.mobility.registry import register
 
 
@@ -135,10 +136,13 @@ def simulate_epoch(state: TraceState, key, cfg: MobilityConfig,
     (read frame, then advance)."""
     frames = cfg.trace_frames_per_epoch or max(
         1, int(seconds / cfg.step_seconds))
+    diurnal = cfg.diurnal_enabled   # static: off keeps the xs-free scan
 
-    def body(carry, _):
+    def body(carry, xs):
         st, met, dur = carry
         now = contacts_now(st, cfg)
+        if diurnal:
+            now = now & xs
         met = met | now
         dur = dur + now.astype(jnp.int32)
         st = step(st, None, cfg)
@@ -147,8 +151,13 @@ def simulate_epoch(state: TraceState, key, cfg: MobilityConfig,
     n = state.contacts.shape[1]
     met0 = jnp.zeros((n, n), bool)
     dur0 = jnp.zeros((n, n), jnp.int32)
-    (state, met, dur), _ = jax.lax.scan(body, (state, met0, dur0), None,
-                                        length=frames)
+    if diurnal:
+        active = contact_envelope_active(cfg, epoch_step_times(cfg, frames))
+        (state, met, dur), _ = jax.lax.scan(body, (state, met0, dur0),
+                                            active)
+    else:
+        (state, met, dur), _ = jax.lax.scan(body, (state, met0, dur0), None,
+                                            length=frames)
     return state, met, dur
 
 
@@ -161,13 +170,16 @@ def simulate_epoch_rows(state: TraceState, key, cfg: MobilityConfig,
         1, int(seconds / cfg.step_seconds))
     col_ids = jnp.asarray(col_ids, jnp.int32)
     W = col_ids.shape[0]
+    diurnal = cfg.diurnal_enabled   # static; mirrors simulate_epoch
 
-    def body(carry, _):
+    def body(carry, xs):
         st, met, dur = carry
         frame = contacts_now(st, cfg)
         rows = jax.lax.dynamic_slice(
             frame, (row_start, 0), (num_rows, frame.shape[1]))
         now = jnp.take(rows, col_ids, axis=1)
+        if diurnal:
+            now = now & xs
         met = met | now
         dur = dur + now.astype(jnp.int32)
         st = step(st, None, cfg)
@@ -175,8 +187,13 @@ def simulate_epoch_rows(state: TraceState, key, cfg: MobilityConfig,
 
     met0 = jnp.zeros((num_rows, W), bool)
     dur0 = jnp.zeros((num_rows, W), jnp.int32)
-    (state, met, dur), _ = jax.lax.scan(body, (state, met0, dur0), None,
-                                        length=frames)
+    if diurnal:
+        active = contact_envelope_active(cfg, epoch_step_times(cfg, frames))
+        (state, met, dur), _ = jax.lax.scan(body, (state, met0, dur0),
+                                            active)
+    else:
+        (state, met, dur), _ = jax.lax.scan(body, (state, met0, dur0), None,
+                                            length=frames)
     return state, met, dur
 
 

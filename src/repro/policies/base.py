@@ -51,9 +51,24 @@ class PolicyContext:
     group_slots: Optional[jax.Array] = None    # [num_groups] int32
     encounters: Optional[jax.Array] = None     # [N] float32 counts
     params: Dict[str, float] = dataclasses.field(default_factory=dict)
+    live: Optional[jax.Array] = None           # [N] bool fleet liveness by
+                                               # global agent id (shared
+                                               # across agents, like
+                                               # group_slots; None = closed
+                                               # world / churn off)
 
     def param(self, name: str, default: float) -> float:
         return float(self.params.get(name, default))
+
+    def origin_live(self, origin: jax.Array) -> jax.Array:
+        """Per-candidate bool: is each candidate's origin agent currently
+        in coverage? All-True when no liveness mask is threaded (closed
+        world) so liveness-aware scores degrade gracefully."""
+        if self.live is None:
+            return jnp.ones(origin.shape, bool)
+        n = self.live.shape[0]
+        return jnp.where(origin >= 0,
+                         self.live[jnp.clip(origin, 0, n - 1)], True)
 
     def encounter_rate(self, origin: jax.Array) -> jax.Array:
         """Per-candidate encounter rate of this agent with each origin

@@ -1,1 +1,3 @@
 from repro.serve.scheduler import BatchScheduler, Request  # noqa: F401
+from repro.serve.service import (  # noqa: F401
+    SERVICE_SCHEMA, ScenarioService, parse_spec, validate_service_jsonl)

@@ -1,0 +1,321 @@
+"""Streaming scenario service: queue ``Scenario`` specs, batch
+compatible specs onto one compiled fleet engine, stream results as JSONL.
+
+The Scenario API was built so a long-running service could accept
+serializable experiment specs and amortize compilation across them; this
+module is that service. Specs arrive over :meth:`ScenarioService.submit`
+(dicts or raw JSONL lines — the ``fleet_serve`` CLI feeds it from a file
+or stdin); each is resolved immediately and grouped by its *engine-cache
+key* (``repro.fl.runner.engine_cache_key``), so :meth:`drain` runs
+same-key specs as consecutive **waves** sharing one live
+:class:`~repro.core.rounds.FleetEngine` — the wave-batching idiom of
+``serve/scheduler.py`` applied to fleet runs: compile once per key,
+retraces across a wave pinned at 0.
+
+Results stream as JSON Lines (``SERVICE_SCHEMA``), one object per line:
+
+    {"schema": ..., "kind": "result", "rid": str, "wave": int,
+     "status": "ok" | "error", "attempts": int,
+     "result": {config_hash, best_acc, final_acc, epoch, acc, traces,
+                wall_s} | "error": str}
+
+followed by one terminal ``{"kind": "summary", ...}`` line with
+``runs_ok`` / ``runs_failed`` / ``waves`` / ``num_engines`` /
+``retraces``. A malformed or failing spec produces a structured
+``status="error"`` line (after ``retries`` bounded re-attempts) and the
+queue keeps draining — a bad spec never kills the service.
+
+Per-run queue lifecycle also rides the ``repro-telemetry-v1`` event
+stream (``run_queued`` / ``run_batched`` / ``run_failed``) against one
+service-session hash, so the standard ``validate_events`` gate applies
+to a service session's log unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import uuid
+from typing import Any, Callable, Dict, IO, Iterable, List, Mapping, Optional
+
+from repro.fl import presets as presets_lib
+from repro.fl import runner as runner_lib
+from repro.fl.scenario import Scenario
+from repro.telemetry import events as events_lib
+
+SERVICE_SCHEMA = "repro-fleet-serve-v1"
+
+#: compact RunResult fields carried on each streamed result line
+RESULT_FIELDS = ("config_hash", "best_acc", "final_acc", "epoch", "acc",
+                 "traces", "wall_s")
+
+
+def parse_spec(spec: Mapping[str, Any]) -> Scenario:
+    """One submitted spec object -> Scenario.
+
+    Two accepted shapes: a bare ``Scenario.to_dict()`` payload (has an
+    ``experiment`` key), or a wrapper ``{"rid"?, "preset" | "scenario",
+    "overrides"?}`` naming a registered preset or embedding a scenario
+    dict, with dotted-path overrides applied on top.
+    """
+    if "experiment" in spec:
+        return Scenario.from_dict(spec)
+    if "preset" in spec:
+        base = presets_lib.get_preset(spec["preset"])
+    elif "scenario" in spec:
+        base = Scenario.from_dict(spec["scenario"])
+    else:
+        raise ValueError(
+            "spec needs 'experiment' (a Scenario dict), 'preset' (a "
+            "registered preset name) or 'scenario' (a nested Scenario "
+            f"dict); got keys {sorted(spec)}")
+    overrides = spec.get("overrides") or {}
+    if overrides:
+        base = base.with_overrides(overrides)
+    return base
+
+
+@dataclasses.dataclass
+class _Queued:
+    rid: str
+    scenario: Scenario
+    engine_key: Any
+
+
+class ScenarioService:
+    """The streaming run queue (see module docstring).
+
+    ``out`` is an optional writable text stream each JSONL line is pushed
+    to as it is produced; lines are always also collected on
+    ``self.results`` (parsed objects). ``run_fn(scenario, engines)`` is
+    injectable for tests; the default is ``runner.run`` with this
+    service's shared engine cache.
+    """
+
+    def __init__(self, *, out: Optional[IO[str]] = None, max_wave: int = 8,
+                 retries: int = 1, force_traced_budget: bool = False,
+                 run_fn: Optional[Callable[[Scenario, Dict], Any]] = None):
+        if max_wave < 1:
+            raise ValueError(f"max_wave must be >= 1, got {max_wave}")
+        if retries < 0:
+            raise ValueError(f"retries must be >= 0, got {retries}")
+        self.out = out
+        self.max_wave = max_wave
+        self.retries = retries
+        self.engines: Dict[Any, Any] = {}   # engine key -> live FleetEngine
+        self.queue: List[_Queued] = []
+        self.results: List[Dict[str, Any]] = []
+        self.events = events_lib.EventLog(f"serve-{uuid.uuid4().hex[:12]}")
+        self.runs_ok = 0
+        self.runs_failed = 0
+        self.waves = 0
+        self._auto_rid = 0
+        if run_fn is None:
+            run_fn = lambda scenario, engines: runner_lib.run(  # noqa: E731
+                scenario, engines=engines,
+                force_traced_budget=force_traced_budget)
+        self._run_fn = run_fn
+        self._force_traced_budget = force_traced_budget
+
+    # -- submission ---------------------------------------------------------
+
+    def _next_rid(self) -> str:
+        self._auto_rid += 1
+        return f"run-{self._auto_rid}"
+
+    def _stream(self, obj: Dict[str, Any]) -> Dict[str, Any]:
+        obj = {"schema": SERVICE_SCHEMA, **obj}
+        self.results.append(obj)
+        if self.out is not None:
+            self.out.write(json.dumps(obj, sort_keys=True,
+                                      allow_nan=False) + "\n")
+            self.out.flush()
+        return obj
+
+    def _reject(self, rid: str, error: str) -> str:
+        self.events.emit("run_failed", rid=rid, error=error)
+        self._stream({"kind": "result", "rid": rid, "wave": -1,
+                      "status": "error", "attempts": 0, "error": error})
+        self.runs_failed += 1
+        return rid
+
+    def submit(self, spec: Mapping[str, Any],
+               rid: Optional[str] = None) -> str:
+        """Queue one spec; returns its rid. A spec that fails to parse or
+        resolve is rejected *now* with a structured error line + a
+        ``run_failed`` event — it never reaches a wave."""
+        if rid is None:
+            rid = (str(spec.get("rid")) if isinstance(spec, Mapping)
+                   and spec.get("rid") else self._next_rid())
+        try:
+            if not isinstance(spec, Mapping):
+                raise ValueError(f"spec must be a JSON object, "
+                                 f"got {type(spec).__name__}")
+            scenario = parse_spec(spec)
+            engine_key = runner_lib.engine_cache_key(
+                scenario, force_traced_budget=self._force_traced_budget)
+        except Exception as e:  # noqa: BLE001 — survive any bad spec
+            return self._reject(rid, f"{type(e).__name__}: {e}")
+        self.queue.append(_Queued(rid=rid, scenario=scenario,
+                                  engine_key=engine_key))
+        self.events.emit("run_queued", rid=rid,
+                         config=scenario.content_hash())
+        return rid
+
+    def submit_lines(self, lines: Iterable[str]) -> List[str]:
+        """Feed raw JSONL spec lines (blank lines skipped); returns rids.
+        An unparseable line is rejected in place — the queue survives."""
+        rids: List[str] = []
+        for line in lines:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                spec = json.loads(line)
+            except json.JSONDecodeError as e:
+                rids.append(self._reject(self._next_rid(),
+                                         f"invalid JSON: {e}"))
+                continue
+            rids.append(self.submit(spec))
+        return rids
+
+    # -- draining -----------------------------------------------------------
+
+    def _next_wave(self) -> List[_Queued]:
+        """Dequeue up to ``max_wave`` runs sharing the oldest queued
+        engine key — those runs reuse one compiled engine."""
+        if not self.queue:
+            return []
+        key = self.queue[0].engine_key
+        wave = [q for q in self.queue if q.engine_key == key][:self.max_wave]
+        taken = {id(q) for q in wave}
+        self.queue = [q for q in self.queue if id(q) not in taken]
+        return wave
+
+    def _run_one(self, q: _Queued, wave_idx: int) -> None:
+        self.events.emit("run_batched", rid=q.rid, wave=wave_idx)
+        err = "unknown error"
+        for attempt in range(1, self.retries + 2):
+            try:
+                result = self._run_fn(q.scenario, self.engines)
+            except Exception as e:  # noqa: BLE001 — keep the queue alive
+                err = f"{type(e).__name__}: {e}"
+                self.events.emit("run_failed", rid=q.rid, error=err,
+                                 attempt=attempt)
+                continue
+            payload = result.to_dict() if hasattr(result, "to_dict") \
+                else dict(result)
+            metrics = payload.get("metrics") or {}
+            compact = {k: payload.get(k, metrics.get(k))
+                       for k in RESULT_FIELDS}
+            self._stream({"kind": "result", "rid": q.rid, "wave": wave_idx,
+                          "status": "ok", "attempts": attempt,
+                          "result": compact})
+            self.runs_ok += 1
+            return
+        self._stream({"kind": "result", "rid": q.rid, "wave": wave_idx,
+                      "status": "error", "attempts": self.retries + 1,
+                      "error": err})
+        self.runs_failed += 1
+
+    def drain(self) -> Dict[str, Any]:
+        """Run every queued spec wave by wave; returns (and streams) the
+        terminal summary line."""
+        while True:
+            wave = self._next_wave()
+            if not wave:
+                break
+            wave_idx = self.waves
+            self.waves += 1
+            for q in wave:
+                self._run_one(q, wave_idx)
+        return self._stream({"kind": "summary", "runs_ok": self.runs_ok,
+                             "runs_failed": self.runs_failed,
+                             "waves": self.waves, **self.engine_stats()})
+
+    def engine_stats(self) -> Dict[str, int]:
+        """Compile accounting over the shared engine cache: ``retraces``
+        is traces beyond the guaranteed one-per-engine (0 = every wave
+        reused its key's compiled executable)."""
+        traces = sum(e.traces for e in self.engines.values())
+        return {"num_engines": len(self.engines),
+                "retraces": traces - len(self.engines)}
+
+
+# ---------------------------------------------------------------------------
+# JSONL validation
+# ---------------------------------------------------------------------------
+
+def validate_service_jsonl(lines: Iterable[Any]) -> List[str]:
+    """Problems with a service result stream (empty list = valid).
+
+    Accepts parsed objects or raw JSONL strings. Checks the
+    ``SERVICE_SCHEMA`` tag, per-kind required keys, that exactly one
+    terminal summary line exists, and that its counts match the result
+    lines.
+    """
+    problems: List[str] = []
+    rows: List[Mapping[str, Any]] = []
+    for i, line in enumerate(lines):
+        if isinstance(line, str):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                line = json.loads(line)
+            except json.JSONDecodeError as e:
+                problems.append(f"line {i}: invalid JSON ({e})")
+                continue
+        if not isinstance(line, Mapping):
+            problems.append(f"line {i}: not an object: {line!r}")
+            continue
+        rows.append(line)
+    ok = failed = summaries = 0
+    for i, row in enumerate(rows):
+        if row.get("schema") != SERVICE_SCHEMA:
+            problems.append(f"row {i}: schema={row.get('schema')!r}, "
+                            f"expected {SERVICE_SCHEMA!r}")
+        kind = row.get("kind")
+        if kind == "result":
+            missing = [k for k in ("rid", "wave", "status", "attempts")
+                       if k not in row]
+            if missing:
+                problems.append(f"row {i}: result missing {missing}")
+            status = row.get("status")
+            if status == "ok":
+                ok += 1
+                if not isinstance(row.get("result"), Mapping):
+                    problems.append(f"row {i}: status=ok needs a 'result' "
+                                    "object")
+            elif status == "error":
+                failed += 1
+                if not row.get("error"):
+                    problems.append(f"row {i}: status=error needs a "
+                                    "non-empty 'error'")
+            else:
+                problems.append(f"row {i}: status={status!r} not in "
+                                "('ok', 'error')")
+        elif kind == "summary":
+            summaries += 1
+            missing = [k for k in ("runs_ok", "runs_failed", "waves",
+                                   "num_engines", "retraces")
+                       if k not in row]
+            if missing:
+                problems.append(f"row {i}: summary missing {missing}")
+        else:
+            problems.append(f"row {i}: kind={kind!r} not in "
+                            "('result', 'summary')")
+    if not rows:
+        problems.append("empty service stream")
+    if summaries != 1:
+        problems.append(f"expected exactly 1 summary line, got {summaries}")
+    elif rows and rows[-1].get("kind") != "summary":
+        problems.append("summary must be the terminal line")
+    else:
+        summary = rows[-1]
+        if (summary.get("runs_ok") != ok
+                or summary.get("runs_failed") != failed):
+            problems.append(
+                f"summary counts ({summary.get('runs_ok')} ok / "
+                f"{summary.get('runs_failed')} failed) disagree with the "
+                f"stream ({ok} ok / {failed} failed)")
+    return problems

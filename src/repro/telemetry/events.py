@@ -30,7 +30,12 @@ from typing import Any, Dict, Iterable, List, Mapping, Optional
 
 SCHEMA_VERSION = "repro-telemetry-v1"
 
-EVENT_KINDS = ("run_start", "phase", "compile", "eval", "run_end")
+#: run lifecycle + the scenario service's per-run queue events
+#: (``run_queued`` / ``run_batched`` / ``run_failed`` — emitted by
+#: ``repro.serve.service`` against one service-session hash, with the
+#: submitted spec's own hash riding in ``data``)
+EVENT_KINDS = ("run_start", "phase", "compile", "eval", "run_end",
+               "run_queued", "run_batched", "run_failed")
 
 #: data keys each kind must carry (extra keys are allowed)
 KIND_REQUIRED_DATA = {
@@ -39,6 +44,9 @@ KIND_REQUIRED_DATA = {
     "compile": ("traces",),
     "eval": ("acc",),
     "run_end": ("best_acc", "final_acc", "wall_s"),
+    "run_queued": ("rid",),
+    "run_batched": ("rid", "wave"),
+    "run_failed": ("rid", "error"),
 }
 
 

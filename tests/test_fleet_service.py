@@ -1,0 +1,206 @@
+"""Streaming scenario service: spec parsing, wave batching over shared
+engines, bounded retry + malformed-spec survival, and the result-stream
+JSONL schema."""
+import io
+import json
+
+import pytest
+
+from repro import api
+from repro.serve import service as service_lib
+from repro.telemetry import events as events_lib
+
+SMOKE = {
+    "epochs": 2, "n_train": 300, "n_test": 60, "image_hw": 8,
+    "lr_plateau": False, "early_stop_patience": 100,
+    "dfl.num_agents": 6, "dfl.cache_size": 3, "dfl.local_steps": 2,
+    "dfl.batch_size": 16, "dfl.epoch_seconds": 10.0,
+}
+
+
+class _FakeResult:
+    def to_dict(self):
+        return {"config_hash": "deadbeef", "best_acc": 0.9,
+                "final_acc": 0.8, "traces": 1, "wall_s": 0.01,
+                "metrics": {"epoch": [1], "acc": [0.8]}}
+
+
+class _FakeEngine:
+    traces = 1
+
+
+def _fake_run_fn(log=None):
+    def run_fn(scenario, engines):
+        engines.setdefault(api.engine_cache_key(scenario), _FakeEngine())
+        if log is not None:
+            log.append(scenario)
+        return _FakeResult()
+    return run_fn
+
+
+def _service(**kw):
+    out = io.StringIO()
+    kw.setdefault("run_fn", _fake_run_fn())
+    return service_lib.ScenarioService(out=out, **kw), out
+
+
+# ---------------------------------------------------------------------------
+# spec parsing
+# ---------------------------------------------------------------------------
+
+def test_parse_spec_shapes():
+    preset = api.get_preset("paper-noniid")
+    # bare Scenario dict
+    assert service_lib.parse_spec(preset.to_dict()) == preset
+    # preset wrapper with overrides
+    s = service_lib.parse_spec({"preset": "paper-noniid",
+                                "overrides": {"epochs": 7}})
+    assert s.experiment.epochs == 7
+    # nested scenario wrapper
+    s = service_lib.parse_spec({"scenario": preset.to_dict(),
+                                "overrides": {"dfl.lr": 0.05}})
+    assert s.experiment.dfl.lr == 0.05
+    with pytest.raises(ValueError, match="spec needs"):
+        service_lib.parse_spec({"nonsense": 1})
+
+
+# ---------------------------------------------------------------------------
+# queue behavior (injected run_fn — no real training)
+# ---------------------------------------------------------------------------
+
+def test_same_key_specs_batch_into_one_wave_one_engine():
+    svc, out = _service(max_wave=8)
+    for rid in ("a", "b", "c"):
+        # lr and epochs are traced knobs: all three share one engine key
+        svc.submit({"rid": rid, "preset": "paper-noniid",
+                    "overrides": {"dfl.lr": 0.1 if rid == "a" else 0.05,
+                                  "epochs": 3}})
+    summary = svc.drain()
+    assert summary["runs_ok"] == 3 and summary["runs_failed"] == 0
+    assert summary["waves"] == 1
+    assert summary["num_engines"] == 1 and summary["retraces"] == 0
+    waves = [r["wave"] for r in svc.results if r["kind"] == "result"]
+    assert waves == [0, 0, 0]
+
+
+def test_distinct_keys_split_waves_and_engines():
+    svc, out = _service()
+    svc.submit({"rid": "a", "preset": "paper-noniid"})
+    # cache_size changes the trace shape -> a different engine key
+    svc.submit({"rid": "b", "preset": "paper-noniid",
+                "overrides": {"dfl.cache_size": 5}})
+    svc.submit({"rid": "c", "preset": "paper-noniid"})
+    summary = svc.drain()
+    assert summary["runs_ok"] == 3
+    assert summary["num_engines"] == 2
+    rows = {r["rid"]: r["wave"] for r in svc.results
+            if r["kind"] == "result"}
+    # a and c share the first wave despite b queued between them
+    assert rows["a"] == rows["c"] != rows["b"]
+
+
+def test_max_wave_splits_but_reuses_engine():
+    svc, out = _service(max_wave=2)
+    for i in range(5):
+        svc.submit({"rid": f"r{i}", "preset": "paper-noniid"})
+    summary = svc.drain()
+    assert summary["waves"] == 3
+    assert summary["num_engines"] == 1 and summary["retraces"] == 0
+
+
+def test_malformed_specs_surface_errors_and_queue_drains():
+    svc, out = _service()
+    svc.submit_lines([
+        json.dumps({"rid": "good", "preset": "paper-noniid"}),
+        "this is not json",
+        json.dumps({"rid": "bad-preset", "preset": "no-such-preset"}),
+        json.dumps({"rid": "bad-override", "preset": "paper-noniid",
+                    "overrides": {"dfl.churn_fraction": 2.0}}),
+        json.dumps({"rid": "good2", "preset": "paper-noniid"}),
+    ])
+    summary = svc.drain()
+    assert summary["runs_ok"] == 2 and summary["runs_failed"] == 3
+    rows = {r["rid"]: r for r in svc.results if r["kind"] == "result"}
+    assert rows["bad-preset"]["status"] == "error"
+    assert "no-such-preset" in rows["bad-preset"]["error"]
+    assert rows["bad-override"]["status"] == "error"
+    assert rows["good2"]["status"] == "ok"
+    # the service event stream stays schema-valid: one session hash,
+    # run_failed events carry rid + error
+    assert events_lib.validate_events(svc.events.to_dicts()) == []
+    failed = [e for e in svc.events.to_dicts() if e["kind"] == "run_failed"]
+    assert {e["data"]["rid"] for e in failed} >= {"bad-preset",
+                                                  "bad-override"}
+
+
+def test_bounded_retry_then_success_and_exhaustion():
+    attempts = {}
+
+    def run_fn(scenario, engines):
+        # epochs is a traced knob: distinguishes the runs without
+        # splitting their engine key
+        k = scenario.experiment.epochs
+        attempts[k] = attempts.get(k, 0) + 1
+        if k == 12 or attempts[k] == 1:
+            raise RuntimeError(f"run {k} blew up")
+        return _FakeResult()
+
+    svc, out = _service(run_fn=run_fn, retries=1)
+    svc.submit({"rid": "f", "preset": "paper-noniid",
+                "overrides": {"epochs": 11}})    # fails once, then ok
+    svc.submit({"rid": "b", "preset": "paper-noniid",
+                "overrides": {"epochs": 12}})    # fails every attempt
+    summary = svc.drain()
+    rows = {r["rid"]: r for r in svc.results if r["kind"] == "result"}
+    assert rows["f"]["status"] == "ok" and rows["f"]["attempts"] == 2
+    assert rows["b"]["status"] == "error" and rows["b"]["attempts"] == 2
+    assert "blew up" in rows["b"]["error"]
+    assert summary["runs_ok"] == 1 and summary["runs_failed"] == 1
+
+
+def test_jsonl_stream_validates_and_flags_corruption():
+    svc, out = _service()
+    svc.submit({"rid": "a", "preset": "paper-noniid"})
+    svc.submit_lines(["broken line"])
+    svc.drain()
+    lines = out.getvalue().splitlines()
+    assert service_lib.validate_service_jsonl(lines) == []
+    # parsed-object form validates too
+    assert service_lib.validate_service_jsonl(svc.results) == []
+    # corruption is caught: summary counts disagreeing with the stream
+    tampered = [json.loads(l) for l in lines]
+    tampered[-1]["runs_ok"] = 99
+    assert any("disagree" in p
+               for p in service_lib.validate_service_jsonl(tampered))
+    # missing summary is caught
+    assert any("summary" in p
+               for p in service_lib.validate_service_jsonl(lines[:-1]))
+    # wrong schema tag is caught
+    bad = [dict(r, schema="other") for r in tampered]
+    assert any("schema" in p for p in service_lib.validate_service_jsonl(bad))
+
+
+# ---------------------------------------------------------------------------
+# real runs through the service (shared compiled engine)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_service_real_runs_share_one_compiled_engine():
+    out = io.StringIO()
+    svc = service_lib.ScenarioService(out=out)
+    svc.submit({"rid": "a", "preset": "paper-noniid",
+                "overrides": SMOKE})
+    svc.submit({"rid": "b", "preset": "paper-noniid",
+                "overrides": {**SMOKE, "dfl.lr": 0.05, "epochs": 3}})
+    summary = svc.drain()
+    assert summary["runs_ok"] == 2 and summary["runs_failed"] == 0
+    # one wave, one live engine, zero retraces: the second spec reused
+    # the first spec's compiled executable
+    assert summary["waves"] == 1
+    assert summary["num_engines"] == 1 and summary["retraces"] == 0
+    assert service_lib.validate_service_jsonl(out.getvalue().splitlines()) \
+        == []
+    rows = {r["rid"]: r for r in svc.results if r["kind"] == "result"}
+    assert rows["a"]["result"]["traces"] == 1    # first run compiles
+    assert rows["b"]["result"]["traces"] == 0    # second reuses it
+    assert len(rows["b"]["result"]["acc"]) == 3

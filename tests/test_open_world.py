@@ -1,0 +1,265 @@
+"""Open-world fleets: the liveness schedule, frozen out-of-coverage
+agents, DTN-style cache spread through live carriers, the diurnal
+contact envelope, and the engines' compile discipline with churn on."""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.configs.base import DFLConfig, MobilityConfig
+from repro.core import rounds as rounds_lib
+from repro.fl.experiment import ExperimentConfig, build_fleet, make_engine
+from repro.mobility import registry as mob_registry
+from repro.mobility import trace as trace_lib
+from repro.models import cnn as cnn_lib
+
+CHURN = dict(churn_period=4, churn_fraction=0.25)    # 1 of every 4 epochs out
+
+FAST = dict(
+    dfl=DFLConfig(num_agents=6, cache_size=3, tau_max=10, local_steps=2,
+                  lr=0.1, batch_size=16, epoch_seconds=30.0, **CHURN),
+    mobility=MobilityConfig(grid_w=4, grid_h=6),
+    epochs=4, eval_every=2, n_train=400, n_test=100, image_hw=12,
+    lr_plateau=False,
+)
+
+
+def _cfg(algorithm="cached", **kw):
+    return ExperimentConfig(algorithm=algorithm, distribution="noniid",
+                            **{**FAST, **kw})
+
+
+def _loss_fn(model_cfg):
+    return lambda p, b: cnn_lib.loss_fn(p, model_cfg, b["images"],
+                                        b["labels"])
+
+
+# ---------------------------------------------------------------------------
+# the liveness schedule
+# ---------------------------------------------------------------------------
+
+def test_liveness_mask_schedule():
+    N, period, fraction = 6, 4, 0.25
+    down = round(fraction * period)
+    masks = np.stack([np.asarray(rounds_lib.liveness_mask(t, N, period,
+                                                          fraction))
+                      for t in range(period)])
+    assert masks.dtype == bool and masks.shape == (period, N)
+    # every agent spends exactly `down` epochs of each cycle out of coverage
+    np.testing.assert_array_equal(masks.sum(0), period - down)
+    # staggered phases: outages spread over the cycle, never the whole fleet
+    assert (masks.any(1)).all()
+    # period-periodic in t
+    np.testing.assert_array_equal(
+        np.asarray(rounds_lib.liveness_mask(period + 2, N, period, fraction)),
+        masks[2])
+    # pure arithmetic on a traced t: jit produces the identical mask
+    jitted = jax.jit(lambda t: rounds_lib.liveness_mask(t, N, period,
+                                                        fraction))
+    np.testing.assert_array_equal(np.asarray(jitted(jnp.int32(3))), masks[3])
+
+
+def test_liveness_mask_never_empties_fleet():
+    # resolve() rejects schedules that would take every agent out at once
+    scenario = api.Scenario().with_overrides(
+        {"dfl.churn_period": 4, "dfl.churn_fraction": 0.99})
+    with pytest.raises(ValueError, match="churn"):
+        scenario.resolve()
+
+
+# ---------------------------------------------------------------------------
+# dead agents freeze; their cached models keep spreading
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("algorithm", ["cached", "dfl", "cfl"])
+def test_dead_agents_frozen_one_epoch(algorithm):
+    cfg = _cfg(algorithm, epochs=1, eval_every=1)
+    fleet = build_fleet(cfg)
+    state, mstate = fleet.state, fleet.mobility_state
+    eng = make_engine(cfg, loss_fn=_loss_fn(fleet.model_cfg),
+                      mob_model=fleet.mob_model, mob_cfg=fleet.mobility,
+                      group_slots=fleet.group_slots, chunk=1)
+    before = jax.tree_util.tree_map(np.asarray, state.params)
+    state, mstate, key, _ = eng.run(state, mstate, jax.random.PRNGKey(5),
+                                    0.1, fleet.data, fleet.counts, 1)
+    live = np.asarray(rounds_lib.liveness_mask(
+        0, cfg.dfl.num_agents, cfg.dfl.churn_period, cfg.dfl.churn_fraction))
+    assert not live.all() and live.any()
+    np.testing.assert_array_equal(np.asarray(state.live), live)
+    after = jax.tree_util.tree_map(np.asarray, state.params)
+    for b, a in zip(jax.tree_util.tree_leaves(before),
+                    jax.tree_util.tree_leaves(after)):
+        # out-of-coverage agents' models are bit-frozen ...
+        np.testing.assert_array_equal(b[~live], a[~live])
+    # ... while at least one live agent actually trained
+    changed = [not np.array_equal(b[live], a[live])
+               for b, a in zip(jax.tree_util.tree_leaves(before),
+                               jax.tree_util.tree_leaves(after))]
+    assert any(changed)
+
+
+@pytest.mark.slow
+def test_dead_agent_cache_entries_still_spread(tmp_path):
+    """The DTN effect: agent 0's model reaches agent 3 through carrier 1
+    while agent 0 itself is out of coverage — and 0 and 3 never meet.
+
+    Schedule (period 4, fraction 0.25 -> agent (4 - t) % 4 is dead at
+    epoch t): contact (0, 1) at epoch 1 (both live; 3 is dead), contact
+    (1, 3) at epoch 4 (both live; 0 is dead)."""
+    n, epochs = 4, 5
+    seq = np.zeros((epochs, n, n), bool)
+    seq[1, 0, 1] = True
+    seq[4, 1, 3] = True
+    path = os.path.join(tmp_path, "dtn_trace.npz")
+    trace_lib.save_trace(path, seq)
+
+    cfg = _cfg(
+        "cached", epochs=epochs, eval_every=epochs,
+        dfl=dataclasses.replace(FAST["dfl"], num_agents=n, cache_size=3),
+        mobility=MobilityConfig(model="trace", trace_path=path,
+                                trace_frames_per_epoch=1))
+    fleet = build_fleet(cfg)
+    state, mstate = fleet.state, fleet.mobility_state
+    eng = make_engine(cfg, loss_fn=_loss_fn(fleet.model_cfg),
+                      mob_model=fleet.mob_model, mob_cfg=fleet.mobility,
+                      group_slots=fleet.group_slots, chunk=epochs)
+    state, mstate, key, _ = eng.run(state, mstate, jax.random.PRNGKey(5),
+                                    0.1, fleet.data, fleet.counts, epochs)
+    # final epoch (t=4): agent 0 was out of coverage during the hand-off
+    np.testing.assert_array_equal(np.asarray(state.live),
+                                  [False, True, True, True])
+    origins = np.asarray(state.cache.origin)
+    valid = np.asarray(state.cache.valid)
+    # agent 1 picked up agent 0's model at the direct contact ...
+    assert 0 in origins[1][valid[1]]
+    # ... and relayed it to agent 3 while agent 0 was dead
+    assert 0 in origins[3][valid[3]]
+
+
+def test_engine_single_trace_with_churn_and_diurnal():
+    cfg = _cfg("cached", epochs=4,
+               mobility=MobilityConfig(grid_w=4, grid_h=6,
+                                       diurnal_period=60.0,
+                                       diurnal_amplitude=0.5))
+    fleet = build_fleet(cfg)
+    state, mstate = fleet.state, fleet.mobility_state
+    eng = make_engine(cfg, loss_fn=_loss_fn(fleet.model_cfg),
+                      mob_model=fleet.mob_model, mob_cfg=fleet.mobility,
+                      group_slots=fleet.group_slots, chunk=2)
+    state, mstate, key, _ = eng.run(state, mstate, jax.random.PRNGKey(3),
+                                    0.1, fleet.data, fleet.counts, 2)
+    assert eng.traces == 1
+    state, mstate, key, _ = eng.run(state, mstate, key, 0.05,
+                                    fleet.data, fleet.counts, 1)
+    assert eng.traces == 1    # churn + diurnal knobs stay trace-static
+
+
+# ---------------------------------------------------------------------------
+# diurnal contact envelope
+# ---------------------------------------------------------------------------
+
+def _tiny_mob_cfg(name, trace_path, **kw) -> MobilityConfig:
+    return MobilityConfig(model=name, grid_w=4, grid_h=6, area_w=200.0,
+                          area_h=200.0, levy_max_flight=200.0,
+                          community_radius=50.0, trace_path=trace_path,
+                          trace_frames_per_epoch=5, **kw)
+
+
+def _make_trace(tmp_path, n=6):
+    rng = np.random.default_rng(0)
+    seq = rng.random((20, n, n)) < 0.3
+    path = os.path.join(tmp_path, "trace.npz")
+    trace_lib.save_trace(path, seq | seq.transpose(0, 2, 1))
+    return path
+
+
+def test_diurnal_amplitude_one_gates_all_contacts(tmp_path):
+    """Amplitude 1.0 with a period well past the epoch span: the envelope
+    is measurably below peak at every (strictly positive) step time —
+    measurably, so float32 cos can't round activity back up to 1.0 — and
+    every registered mobility model must report zero contacts and zero
+    durations."""
+    path = _make_trace(tmp_path)
+    for name in mob_registry.available():
+        cfg = _tiny_mob_cfg(name, path, diurnal_amplitude=1.0,
+                            diurnal_period=80.0)
+        model = mob_registry.get_model(name)
+        st = model.init(jax.random.PRNGKey(0), 6, cfg)
+        _, met, dur = model.simulate_epoch(st, jax.random.PRNGKey(1),
+                                           cfg=cfg, seconds=20.0)
+        assert not bool(np.asarray(met).any()), f"{name}: contacts leaked"
+        assert int(np.asarray(dur).sum()) == 0, f"{name}: durations leaked"
+
+
+def test_diurnal_fully_active_envelope_is_bitexact(tmp_path):
+    """A negligible amplitude enables the gated scan but keeps every step
+    active — contacts, durations and motion must be bit-identical to the
+    envelope-off path (the gate adds masking only, never perturbs the
+    key stream or trajectories)."""
+    path = _make_trace(tmp_path)
+    for name in mob_registry.available():
+        model = mob_registry.get_model(name)
+        outs = []
+        for amplitude in (0.0, 1e-12):
+            cfg = _tiny_mob_cfg(name, path, diurnal_amplitude=amplitude)
+            st = model.init(jax.random.PRNGKey(0), 6, cfg)
+            st, met, dur = model.simulate_epoch(st, jax.random.PRNGKey(1),
+                                                cfg=cfg, seconds=20.0)
+            outs.append((met, dur, model.positions(st, cfg)))
+        for a, b in zip(outs[0], outs[1]):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# live-only eval
+# ---------------------------------------------------------------------------
+
+def test_fleet_eval_live_only_averages_over_live_agents():
+    cfg = _cfg("cached", epochs=1, eval_every=1)
+    fleet = build_fleet(cfg)
+    acc_fn = fleet.acc_fn()
+    live = jnp.asarray([True, False, True, True, False, True])
+    state = dataclasses.replace(fleet.state, live=live)
+    acc, cache_num, _ = rounds_lib.fleet_eval(state, acc_fn,
+                                              fleet.test_batch,
+                                              live_only=True)
+    _, accs = rounds_lib.fleet_accuracy(state, acc_fn, fleet.test_batch)
+    lf = np.asarray(live)
+    assert float(acc) == pytest.approx(float(np.asarray(accs)[lf].mean()),
+                                       abs=1e-6)
+    valid = np.asarray(state.cache.valid)
+    assert float(cache_num) == pytest.approx(
+        float(valid[lf].sum() / lf.sum()), abs=1e-6)
+    # live_only=False remains the historical all-agents average
+    acc_all, _, _ = rounds_lib.fleet_eval(state, acc_fn, fleet.test_batch)
+    assert float(acc_all) == pytest.approx(float(np.asarray(accs).mean()),
+                                           abs=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# engines agree under churn
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_sharded_churn_matches_fused():
+    overrides = {
+        "epochs": 4, "eval_every": 2, "n_train": 300, "n_test": 60,
+        "image_hw": 8, "lr_plateau": False, "partner_sample": "lowest-id",
+        "dfl.num_agents": 8, "dfl.cache_size": 3, "dfl.local_steps": 2,
+        "dfl.batch_size": 16, "dfl.epoch_seconds": 10.0,
+        "dfl.churn_period": 4, "dfl.churn_fraction": 0.25,
+        "mobility.grid_w": 4, "mobility.grid_h": 6,
+        "mobility.diurnal_period": 20.0, "mobility.diurnal_amplitude": 0.5,
+    }
+    base = api.Scenario().with_overrides(overrides)
+    fused = api.run(base)
+    sharded = api.run(dataclasses.replace(base, engine="sharded", mesh=0))
+    assert sharded.traces == 1
+    assert all(np.isfinite(a) for a in sharded.acc)
+    np.testing.assert_allclose(fused.acc, sharded.acc, atol=2e-3)

@@ -12,9 +12,14 @@ errors, or exceptions — so a mobility/scenario/policy/budget/preset/
 telemetry regression is caught in seconds without the full benchmark
 suite.
 
+The ``--serve`` smoke additionally round-trips two specs through the
+streaming scenario service (``repro.serve.service``), validating the
+result JSONL schema, wave batching and malformed-spec error handling.
+
     PYTHONPATH=src python tools/check_scenarios.py [--list] [--only SUBSTR]
     PYTHONPATH=src python tools/check_scenarios.py --telemetry
     PYTHONPATH=src python tools/check_scenarios.py --sharded
+    PYTHONPATH=src python tools/check_scenarios.py --serve
 """
 from __future__ import annotations
 
@@ -188,6 +193,48 @@ def check_preset(name: str) -> Optional[str]:
     return _run(scenario.with_overrides(smoke))
 
 
+def check_serve() -> Optional[str]:
+    """Scenario-service smoke: round-trip two preset specs (plus one
+    malformed line) through the streaming queue; the JSONL result stream
+    must validate, both runs must land in one wave on one engine with
+    retraces pinned at 0, and the bad line must surface as a structured
+    error without stalling the queue."""
+    import io
+    import json
+
+    from repro.serve import service as service_lib
+    from repro.telemetry import events as events_lib
+
+    out = io.StringIO()
+    svc = service_lib.ScenarioService(out=out)
+    svc.submit_lines([
+        json.dumps({"rid": "a", "preset": "paper-noniid",
+                    "overrides": SMOKE}),
+        json.dumps({"rid": "b", "preset": "paper-noniid",
+                    "overrides": {**SMOKE, "dfl.lr": 0.05}}),
+        json.dumps({"rid": "bad", "preset": "no-such-preset"}),
+    ])
+    summary = svc.drain()
+    problems = service_lib.validate_service_jsonl(out.getvalue().splitlines())
+    if problems:
+        return "; ".join(problems[:3])
+    if summary["runs_ok"] != 2 or summary["runs_failed"] != 1:
+        return f"expected 2 ok + 1 failed, got {summary}"
+    rows = {r["rid"]: r for r in svc.results if r["kind"] == "result"}
+    if rows["a"]["wave"] != rows["b"]["wave"]:
+        return ("same-engine specs split across waves "
+                f"{rows['a']['wave']} vs {rows['b']['wave']}")
+    if rows["bad"]["status"] != "error":
+        return f"malformed spec not surfaced as error: {rows['bad']}"
+    if summary["num_engines"] != 1 or summary["retraces"] != 0:
+        return (f"expected 1 engine / 0 retraces, got "
+                f"{summary['num_engines']} / {summary['retraces']}")
+    ev_problems = events_lib.validate_events(svc.events.to_dicts())
+    if ev_problems:
+        return "; ".join(ev_problems[:3])
+    return None
+
+
 def check_analysis() -> Optional[str]:
     """Run the static-analysis gate (tools/analyze.py --json) and fail on
     any active (unsuppressed, unbaselined) finding."""
@@ -241,6 +288,7 @@ def build_checks(trace_path: str) -> List[Tuple[str, Callable[[], Optional[str]]
     for algorithm in ("cached", "dfl", "cfl"):
         checks.append((f"sharded:{algorithm}",
                        lambda a=algorithm: check_sharded(a)))
+    checks.append(("serve:roundtrip", check_serve))
     return checks
 
 
@@ -263,6 +311,11 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help="run only the static-analysis gate "
                          "(tools/analyze.py over src/, fail on active "
                          "findings)")
+    ap.add_argument("--serve", action="store_true",
+                    help="run only the scenario-service smoke (two specs "
+                         "round-tripped through the streaming queue, JSONL "
+                         "schema-validated, batching + error handling "
+                         "pinned)")
     args = ap.parse_args(argv)
 
     tmp = tempfile.mkdtemp(prefix="check_scenarios_")
@@ -278,6 +331,9 @@ def main(argv: Optional[List[str]] = None) -> int:
     if args.analyze:
         checks = [(cid, fn) for cid, fn in checks
                   if cid.startswith("analysis:")]
+    if args.serve:
+        checks = [(cid, fn) for cid, fn in checks
+                  if cid.startswith("serve:")]
     if args.only:
         checks = [(cid, fn) for cid, fn in checks if args.only in cid]
     if args.list:

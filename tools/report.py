@@ -12,9 +12,17 @@ schema ``sweep-v1``) and emits a self-contained markdown report:
 - bench reports: per-cell results with telemetry summary columns when
   the sweep ran telemetry-enabled, engine/retrace accounting, for sweeps
   with a ``dfl.transfer_budget`` axis the budget-utilization frontier
-  (accuracy and realized utilization per budget level), and — when the
-  artifact carries ``extra.scaling`` (the fleet-scale bench) — the
-  sharded-engine epochs/s-vs-devices scaling table.
+  (accuracy and realized utilization per budget level), for sweeps with
+  a ``dfl.churn_fraction`` axis the accuracy-vs-churn frontier
+  (``BENCH_churn.json`` — per-algorithm best accuracy per churn level,
+  with the cached-over-dfl robustness gap), and — when the artifact
+  carries ``extra.scaling`` (the fleet-scale bench) — the sharded-engine
+  epochs/s-vs-devices scaling table;
+- JSONL streams: a ``repro-fleet-serve-v1`` scenario-service result
+  stream (``fleet_serve --out``) renders the wave/engine accounting and
+  a per-run outcome table; a ``repro-telemetry-v1`` event log
+  (``--events-out`` / ``--telemetry-out``) renders per-kind counts and
+  the service queue-event trail.
 
 Telemetry fields are optional throughout: artifacts written before the
 telemetry subsystem (or with ``telemetry=False``) render with the
@@ -22,6 +30,7 @@ columns they have.
 
     PYTHONPATH=src python tools/report.py run.json [-o report.md]
     PYTHONPATH=src python tools/report.py BENCH_budget.json
+    PYTHONPATH=src python tools/report.py serve-results.jsonl
 """
 from __future__ import annotations
 
@@ -256,6 +265,29 @@ def render_bench(doc: Mapping[str, Any]) -> str:
     out.extend(_table(headers, rows))
     out.append("")
 
+    churn = churn_frontier(cells)
+    if churn:
+        out.append("## Accuracy-vs-churn frontier")
+        out.append("")
+        out.append("Best accuracy per algorithm at each churn level "
+                   "(fraction of every churn cycle an agent spends out "
+                   "of coverage); the gap column is cached minus dfl — "
+                   "the caching robustness margin under churn:")
+        out.append("")
+        algos = sorted({a for _, per_algo in churn for a in per_algo})
+        headers = ["churn_fraction"] + algos
+        if "cached" in algos and "dfl" in algos:
+            headers.append("gap (cached - dfl)")
+        rows = []
+        for level, per_algo in churn:
+            row: List[Any] = [level] + [per_algo.get(a) for a in algos]
+            if "cached" in algos and "dfl" in algos:
+                c, d = per_algo.get("cached"), per_algo.get("dfl")
+                row.append(None if c is None or d is None else c - d)
+            rows.append(row)
+        out.extend(_table(headers, rows))
+        out.append("")
+
     frontier = budget_frontier(cells)
     if frontier:
         out.append("## Budget-utilization frontier")
@@ -332,6 +364,108 @@ def budget_frontier(cells: Sequence[Mapping[str, Any]]
     return [(b, levels[b]) for b in sorted(order, key=sort_key)]
 
 
+def churn_frontier(cells: Sequence[Mapping[str, Any]]
+                   ) -> List[Any]:
+    """Per churn level: each algorithm's best accuracy across all other
+    axis values. Empty when the sweep has no ``dfl.churn_fraction``
+    axis. Returns ``[(level, {algorithm: best_acc}), ...]`` sorted by
+    churn level."""
+    levels: Dict[Any, Dict[str, Any]] = {}
+    for cell in cells:
+        ov = cell.get("overrides") or {}
+        if "dfl.churn_fraction" not in ov:
+            continue
+        level = ov["dfl.churn_fraction"]
+        algo = str(ov.get("algorithm", "cached"))
+        per_algo = levels.setdefault(level, {})
+        acc = cell.get("best_acc")
+        if acc is not None and (per_algo.get(algo) is None
+                                or acc > per_algo[algo]):
+            per_algo[algo] = acc
+    return sorted(levels.items(), key=lambda kv: float(kv[0]))
+
+
+# ---------------------------------------------------------------------------
+# JSONL streams: service results + telemetry event logs
+# ---------------------------------------------------------------------------
+
+_SERVICE_SCHEMA = "repro-fleet-serve-v1"
+_EVENTS_SCHEMA = "repro-telemetry-v1"
+_QUEUE_KINDS = ("run_queued", "run_batched", "run_failed")
+
+
+def is_service_stream(rows: Sequence[Mapping[str, Any]]) -> bool:
+    return bool(rows) and rows[0].get("schema") == _SERVICE_SCHEMA
+
+
+def is_event_stream(rows: Sequence[Mapping[str, Any]]) -> bool:
+    return bool(rows) and all(
+        isinstance(r.get("kind"), str) and "data" in r for r in rows)
+
+
+def render_service(rows: Sequence[Mapping[str, Any]]) -> str:
+    """Markdown for a scenario-service result stream (fleet_serve)."""
+    results = [r for r in rows if r.get("kind") == "result"]
+    summary = next((r for r in rows if r.get("kind") == "summary"), {})
+    out: List[str] = ["# Scenario-service report", ""]
+    out.append(f"- schema `{_SERVICE_SCHEMA}`: "
+               f"{summary.get('runs_ok', '?')} ok / "
+               f"{summary.get('runs_failed', '?')} failed over "
+               f"{summary.get('waves', '?')} wave(s)")
+    out.append(f"- {summary.get('num_engines', '?')} compiled engine(s), "
+               f"{summary.get('retraces', '?')} retrace(s) — same-key "
+               "specs share one executable")
+    out.append("")
+    if results:
+        out.append("## Runs")
+        out.append("")
+        rows_md = []
+        for r in results:
+            res = r.get("result") or {}
+            rows_md.append([
+                r.get("rid"), r.get("wave"), r.get("status"),
+                r.get("attempts"), res.get("best_acc"),
+                res.get("final_acc"), res.get("traces"),
+                res.get("wall_s") if r.get("status") == "ok"
+                else r.get("error")])
+        out.extend(_table(["rid", "wave", "status", "attempts", "best_acc",
+                           "final_acc", "traces", "wall_s / error"],
+                          rows_md))
+        out.append("")
+    return "\n".join(out).rstrip() + "\n"
+
+
+def render_events(rows: Sequence[Mapping[str, Any]]) -> str:
+    """Markdown for a telemetry event-log JSONL (run or service)."""
+    counts: Dict[str, int] = {}
+    for r in rows:
+        counts[str(r.get("kind"))] = counts.get(str(r.get("kind")), 0) + 1
+    out: List[str] = ["# Event-log report", ""]
+    out.append(f"- {len(rows)} events (schema `{_EVENTS_SCHEMA}`): "
+               + ", ".join(f"{k}×{n}" for k, n in sorted(counts.items())))
+    out.append("")
+    queue = [r for r in rows if r.get("kind") in _QUEUE_KINDS]
+    if queue:
+        out.append("## Service queue events")
+        out.append("")
+        rows_md = [[r.get("t"), r.get("kind"),
+                    (r.get("data") or {}).get("rid"),
+                    (r.get("data") or {}).get("wave"),
+                    (r.get("data") or {}).get("error")] for r in queue]
+        out.extend(_table(["t", "kind", "rid", "wave", "error"], rows_md))
+        out.append("")
+    tail = [r for r in rows if r.get("kind") not in _QUEUE_KINDS][-5:]
+    if tail:
+        out.append("## Tail")
+        out.append("")
+        out.append("```json")
+        for ev in tail:
+            out.append(json.dumps(ev, sort_keys=True))
+        out.append("```")
+        out.append("")
+    return "\n".join(out).rstrip() + "\n"
+
+
 # ---------------------------------------------------------------------------
 # entry point
 # ---------------------------------------------------------------------------
@@ -342,15 +476,39 @@ def render(doc: Mapping[str, Any]) -> str:
     return render_bench(doc) if is_bench(doc) else render_run(doc)
 
 
+def render_jsonl(rows: Sequence[Mapping[str, Any]]) -> str:
+    if is_service_stream(rows):
+        return render_service(rows)
+    if is_event_stream(rows):
+        return render_events(rows)
+    raise ValueError("unrecognized JSONL stream: neither a "
+                     f"{_SERVICE_SCHEMA} result stream nor a "
+                     f"{_EVENTS_SCHEMA} event log")
+
+
+def load_artifact(path: str):
+    """A (kind, payload) pair: ("doc", dict) for a JSON artifact,
+    ("jsonl", rows) for a JSON Lines stream."""
+    with open(path) as f:
+        text = f.read()
+    try:
+        return "doc", json.loads(text)
+    except json.JSONDecodeError:
+        rows = [json.loads(line) for line in text.splitlines()
+                if line.strip()]
+        return "jsonl", rows
+
+
 def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("artifact", help="RunResult JSON or BENCH_*.json")
+    ap.add_argument("artifact",
+                    help="RunResult JSON, BENCH_*.json, or a JSONL "
+                         "stream (service results / event log)")
     ap.add_argument("-o", "--out", default="",
                     help="write markdown here (default: stdout)")
     args = ap.parse_args(argv)
-    with open(args.artifact) as f:
-        doc = json.load(f)
-    md = render(doc)
+    kind, payload = load_artifact(args.artifact)
+    md = render(payload) if kind == "doc" else render_jsonl(payload)
     if args.out:
         with open(args.out, "w") as f:
             f.write(md)
